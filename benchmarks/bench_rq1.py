@@ -1,0 +1,77 @@
+"""RQ1 (paper Table III): policy comparison in the nominal operating regime.
+
+Monte-Carlo over seeds; workload arrivals and ambient trajectories are held
+fixed across policies per seed (the paper's protocol).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import (
+    DataCenterGym, EnvDims, make_params, metrics, rollout, synthesize_trace,
+)
+from repro.core.policies import ALL_POLICIES, make_policy
+
+
+def run(
+    policies=ALL_POLICIES,
+    seeds: int = 5,
+    horizon: int = 288,
+    lam: float = 1.0,
+    dims: EnvDims | None = None,
+) -> Dict[str, Dict[str, tuple]]:
+    dims = dims or EnvDims(horizon=horizon)
+    params = make_params()
+    env = DataCenterGym(dims, params)
+    results: Dict[str, Dict[str, tuple]] = {}
+    for name in policies:
+        pol = make_policy(name, dims)
+        run_fn = jax.jit(lambda rng, t: rollout(env, pol, t, rng)[1])
+        per_seed: List[Dict[str, float]] = []
+        for seed in range(seeds):
+            trace = synthesize_trace(seed, dims, params, lam=lam)
+            t0 = time.time()
+            infos = run_fn(jax.random.PRNGKey(seed), trace)
+            m = {k: float(v) for k, v in metrics.summarize(infos).items()}
+            m["wall_s"] = time.time() - t0
+            per_seed.append(m)
+        results[name] = {
+            k: (float(np.mean([d[k] for d in per_seed])),
+                float(np.std([d[k] for d in per_seed])))
+            for k in per_seed[0]
+        }
+    return results
+
+
+def format_results(results) -> str:
+    metrics_rows = [
+        ("CPU Util (%)", "cpu_util_pct"), ("GPU Util (%)", "gpu_util_pct"),
+        ("CPU Queue", "cpu_queue"), ("GPU Queue", "gpu_queue"),
+        ("theta_mean (C)", "theta_mean"), ("theta_max (C)", "theta_max"),
+        ("Throttle (%)", "throttle_pct"), ("kWh/Job", "kwh_per_job"),
+        ("Cost ($)", "cost_usd"), ("Completed", "completed_jobs"),
+    ]
+    names = list(results)
+    out = ["| Metric | " + " | ".join(names) + " |",
+           "|---" * (len(names) + 1) + "|"]
+    for label, key in metrics_rows:
+        cells = " | ".join(
+            f"{results[n][key][0]:,.2f} ± {results[n][key][1]:,.2f}" for n in names
+        )
+        out.append(f"| {label} | {cells} |")
+    return "\n".join(out)
+
+
+def main(fast: bool = False):
+    kw = dict(seeds=2, horizon=96) if fast else {}
+    res = run(**kw)
+    print(format_results(res))
+    return res
+
+
+if __name__ == "__main__":
+    main()

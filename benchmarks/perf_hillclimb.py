@@ -1,0 +1,120 @@
+"""§Perf helper: per-cell hillclimb measurements.
+
+1. Compiles a cell and reports the three roofline terms (same pipeline as
+   launch/dryrun).
+2. `--flash` additionally reports the flash-attention-substituted memory
+   term: the analyzer's per-instruction breakdown identifies materialized
+   attention-score traffic (f32 rank-4 tensors with a kv-length trailing
+   dim) and replaces it with the Pallas kernel's O(S*d) q/k/v/o traffic.
+   The kernel itself is validated against the jnp oracle in interpret mode
+   (tests/test_kernels.py); it cannot lower on the CPU dry-run backend, so
+   this substitution is the documented TPU-target accounting.
+
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb --arch musicgen-medium \
+      --shape prefill_32k --flash
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+import jax
+
+from repro.analysis.hlo import analyze_hlo
+from repro.configs import SHAPES, get_config
+from repro.distributed import sharding as sh
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS, build_cell, rules_for
+from repro.launch.mesh import make_production_mesh
+
+
+def _shape_of(key: str):
+    import re
+
+    m = re.search(r":(\w+)\[([\d,]*)\]", key)
+    if not m:
+        return None, ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def attention_score_traffic(mc, cfg) -> float:
+    """Sum detail items that are materialized attention scores/probs:
+    rank-4 f32/bf16 tensors whose two trailing dims are (attn_block-ish,
+    kv-len >= 1024)."""
+    total = 0.0
+    for key, v in mc.detail:
+        dt, dims = _shape_of(key)
+        if dt not in ("f32", "bf16") or len(dims) != 4:
+            continue
+        qb, t = dims[2], dims[3]
+        if qb >= 512 and t >= 1024 and qb <= cfg.attn_block and t <= 96 * 1024:
+            total += v
+    return total
+
+
+def flash_traffic(cfg, cell, chips: int, train: bool) -> float:
+    """Per-device HBM bytes of the kernel: q,k,v read + o write (x3 for the
+    bwd recompute+grads when training)."""
+    b, s = cell.global_batch, cell.seq_len
+    h = cfg.n_heads_eff
+    per_head_bytes = b * s * cfg.head_dim * 2  # bf16
+    passes = 5 if train else 1                 # fwd + bwd(dq,dk,dv recompute)
+    n_attn = sum(k in ("attn",) for k in cfg.block_pattern) * cfg.n_superblocks
+    return 4 * h * per_head_bytes * n_attn * passes / chips
+
+
+def run(arch: str, shape: str, flash: bool, multi_pod: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = SHAPES[shape]
+    cfg0 = get_config(arch)
+    rules = rules_for(cfg0, cell, mesh)
+    step, args, in_sh, out_sh, cfg = build_cell(arch, cell, mesh)
+    with sh.use_mesh(mesh, rules):
+        kw = {"in_shardings": in_sh}
+        if out_sh is not None:
+            kw["out_shardings"] = out_sh
+        c = jax.jit(step, **kw).lower(*args).compile()
+    ma = c.memory_analysis()
+    mc = analyze_hlo(c.as_text(), detail=True)
+    terms = {
+        "compute_s": mc.flops / PEAK_FLOPS,
+        "memory_s": mc.mem_bytes / HBM_BW,
+        "collective_s": mc.coll_total / ICI_BW,
+        "peak_gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 1e9,
+    }
+    out = {"arch": arch, "shape": shape, "terms": terms}
+    print(f"{arch} {shape}: compute={terms['compute_s']*1e3:.0f}ms "
+          f"mem={terms['memory_s']*1e3:.0f}ms coll={terms['collective_s']*1e3:.0f}ms "
+          f"peak={terms['peak_gb']:.1f}GB")
+    if flash:
+        scores = attention_score_traffic(mc, cfg)
+        kern = flash_traffic(cfg, cell, mesh.size, cell.kind == "train")
+        adj = mc.mem_bytes - scores + kern
+        out["flash"] = {
+            "score_traffic_tb": scores / 1e12,
+            "kernel_traffic_gb": kern / 1e9,
+            "memory_s_adjusted": adj / HBM_BW,
+        }
+        print(f"  attention-score HBM traffic: {scores/1e12:.2f} TB/dev -> "
+              f"kernel {kern/1e9:.1f} GB/dev")
+        print(f"  memory term with flash kernel: {adj/HBM_BW*1e3:.0f}ms "
+              f"(was {terms['memory_s']*1e3:.0f}ms)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--flash", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    rec = run(args.arch, args.shape, args.flash)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Benchmark orchestrator: one entry per paper table/figure + the
+framework-level benches.
+
+  python -m benchmarks.run [--fast] [--only rq1,rq2,...]
+
+name,seconds,key-result CSV lines print at the end of each section.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced horizons/seeds (CI-sized)")
+    ap.add_argument("--only", default="", help="comma list: rq1,rq2,complexity,throughput,kernels")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    rows = []
+
+    if want("rq1"):
+        from benchmarks import bench_rq1
+
+        print("\n=== RQ1: nominal-regime policy comparison (paper Table III) ===")
+        t0 = time.time()
+        res = bench_rq1.main(fast=args.fast)
+        rows.append(("rq1", time.time() - t0,
+                     f"hmpc_cost={res['h_mpc']['cost_usd'][0]:.0f}"))
+
+    if want("rq2"):
+        from benchmarks import bench_rq2
+
+        print("\n=== RQ2: workload-intensity sweep (paper Figs. 2-3) ===")
+        t0 = time.time()
+        res = bench_rq2.main(fast=args.fast)
+        rows.append(("rq2", time.time() - t0, f"rows={len(res)}"))
+
+    if want("complexity"):
+        from benchmarks import bench_complexity
+
+        print("\n=== Sec. IV-F4: centralized vs hierarchical solve complexity ===")
+        t0 = time.time()
+        bench_complexity.main(fast=args.fast)
+        rows.append(("complexity", time.time() - t0, ""))
+
+    if want("throughput"):
+        from benchmarks import bench_env_throughput
+
+        print("\n=== Simulator throughput (jit/vmap vs python loop) ===")
+        t0 = time.time()
+        res = bench_env_throughput.main(fast=args.fast)
+        rows.append(("throughput", time.time() - t0,
+                     f"speedup={res['jit_sps']/res['python_sps']:.0f}x"))
+
+    if want("kernels"):
+        from benchmarks import bench_kernels
+
+        print("\n=== Kernel micro-benchmarks ===")
+        t0 = time.time()
+        bench_kernels.main(fast=args.fast)
+        rows.append(("kernels", time.time() - t0, ""))
+
+    print("\nname,seconds,derived")
+    for name, s, derived in rows:
+        print(f"{name},{s:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""The paper's technique applied to THIS framework's own workloads: H-MPC
+schedules training/serving jobs of the ten assigned LM architectures across
+the geo-distributed Table-I datacenters, planning admission + cooling.
+
+  PYTHONPATH=src python examples/cluster_scheduler_demo.py
+"""
+from repro.launch.cluster_scheduler import job_classes, schedule_lm_fleet
+
+
+def main():
+    print("LM job classes (derived from the assigned architectures):")
+    for jc in job_classes()[:8]:
+        print(f"  {jc.arch:28s} {jc.kind:6s} chips={jc.chips:4d} "
+              f"r={jc.r_cu:8.0f}CU dur={jc.dur_steps*5:4d}min "
+              f"{'GPU' if jc.is_gpu else 'CPU'}")
+    print("  ...")
+
+    for policy in ("greedy", "h_mpc"):
+        m, _ = schedule_lm_fleet(policy, horizon=96)
+        print(f"\n{policy} fleet schedule (8h):")
+        for k in ("gpu_util_pct", "gpu_queue", "theta_max", "throttle_pct",
+                  "kwh_per_job", "cost_usd", "completed_jobs"):
+            print(f"  {k:16s} {m[k]:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end driver (the paper's RQ1 protocol): H-MPC vs the baseline
+schedulers on the full 24h nominal workload, Monte-Carlo over seeds —
+reproduces the Table-III comparison.
+
+  PYTHONPATH=src python examples/hmpc_vs_baselines.py [--fast]
+"""
+import argparse
+
+from benchmarks import bench_rq1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--policies", default="greedy,power_cool,sc_mpc,h_mpc")
+    args = ap.parse_args()
+    res = bench_rq1.run(
+        policies=tuple(args.policies.split(",")),
+        seeds=2 if args.fast else 5,
+        horizon=96 if args.fast else 288,
+    )
+    print(bench_rq1.format_results(res))
+    hm, gr = res.get("h_mpc"), res.get("greedy")
+    if hm and gr:
+        print(f"\nH-MPC vs Greedy: cost {hm['cost_usd'][0]:.0f} vs {gr['cost_usd'][0]:.0f} "
+              f"({100 * (1 - hm['cost_usd'][0] / gr['cost_usd'][0]):.1f}% saving), "
+              f"GPU queue {hm['gpu_queue'][0]:.0f} vs {gr['gpu_queue'][0]:.0f}")
+
+
+if __name__ == "__main__":
+    main()

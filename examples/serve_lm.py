@@ -1,0 +1,47 @@
+"""Batched serving demo: prefill a batch of prompts, then greedy-decode new
+tokens with the KV cache (the serve_step the decode dry-run cells lower).
+
+  PYTHONPATH=src python examples/serve_lm.py --new-tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve.steps import generate, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).scaled(
+        n_layers=4, d_model=256, d_ff=512, n_heads=8, n_kv_heads=4, vocab_size=1024
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+
+    gen = jax.jit(lambda p, b: generate(model, p, b, args.new_tokens))
+    toks = gen(params, {"tokens": prompts})  # compile
+    t0 = time.time()
+    toks = jax.block_until_ready(gen(params, {"tokens": prompts}))
+    dt = time.time() - t0
+    total = args.batch * args.new_tokens
+    print(f"arch={cfg.name}(reduced) batch={args.batch} prompt={args.prompt_len} "
+          f"new={args.new_tokens}")
+    print(f"decoded {total} tokens in {dt:.2f}s -> {total/dt:.1f} tok/s (CPU)")
+    print("sample continuation ids:", toks[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

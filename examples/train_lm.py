@@ -1,0 +1,64 @@
+"""End-to-end LM training driver: train a reduced qwen2-family model on the
+synthetic bigram stream for a few hundred steps with the full production
+stack — AdamW + schedule, microbatching, checkpointing every 50 steps,
+resume-from-latest on relaunch.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --arch qwen2-7b
+"""
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint.checkpointer import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data.pipeline import batch_for_cell
+from repro.distributed.fault_tolerance import train_with_restarts
+from repro.models import build_model
+from repro.optim.adamw import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--microbatches", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).scaled(
+        n_layers=args.layers, d_model=args.width, d_ff=2 * args.width,
+        n_heads=8, n_kv_heads=4, vocab_size=1024,
+    )
+    model = build_model(cfg)
+    opt_cfg = OptConfig(
+        lr=3e-3, warmup_steps=30, total_steps=args.steps,
+        schedule=cfg.schedule,  # minicpm-family uses WSD
+    )
+    step = jax.jit(make_train_step(model, opt_cfg, num_microbatches=args.microbatches))
+    data = lambda s: batch_for_cell(0, s, cfg, seq_len=args.seq, batch=args.batch)
+    init = lambda: init_train_state(model, opt_cfg, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    t0 = time.time()
+    params, opt, hist = train_with_restarts(
+        step, init, data, mgr, total_steps=args.steps, checkpoint_every=50,
+    )
+    dt = time.time() - t0
+    first = sum(h["loss"] for h in hist[:10]) / max(len(hist[:10]), 1)
+    last = sum(h["loss"] for h in hist[-10:]) / max(len(hist[-10:]), 1)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={len(hist)} "
+          f"({dt:.1f}s, {len(hist)/dt:.1f} it/s)")
+    print(f"loss: first10={first:.3f} -> last10={last:.3f} "
+          f"({'DECREASED' if last < first else 'NOT DECREASED'})")
+    print(f"checkpoints kept: {mgr.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

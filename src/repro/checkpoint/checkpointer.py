@@ -1,0 +1,139 @@
+"""Fault-tolerant checkpointing: atomic keep-k snapshots with an async
+writer, storing *logical* arrays so restore can reshard onto any mesh
+(elastic scaling / restart after failure).
+
+Layout:  <dir>/step_000123/arrays.npz + meta.json   (+ tmp dirs during write)
+
+On a real multi-host pod each host writes its addressable shards; here
+(single process) arrays are gathered. The restore path is mesh-agnostic:
+pass `sharding_fn(path_tuple, spec) -> Sharding` to place each leaf for the
+*current* mesh, whatever its shape — checkpoints never pin a device layout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keyed = {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        keyed[key] = leaf
+    return keyed, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, block: bool = False):
+        keyed, _ = _flatten(tree)
+        host, dtypes = {}, {}
+        for k, v in keyed.items():
+            arr = np.asarray(v)
+            dtypes[k] = str(arr.dtype)
+            if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+                arr = arr.view(np.uint16)  # npz can't hold ml_dtypes natively
+            host[k] = arr
+        meta = {
+            "step": int(step),
+            "keys": sorted(host),
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "dtypes": dtypes,
+        }
+        self.wait()
+        if self.async_write and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def _write(self, step: int, host, meta):
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):  # idempotent re-save
+            shutil.rmtree(final)
+        os.rename(tmp, final)      # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        target: Any,
+        step: Optional[int] = None,
+        sharding_fn: Optional[Callable] = None,
+    ):
+        """Restore into the structure of `target` (pytree of arrays or
+        ShapeDtypeStructs). `sharding_fn(key) -> Sharding | None` places each
+        leaf on the *current* mesh (elastic resharding)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
+        out = []
+        for kpath, leaf in leaves:
+            key = jax.tree_util.keystr(kpath)
+            arr = data[key]
+            want = meta["dtypes"].get(key, "")
+            if want == "bfloat16" and arr.dtype == np.uint16:
+                import ml_dtypes
+
+                arr = arr.view(ml_dtypes.bfloat16)
+            if sharding_fn is not None:
+                sh = sharding_fn(key)
+                arr = jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+            else:
+                arr = jnp.asarray(arr)
+            out.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out), step

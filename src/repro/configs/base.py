@@ -1,0 +1,171 @@
+"""Model configuration schema shared by all ten assigned architectures.
+
+A model is a stack of identical *superblocks* scanned `n_superblocks`
+times; a superblock is the smallest repeating layer pattern (length 1 for
+uniform stacks, 8 for jamba's 7:1 mamba:attn interleave, ...). Each
+position in the superblock names its sequence mixer and its MLP kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # superblock structure: parallel tuples, len == layers per superblock
+    block_pattern: Tuple[str, ...] = ("attn",)     # attn | mamba | xattn
+    mlp_pattern: Tuple[str, ...] = ("dense",)      # dense | moe | none
+
+    qkv_bias: bool = False
+    use_rope: bool = True            # jamba: attention without RoPE
+    rope_theta: float = 1e4
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2 / SSD)
+    ssm_d_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_width: int = 4
+
+    # attention: blockwise (flash-style) path when seq_len exceeds this
+    attn_block: int = 2048
+
+    # serving: KV-cache storage dtype ("bfloat16" | "float8_e4m3fn").
+    # fp8 halves decode HBM traffic & footprint (values dequantize to the
+    # compute dtype at use; scores/softmax stay f32)
+    kv_cache_dtype: str = "bfloat16"
+
+    # modality frontends (stubs per assignment: precomputed embeddings)
+    n_img_tokens: int = 0            # vlm: image patch embeddings (B, N, D)
+    embed_input: bool = False        # audio: inputs are (B, S, D) embeddings
+
+    # training defaults
+    schedule: str = "cosine"         # cosine | wsd (minicpm)
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # TP deployment: pad attention head count up to a multiple of the model
+    # axis (pjit *argument* shardings must divide evenly; 28 heads cannot
+    # shard 16 ways). 1 = no padding (single-device smoke tests). Padding
+    # overhead is real deployment cost and shows up in the roofline's
+    # MODEL_FLOPS/HLO ratio (param_count() stays unpadded on purpose).
+    pad_heads_multiple: int = 1
+
+    def __post_init__(self):
+        assert len(self.block_pattern) == len(self.mlp_pattern)
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"superblock size {len(self.block_pattern)}"
+        )
+
+    @property
+    def n_superblocks(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_heads_eff(self) -> int:
+        m = self.pad_heads_multiple
+        h = ((self.n_heads + m - 1) // m) * m
+        kv = self.n_kv_heads_eff
+        assert h % kv == 0, f"{self.name}: padded heads {h} not multiple of kv {kv}"
+        return h
+
+    @property
+    def n_kv_heads_eff(self) -> int:
+        if self.n_kv_heads == self.n_heads:  # MHA: pad kv along with q
+            m = self.pad_heads_multiple
+            return ((self.n_kv_heads + m - 1) // m) * m
+        return self.n_kv_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 128 (clean TP sharding / MXU tiles)."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def has_attention(self) -> bool:
+        return any(b in ("attn", "xattn") for b in self.block_pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if attention-free or mostly-SSM (long_500k eligible)."""
+        return self.family in ("ssm", "hybrid")
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        return dataclasses.replace(self, **overrides)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives MODEL_FLOPS in the roofline)."""
+        D, H, KV, Dh = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        total = 0 if self.embed_input else self.vocab_padded * D
+        total += self.vocab_padded * D  # output head (untied)
+        per_sb = 0
+        for mixer, mlp in zip(self.block_pattern, self.mlp_pattern):
+            per_sb += D  # pre-norm
+            if mixer == "attn":
+                per_sb += D * (H * Dh) + 2 * D * (KV * Dh) + (H * Dh) * D
+                if self.qkv_bias:
+                    per_sb += (H + 2 * KV) * Dh
+            elif mixer == "xattn":
+                per_sb += D * (H * Dh) + 2 * D * (KV * Dh) + (H * Dh) * D
+                per_sb += D + 1                          # norm_kv + gate
+            elif mixer == "mamba":
+                di, n, hh = self.d_inner, self.ssm_d_state, self.ssm_heads
+                conv_ch = di + 2 * n
+                per_sb += D * (2 * di + 2 * n + hh)      # in_proj (z,x,B,C,dt)
+                per_sb += conv_ch * (self.conv_width + 1)  # depthwise conv + bias
+                per_sb += 3 * hh                         # A_log, D, dt_bias
+                per_sb += di                             # gated RMSNorm
+                per_sb += di * D                         # out_proj
+            if mlp == "dense":
+                per_sb += D + 3 * D * self.d_ff
+            elif mlp == "moe":
+                per_sb += D + self.n_experts * 3 * D * self.moe_d_ff + D * self.n_experts
+                if self.shared_expert:
+                    per_sb += 3 * D * self.moe_d_ff
+        total += per_sb * self.n_superblocks
+        total += D  # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if not any(m == "moe" for m in self.mlp_pattern):
+            return self.param_count()
+        full = self.param_count()
+        D = self.d_model
+        n_moe_layers = sum(m == "moe" for m in self.mlp_pattern) * self.n_superblocks
+        inactive = (self.n_experts - self.top_k) * 3 * D * self.moe_d_ff * n_moe_layers
+        return full - inactive

@@ -1,0 +1,39 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576, MoE 16 experts top-2, Mamba:attention 1:7 interleave.
+[arXiv:2403.19887; hf]
+
+Superblock = 8 layers (attention at position 3, Mamba elsewhere), MoE on
+every other MLP — 9 repeats = 72 layers. Jamba uses Mamba-1 mixers; we
+implement the mixer as Mamba-2/SSD for a single fused SSM path (DESIGN.md
+§6). Attention layers carry no RoPE (positions come from the SSM layers).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    block_pattern=(
+        "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba", "mamba",
+    ),
+    mlp_pattern=("dense", "moe") * 4,
+    n_experts=16,
+    top_k=2,
+    moe_d_ff=24576,
+    use_rope=False,
+    ssm_d_state=128,
+    ssm_headdim=128,
+    ssm_expand=2,
+    ssm_chunk=256,
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=8, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    n_experts=4, top_k=2, moe_d_ff=256, vocab_size=512,
+    ssm_d_state=16, ssm_headdim=32, ssm_chunk=16,
+)

@@ -1,0 +1,28 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 — cross-attention image layers every 5th layer (80 self + 20
+cross). [hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+The vision frontend is a STUB per the assignment: input_specs() provides
+precomputed image patch embeddings (B, n_img_tokens, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    block_pattern=("attn", "attn", "attn", "attn", "xattn"),
+    mlp_pattern=("dense",) * 5,
+    n_img_tokens=1024,
+    rope_theta=5e5,
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=5, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab_size=512, n_img_tokens=16,
+)

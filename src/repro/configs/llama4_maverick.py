@@ -1,0 +1,33 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8)
+routed-expert d_ff=8192, MoE 128 experts top-1 + shared expert, interleaved
+with dense layers (d_ff 16384); vocab=202048.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+Param reconciliation (DESIGN.md §7): a uniform 48-layer 128-expert stack at
+d_ff 8192 would be ~2.4T params; Llama-4 interleaves MoE every other layer,
+which lands at ~400B total / ~17B active with the dims above.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=16384,                      # dense (non-MoE) layers
+    vocab_size=202048,
+    block_pattern=("attn", "attn"),
+    mlp_pattern=("dense", "moe"),    # MoE every other layer
+    n_experts=128,
+    top_k=1,
+    moe_d_ff=8192,
+    shared_expert=True,
+    rope_theta=5e5,
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    n_experts=4, top_k=1, moe_d_ff=128, vocab_size=512,
+)

@@ -1,0 +1,25 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560, attention-free, vocab=50280,
+ssm_state=128 — SSD (state-space duality). [arXiv:2405.21060; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=1,            # unused (attention-free)
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=50280,     # padded to 50304
+    block_pattern=("mamba",),
+    mlp_pattern=("none",),
+    ssm_d_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,         # d_inner 5120, 80 SSD heads
+    ssm_chunk=256,
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=128, vocab_size=512, ssm_d_state=16,
+    ssm_headdim=32, ssm_chunk=16,
+)

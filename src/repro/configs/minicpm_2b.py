@@ -1,0 +1,20 @@
+"""minicpm-2b [dense]: 40L d_model=2304 36H (GQA kv=36) d_ff=5760
+vocab=122753. Llama-like arch trained with the WSD schedule.
+[arXiv:2404.06395; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,   # padded to 122880 for TP (cfg.vocab_padded)
+    schedule="wsd",
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=96, n_heads=4, n_kv_heads=4, d_ff=192, vocab_size=512
+)

@@ -1,0 +1,24 @@
+"""musicgen-medium [audio]: 48L d_model=1536 24H (kv=24) d_ff=6144
+vocab=2048 — decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+Per the assignment, the modality frontend is a STUB: input_specs() provides
+precomputed frame embeddings (B, S, d_model); the backbone predicts EnCodec
+codebook tokens (vocab 2048).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    embed_input=True,    # frame embeddings in, codec tokens out
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=96, n_heads=4, n_kv_heads=4, d_ff=192, vocab_size=128
+)

@@ -1,0 +1,25 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d_model=4096 64H (GQA kv=4) per-expert
+d_ff=1536 vocab=151936, MoE 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=151936,
+    block_pattern=("attn",),
+    mlp_pattern=("moe",),
+    n_experts=128,
+    top_k=8,
+    moe_d_ff=1536,
+    rope_theta=1e6,
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+    n_experts=8, top_k=2, moe_d_ff=64, vocab_size=512,
+)

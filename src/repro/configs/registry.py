@@ -1,0 +1,66 @@
+"""Architecture registry: --arch <id> -> ModelConfig (+ reduced smoke cfg),
+and the assigned input-shape sets per architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    qwen2_7b, minicpm_2b, qwen15_32b, granite_20b, musicgen_medium,
+    qwen3_moe_235b, llama4_maverick, llama32_vision_90b, mamba2_2p7b,
+    jamba_1p5_large,
+)
+
+_MODULES = {
+    "qwen2-7b": qwen2_7b,
+    "minicpm-2b": minicpm_2b,
+    "qwen1.5-32b": qwen15_32b,
+    "granite-20b": granite_20b,
+    "musicgen-medium": musicgen_medium,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b,
+    "llama4-maverick-400b-a17b": llama4_maverick,
+    "llama-3.2-vision-90b": llama32_vision_90b,
+    "mamba2-2.7b": mamba2_2p7b,
+    "jamba-1.5-large-398b": jamba_1p5_large,
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].SMOKE
+
+
+def shapes_for(arch: str) -> List[ShapeCell]:
+    """Assigned shape set. `long_500k` requires sub-quadratic attention:
+    SSM/hybrid archs run it; pure full-attention archs skip (DESIGN.md §8)."""
+    cfg = get_config(arch)
+    cells = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.subquadratic:
+        cells.append(SHAPES["long_500k"])
+    return cells
+
+
+def all_cells() -> List[Tuple[str, ShapeCell]]:
+    return [(a, c) for a in ARCH_IDS for c in shapes_for(a)]

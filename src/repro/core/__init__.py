@@ -1,0 +1,12 @@
+"""DataCenterGym: the paper's primary contribution in JAX.
+
+Physics-grounded, closed-loop simulation of geo-distributed datacenters
+(Sec. III) plus the scheduling policies evaluated against it (Sec. IV),
+built so that a full episode — policy included — compiles to a single XLA
+program (`env.rollout`) and Monte-Carlo evaluation is one `vmap`.
+"""
+from repro.core.params import EnvDims, EnvParams, make_params, DC_NAMES
+from repro.core.state import Action, Arrivals, EnvState
+from repro.core.workload import Trace, make_trace, synthesize_trace, load_alibaba_csv
+from repro.core.env import DataCenterGym, GymAdapter, StepInfo, observe, rollout
+from repro.core import metrics

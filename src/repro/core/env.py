@@ -1,0 +1,225 @@
+"""DataCenterGym: closed-loop environment (Sec. III) as pure-JAX functions.
+
+The canonical fast path is `rollout`: the policy runs *inside* the episode
+`lax.scan`, so one `jax.jit` covers policy + physics for all 288 steps, and
+Monte-Carlo evaluation over seeds is a single `vmap`. A stateful
+Gymnasium-style adapter (`GymAdapter`) wraps the same step function for
+interactive / RL use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jobs as jobs_mod
+from repro.core import power as power_mod
+from repro.core import thermal as thermal_mod
+from repro.core.params import EnvDims, EnvParams
+from repro.core.state import Action, Arrivals, EnvState, init_state
+from repro.core.workload import Trace
+
+
+class StepInfo(NamedTuple):
+    """Per-step measurements feeding Table-II metrics."""
+
+    cpu_util: Any          # fraction of CPU capacity in use
+    gpu_util: Any
+    cpu_queue: Any         # waiting CPU jobs (cluster queues + pending)
+    gpu_queue: Any
+    theta: Any             # (D,)
+    theta_amb: Any         # (D,)
+    cool_power: Any        # (D,)
+    throttled: Any         # (D,) bool: theta > theta_soft
+    energy_kwh: Any        # total electrical energy this step
+    cost_usd: Any          # Eq. 9 cost this step
+    completed: Any         # jobs completed this step
+    dropped: Any           # jobs dropped (overflow) this step
+    admitted_util: Any     # (C,) utilization after admission
+    price: Any             # (D,)
+    setpoint: Any          # (D,)
+
+
+def observe(state: EnvState, params: EnvParams) -> jnp.ndarray:
+    """Aggregated observation o_t (Eq. 1): [p, c, q]_C ++ [theta, amb, psi]_D."""
+    return jnp.concatenate([
+        state.power, state.c_eff, state.queues.count.astype(jnp.float32),
+        state.theta, state.theta_amb, state.price,
+    ])
+
+
+class DataCenterGym:
+    """Functional environment. Methods are pure; `self` holds only statics."""
+
+    def __init__(self, dims: EnvDims, params: EnvParams):
+        self.dims = dims
+        self.params = params
+
+    # -- lifecycle -----------------------------------------------------------
+    def reset(self, rng) -> EnvState:
+        state = init_state(self.dims, self.params, rng)
+        return dataclasses.replace(
+            state,
+            c_eff=thermal_mod.effective_capacity(state.theta, self.params),
+            price=power_mod.electricity_price(state.t, self.params),
+        )
+
+    # -- transition ----------------------------------------------------------
+    def step(
+        self, state: EnvState, offered: Arrivals, action: Action
+    ) -> Tuple[EnvState, StepInfo]:
+        params, dims = self.params, self.dims
+
+        # 1. placement: assigned jobs join cluster queues; deferred jobs wait.
+        queues, drop_q = jobs_mod.insert_arrivals(
+            state.queues, offered, action.assign, dims.num_clusters
+        )
+        pending, drop_p = jobs_mod.refill_pending(
+            offered, action.assign, dims.pending_cap
+        )
+
+        # 2. execution: progress running jobs, then FIFO+backfill admission
+        #    against thermally-throttled capacity, gated by power budget.
+        running, n_done = jobs_mod.tick_running(state.running)
+        c_eff = thermal_mod.effective_capacity(state.theta, params)
+        power_ok = (state.power > 0.0).astype(jnp.float32)
+        queues, running = jobs_mod.admit_backfill(
+            queues, running, c_eff, power_ok, dims.admit_depth
+        )
+        util = jobs_mod.job_utilization(running)
+
+        # 3. cooling + thermal transition (Eqs. 3-4) under the commanded setpoints.
+        setpoint = jnp.clip(action.setpoint, params.setpoint_lo, params.setpoint_hi)
+        theta, integral, err, phi_cool = thermal_mod.thermal_step(
+            state.theta, state.theta_amb, setpoint,
+            state.pid_integral, state.pid_prev_err, util, params,
+        )
+        rng, k_amb = jax.random.split(state.rng)
+        noise = jax.random.normal(k_amb, (dims.num_dcs,))
+        theta_amb = thermal_mod.ambient_temperature(
+            (state.t + 1).astype(jnp.float32), noise, params, dims.horizon
+        )
+
+        # 4. power budget, tariffs, accounting (Eqs. 8-9).
+        price = power_mod.electricity_price(state.t, params)
+        energy, _ = power_mod.step_energy_kwh(util, phi_cool, params)
+        cost = power_mod.step_cost_usd(util, phi_cool, price, params)
+        power = power_mod.power_step(state.power, util, phi_cool, params)
+
+        is_gpu_cl = params.is_gpu
+        cap_cpu = jnp.where(~is_gpu_cl, params.c_max, 0.0).sum()
+        cap_gpu = jnp.where(is_gpu_cl, params.c_max, 0.0).sum()
+        q_counts = queues.count.astype(jnp.float32)
+        pend_gpu = jnp.where(pending.valid & pending.is_gpu, 1.0, 0.0).sum()
+        pend_cpu = jnp.where(pending.valid & ~pending.is_gpu, 1.0, 0.0).sum()
+        dropped = drop_q + drop_p
+
+        info = StepInfo(
+            cpu_util=jnp.where(~is_gpu_cl, util, 0.0).sum() / cap_cpu,
+            gpu_util=jnp.where(is_gpu_cl, util, 0.0).sum() / cap_gpu,
+            cpu_queue=jnp.where(~is_gpu_cl, q_counts, 0.0).sum() + pend_cpu,
+            gpu_queue=jnp.where(is_gpu_cl, q_counts, 0.0).sum() + pend_gpu,
+            theta=theta,
+            theta_amb=theta_amb,
+            cool_power=phi_cool,
+            throttled=theta > params.theta_soft,
+            energy_kwh=energy,
+            cost_usd=cost,
+            completed=n_done,
+            dropped=dropped,
+            admitted_util=util,
+            price=price,
+            setpoint=setpoint,
+        )
+
+        new_state = EnvState(
+            t=state.t + 1,
+            rng=rng,
+            power=power,
+            util=util,
+            c_eff=c_eff,
+            queues=queues,
+            running=running,
+            theta=theta,
+            theta_amb=theta_amb,
+            pid_integral=integral,
+            pid_prev_err=err,
+            setpoint=setpoint,
+            cool_power=phi_cool,
+            price=price,
+            pending=pending,
+            completed=state.completed + n_done,
+            dropped=state.dropped + dropped,
+            energy_kwh=state.energy_kwh + energy,
+            cost_usd=state.cost_usd + cost,
+        )
+        return new_state, info
+
+
+def rollout(
+    env: DataCenterGym,
+    policy,
+    trace: Trace,
+    rng,
+) -> Tuple[EnvState, StepInfo]:
+    """Run a full episode with `policy` in the loop; returns stacked StepInfo.
+
+    `policy` is a repro.core.policies.base.Policy. The episode is one
+    lax.scan; wrap in jax.jit (and vmap over rng for Monte Carlo).
+    """
+    state0 = env.reset(rng)
+    pol0 = policy.init(env.dims, env.params)
+
+    def body(carry, arrivals):
+        state, pol_state = carry
+        offered = jobs_mod.merge_offered(state.pending, arrivals)
+        key = jax.random.fold_in(state.rng, state.t)
+        assign, setpoint, pol_state = policy.act(
+            pol_state, state, offered, env.params, key
+        )
+        action = Action(assign=assign, setpoint=setpoint)
+        state, info = env.step(state, offered, action)
+        return (state, pol_state), info
+
+    arrivals_steps = Arrivals(
+        r=trace.r, dur=trace.dur, prio=trace.prio,
+        is_gpu=trace.is_gpu, valid=trace.valid,
+    )
+    (state, _), infos = jax.lax.scan(body, (state0, pol0), arrivals_steps)
+    return state, infos
+
+
+class GymAdapter:
+    """Gymnasium-style stateful wrapper (observation = Eq. 1 vector)."""
+
+    def __init__(self, dims: EnvDims, params: EnvParams, trace: Trace, seed: int = 0):
+        self.env = DataCenterGym(dims, params)
+        self.trace = trace
+        self._seed = seed
+        self._state = None
+        self._step = jax.jit(self.env.step)
+
+    @property
+    def observation_dim(self) -> int:
+        return self.env.dims.obs_dim
+
+    def reset(self, seed: int | None = None):
+        rng = jax.random.PRNGKey(self._seed if seed is None else seed)
+        self._state = self.env.reset(rng)
+        return observe(self._state, self.env.params), {}
+
+    def step(self, action: Action):
+        t = int(self._state.t)
+        offered = jobs_mod.merge_offered(
+            self._state.pending, self.trace.arrivals_at(t)
+        )
+        self._state, info = self._step(self._state, offered, action)
+        terminated = t + 1 >= self.trace.num_steps
+        return observe(self._state, self.env.params), 0.0, terminated, False, info._asdict()
+
+    def offered_jobs(self) -> Arrivals:
+        """Jobs the policy must place this step (pending + arrivals)."""
+        t = int(self._state.t)
+        return jobs_mod.merge_offered(self._state.pending, self.trace.arrivals_at(t))

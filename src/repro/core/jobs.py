@@ -1,0 +1,172 @@
+"""Static-shape job execution engine: FIFO queues + backfilling admission.
+
+The paper's execution model (Sec. V-A "Job Completion Tracking"): jobs
+process in FIFO order up to available capacity; if a job doesn't fit,
+smaller jobs behind it can still execute (backfilling); running jobs
+decrement remaining duration each step until completion.
+
+Everything here is fixed-shape so the whole episode compiles to one XLA
+program: queues/running sets are (C, CAP) tables compacted each step, and
+admission is a bounded-depth lax.scan over queue positions, vectorized
+across clusters (DESIGN.md §5.2, §6).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import Arrivals, JobTable, PendingBuffer
+
+
+def _compact(table: JobTable, keep, cap: int) -> JobTable:
+    """Stable-compact kept rows to the front; count = #kept. keep: (C,CAP) bool."""
+    order = jnp.argsort(~keep, axis=1, stable=True)  # kept rows first, FIFO kept
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)
+    new_count = keep.sum(axis=1).astype(jnp.int32)
+    idx = jnp.arange(cap)[None, :]
+    valid = idx < new_count[:, None]
+    return JobTable(
+        r=jnp.where(valid, take(table.r), 0.0),
+        dur=jnp.where(valid, take(table.dur), 0),
+        prio=jnp.where(valid, take(table.prio), 0),
+        count=new_count,
+    )
+
+
+def tick_running(running: JobTable) -> Tuple[JobTable, jnp.ndarray]:
+    """Decrement remaining durations; remove completed. Returns (table', n_done)."""
+    cap = running.r.shape[1]
+    idx = jnp.arange(cap)[None, :]
+    active = idx < running.count[:, None]
+    dur = jnp.where(active, running.dur - 1, running.dur)
+    done = active & (dur <= 0)
+    keep = active & (dur > 0)
+    n_done = done.sum().astype(jnp.int32)
+    return _compact(JobTable(running.r, dur, running.prio, running.count), keep, cap), n_done
+
+
+def insert_arrivals(
+    queues: JobTable, jobs: Arrivals, assign, num_clusters: int
+) -> Tuple[JobTable, jnp.ndarray]:
+    """Append jobs with assign in [0, C) to their cluster queue (FIFO order).
+
+    Returns (queues', n_dropped) where drops are queue-capacity overflows.
+    """
+    cap = queues.r.shape[1]
+    placed = jobs.valid & (assign >= 0)
+    cl = jnp.where(placed, assign, num_clusters)  # C = out-of-range -> dropped
+    onehot = (cl[:, None] == jnp.arange(num_clusters)[None, :])
+    rank = jnp.cumsum(onehot, axis=0) - onehot.astype(jnp.int32)  # arrivals FIFO rank
+    rank_j = jnp.take_along_axis(
+        rank, jnp.clip(cl, 0, num_clusters - 1)[:, None], axis=1
+    )[:, 0]
+    slot = jnp.where(placed, queues.count[jnp.clip(cl, 0, num_clusters - 1)] + rank_j, cap)
+    row = jnp.where(placed, cl, num_clusters)
+
+    q_r = queues.r.at[row, slot].set(jobs.r, mode="drop")
+    q_d = queues.dur.at[row, slot].set(jobs.dur, mode="drop")
+    q_p = queues.prio.at[row, slot].set(jobs.prio, mode="drop")
+
+    n_assigned = onehot.sum(axis=0).astype(jnp.int32)
+    new_count = jnp.minimum(queues.count + n_assigned, cap)
+    n_dropped = (queues.count + n_assigned - new_count).sum().astype(jnp.int32)
+    return JobTable(q_r, q_d, q_p, new_count), n_dropped
+
+
+def admit_backfill(
+    queues: JobTable,
+    running: JobTable,
+    c_eff,
+    power_ok,
+    admit_depth: int,
+) -> Tuple[JobTable, JobTable]:
+    """FIFO + backfill admission: greedy pass over the first `admit_depth`
+    queue positions (vectorized across clusters).
+
+    A job at position k starts iff r <= remaining headroom, the running table
+    has a free slot, and the cluster's power budget is positive.
+    """
+    num_clusters, qcap = queues.r.shape
+    rcap = running.r.shape[1]
+    depth = min(admit_depth, qcap)
+    cidx = jnp.arange(num_clusters)
+
+    util0 = job_utilization(running)
+    rem0 = jnp.maximum(c_eff - util0, 0.0) * power_ok
+
+    def body(carry, xs):
+        run_r, run_d, run_p, run_cnt, rem = carry
+        k, = xs
+        job_r = queues.r[:, k]
+        job_d = queues.dur[:, k]
+        job_p = queues.prio[:, k]
+        in_queue = k < queues.count
+        fits = in_queue & (job_r <= rem) & (job_r > 0.0) & (run_cnt < rcap)
+        rem = rem - jnp.where(fits, job_r, 0.0)
+        slot = jnp.where(fits, run_cnt, rcap)  # rcap = OOB -> dropped write
+        run_r = run_r.at[cidx, slot].set(job_r, mode="drop")
+        run_d = run_d.at[cidx, slot].set(job_d, mode="drop")
+        run_p = run_p.at[cidx, slot].set(job_p, mode="drop")
+        run_cnt = run_cnt + fits.astype(jnp.int32)
+        return (run_r, run_d, run_p, run_cnt, rem), fits
+
+    carry0 = (running.r, running.dur, running.prio, running.count, rem0)
+    (run_r, run_d, run_p, run_cnt, _), admitted = jax.lax.scan(
+        body, carry0, (jnp.arange(depth),)
+    )
+    admitted = admitted.T  # (C, depth)
+    admitted_full = jnp.zeros((num_clusters, qcap), bool).at[:, :depth].set(admitted)
+
+    idx = jnp.arange(qcap)[None, :]
+    keep = (idx < queues.count[:, None]) & ~admitted_full
+    queues = _compact(queues, keep, qcap)
+    running = JobTable(run_r, run_d, run_p, run_cnt)
+    return queues, running
+
+
+def job_utilization(running: JobTable):
+    """(C,) active demand u_i = sum of r over running jobs."""
+    cap = running.r.shape[1]
+    active = jnp.arange(cap)[None, :] < running.count[:, None]
+    return jnp.where(active, running.r, 0.0).sum(axis=1)
+
+
+def merge_offered(pending: PendingBuffer, arrivals: Arrivals) -> Arrivals:
+    """Concatenate deferred jobs (FIFO-first) with fresh arrivals into the
+    batch offered to the policy this step."""
+    return Arrivals(
+        r=jnp.concatenate([pending.r, arrivals.r]),
+        dur=jnp.concatenate([pending.dur, arrivals.dur]),
+        prio=jnp.concatenate([pending.prio, arrivals.prio]),
+        is_gpu=jnp.concatenate([pending.is_gpu, arrivals.is_gpu]),
+        valid=jnp.concatenate([pending.valid, arrivals.valid]),
+    )
+
+
+def refill_pending(
+    offered: Arrivals, assign, pending_cap: int
+) -> Tuple[PendingBuffer, jnp.ndarray]:
+    """Jobs the policy deferred (assign == -1) form the next pending buffer.
+
+    Stable order keeps older jobs first. Overflow beyond pending_cap drops
+    (counted).
+    """
+    deferred = offered.valid & (assign < 0)
+    order = jnp.argsort(~deferred, stable=True)
+    take = lambda a: jnp.take(a, order)[:pending_cap]
+    n_def = deferred.sum().astype(jnp.int32)
+    idx = jnp.arange(pending_cap)
+    valid = idx < jnp.minimum(n_def, pending_cap)
+    dropped = jnp.maximum(n_def - pending_cap, 0).astype(jnp.int32)
+    return (
+        PendingBuffer(
+            r=jnp.where(valid, take(offered.r), 0.0),
+            dur=jnp.where(valid, take(offered.dur), 0),
+            prio=jnp.where(valid, take(offered.prio), 0),
+            is_gpu=valid & take(offered.is_gpu),
+            valid=valid,
+        ),
+        dropped,
+    )

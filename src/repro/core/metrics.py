@@ -1,0 +1,48 @@
+"""Table-II metric aggregation over an episode's stacked StepInfo."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
+    """Aggregate stacked StepInfo (leading axis = time) into Table-II metrics.
+
+    The paper discards no warm-up ("thermal equilibrium within the first
+    hour"); warmup is available for sensitivity checks.
+    """
+    sl = slice(warmup, None)
+    theta = infos.theta[sl]           # (T, D)
+    total_energy = infos.energy_kwh[sl].sum()
+    completed = infos.completed[sl].sum()
+    return {
+        "cpu_util_pct": 100.0 * infos.cpu_util[sl].mean(),
+        "gpu_util_pct": 100.0 * infos.gpu_util[sl].mean(),
+        "cpu_queue": infos.cpu_queue[sl].mean(),
+        "gpu_queue": infos.gpu_queue[sl].mean(),
+        "theta_mean": theta.mean(),
+        "theta_max": theta.max(),
+        "throttle_pct": 100.0 * infos.throttled[sl].any(axis=-1).mean(),
+        "total_energy_kwh": total_energy,
+        "kwh_per_job": total_energy / jnp.maximum(completed, 1),
+        "cost_usd": infos.cost_usd[sl].sum(),
+        "completed_jobs": completed,
+        "dropped_jobs": infos.dropped[sl].sum(),
+    }
+
+
+def format_table(rows: Dict[str, Dict[str, float]], metrics=None) -> str:
+    """rows: {policy_name: metric_dict}. Returns a Table-III-style string."""
+    metrics = metrics or [
+        "cpu_util_pct", "gpu_util_pct", "cpu_queue", "gpu_queue",
+        "theta_mean", "theta_max", "throttle_pct",
+        "kwh_per_job", "cost_usd",
+    ]
+    names = list(rows)
+    out = ["| Metric | " + " | ".join(names) + " |",
+           "|---" * (len(names) + 1) + "|"]
+    for m in metrics:
+        vals = " | ".join(f"{float(rows[n][m]):,.2f}" for n in names)
+        out.append(f"| {m} | {vals} |")
+    return "\n".join(out)

@@ -1,0 +1,1 @@
+from repro.core.mpc import rollout, solvers  # noqa: F401

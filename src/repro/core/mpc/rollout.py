@@ -1,0 +1,168 @@
+"""Differentiable predictive plant for MPC policies (DESIGN.md §5.1).
+
+The supervisory controllers plan over *aggregate* per-(DC, type) workload
+states — exactly the Stage-1 abstraction of Sec. IV-F — with the same RC
+thermal physics as the simulator and a steady-state cooling proxy
+Phi = clip(G * (theta - target), 0, Phi_max) standing in for the PID loop
+(the integral term dominates at steady state; G = Phi_max / 1.5degC means
+"full cooling 1.5degC above target").
+
+Everything here is smooth-enough JAX (min/relu subgradients) so a fixed
+number of projected-Adam steps over the rollout is a valid MPC solve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import thermal
+from repro.core.params import EnvParams
+
+NUM_TYPES = 2  # 0 = CPU, 1 = GPU
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregateParams:
+    """Per-(DC, type) reductions of the cluster-level plant."""
+
+    c_max: Any        # (D, 2) total capacity
+    alpha_bar: Any    # (D, 2) capacity-weighted heat coefficient
+    phi_bar: Any      # (D, 2) capacity-weighted power coefficient
+    gain: Any         # (D,) cooling proxy gain G (W/degC)
+
+
+jax.tree_util.register_dataclass(
+    AggregateParams,
+    data_fields=["c_max", "alpha_bar", "phi_bar", "gain"],
+    meta_fields=[],
+)
+
+
+def aggregate_params(params: EnvParams, num_dcs: int) -> AggregateParams:
+    seg = params.dc_id * NUM_TYPES + params.is_gpu.astype(jnp.int32)
+    n = num_dcs * NUM_TYPES
+    cap = jax.ops.segment_sum(params.c_max, seg, num_segments=n)
+    a = jax.ops.segment_sum(params.alpha * params.c_max, seg, num_segments=n)
+    p = jax.ops.segment_sum(params.phi * params.c_max, seg, num_segments=n)
+    cap2 = cap.reshape(num_dcs, NUM_TYPES)
+    safe = jnp.maximum(cap2, 1.0)
+    return AggregateParams(
+        c_max=cap2,
+        alpha_bar=(a.reshape(num_dcs, NUM_TYPES) / safe),
+        phi_bar=(p.reshape(num_dcs, NUM_TYPES) / safe),
+        gain=params.cool_max / 2.0,  # mildly conservative (PID lags the plan)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlantState:
+    """Aggregate predictive state."""
+
+    util: Any      # (D, 2) active CU
+    backlog: Any   # (D, 2) queued CU (assigned, waiting)
+    defer: Any     # (2,) globally deferred CU
+    theta: Any     # (D,)
+
+
+jax.tree_util.register_dataclass(
+    PlantState, data_fields=["util", "backlog", "defer", "theta"], meta_fields=[]
+)
+
+
+def cooling_proxy(theta, target, agg: AggregateParams, params: EnvParams):
+    """Smoothly-saturating proxy: tanh instead of a hard clip so the
+    planner keeps a gradient signal through setpoints even when cooling is
+    predicted to saturate (a hard clip zeroes d(cool)/d(target) exactly in
+    the overload regime where lowering the setpoint matters most)."""
+    demand = jax.nn.relu(agg.gain * (theta - target))
+    return params.cool_max * jnp.tanh(1.5 * demand / jnp.maximum(params.cool_max, 1.0))
+
+
+def plant_step(
+    st: PlantState,
+    rho,             # (D, 2) admission/routing fraction of offered load
+    defer_frac,      # (2,)  deferred fraction (rho + defer sum to 1 over D+1)
+    theta_target,    # (D,)
+    offered_load,    # (2,) fresh CU offered this step
+    amb,             # (D,) ambient forecast
+    mu,              # (2,) completion rate 1/mean-duration
+    agg: AggregateParams,
+    params: EnvParams,
+) -> PlantState:
+    offered = offered_load + st.defer                    # (2,)
+    inflow = rho * offered[None, :]                      # (D, 2)
+    g = thermal.throttle_factor(st.theta, params)        # (D,)
+    c_eff = agg.c_max * g[:, None]
+    headroom = jax.nn.relu(c_eff - st.util)
+    start = jnp.minimum(inflow + st.backlog, headroom)
+    backlog = st.backlog + inflow - start
+    util = st.util * (1.0 - mu)[None, :] + start
+    deferred = defer_frac * offered
+
+    heat = (agg.alpha_bar * util).sum(-1)                # (D,)
+    cool = cooling_proxy(st.theta, theta_target, agg, params)
+    theta = thermal.rc_step(st.theta, amb, heat, cool, params)
+    return PlantState(util=util, backlog=backlog, defer=deferred, theta=theta)
+
+
+def plant_rollout(
+    st0: PlantState,
+    rho_seq,          # (H, D, 2)
+    defer_seq,        # (H, 2)
+    target_seq,       # (H, D)
+    offered_seq,      # (H, 2)
+    amb_seq,          # (H, D)
+    mu,               # (2,)
+    agg: AggregateParams,
+    params: EnvParams,
+):
+    """Scan the plant over horizon H; returns stacked PlantState + cooling."""
+
+    def body(st, xs):
+        rho, defer_frac, target, offered, amb = xs
+        cool = cooling_proxy(st.theta, target, agg, params)
+        st = plant_step(st, rho, defer_frac, target, offered, amb, mu, agg, params)
+        return st, (st, cool)
+
+    _, (traj, cool) = jax.lax.scan(
+        body, st0, (rho_seq, defer_seq, target_seq, offered_seq, amb_seq)
+    )
+    return traj, cool
+
+
+def ambient_forecast(t0, horizon: int, params: EnvParams, steps_per_day: int = 288):
+    """Nominal (noise-free) exogenous ambient forecast eta_hat (Eq. 21)."""
+    ts = t0.astype(jnp.float32) + jnp.arange(1, horizon + 1, dtype=jnp.float32)
+    return jax.vmap(
+        lambda t: thermal.ambient_temperature(t, jnp.zeros_like(params.amb_base), params, steps_per_day)
+    )(ts)
+
+
+def price_forecast(t0, horizon: int, params: EnvParams):
+    from repro.core import power as power_mod
+
+    ts = t0 + jnp.arange(1, horizon + 1)
+    return jax.vmap(lambda t: power_mod.electricity_price(t, params))(ts)
+
+
+def plant_state_from_env(env_state, params: EnvParams, num_dcs: int) -> PlantState:
+    """Project the full simulator state onto the aggregate plant state."""
+    seg = params.dc_id * NUM_TYPES + params.is_gpu.astype(jnp.int32)
+    n = num_dcs * NUM_TYPES
+    util = jax.ops.segment_sum(env_state.util, seg, num_segments=n)
+    qcap = env_state.queues.r.shape[1]
+    valid = jnp.arange(qcap)[None, :] < env_state.queues.count[:, None]
+    queued = jnp.where(valid, env_state.queues.r, 0.0).sum(axis=1)
+    backlog = jax.ops.segment_sum(queued, seg, num_segments=n)
+    pend = env_state.pending
+    pend_cpu = jnp.where(pend.valid & ~pend.is_gpu, pend.r, 0.0).sum()
+    pend_gpu = jnp.where(pend.valid & pend.is_gpu, pend.r, 0.0).sum()
+    return PlantState(
+        util=util.reshape(num_dcs, NUM_TYPES),
+        backlog=backlog.reshape(num_dcs, NUM_TYPES),
+        defer=jnp.stack([pend_cpu, pend_gpu]),
+        theta=env_state.theta,
+    )

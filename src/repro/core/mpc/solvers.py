@@ -1,0 +1,78 @@
+"""Fixed-iteration optimizers used inside MPC policies.
+
+`projected_adam` is the workhorse (DESIGN.md §5.1): a static-count Adam loop
+over a differentiable rollout with a projection (box/simplex) after every
+step — the whole solve jit-compiles and nests inside the episode scan.
+
+`admm_box_qp` is an OSQP-style ADMM for  min 1/2 x'Px + q'x  s.t.
+lo <= Ax <= hi; it backs the centralized-SC-MPC complexity benchmark
+(Sec. IV-F4) where the cubic factorization cost is the point.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def projected_adam(
+    loss_fn: Callable,
+    x0,
+    project: Callable,
+    steps: int = 60,
+    lr: float = 0.08,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    eps: float = 1e-8,
+):
+    """Minimize loss_fn(x) over a pytree x with projection. Returns (x, loss)."""
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def body(carry, i):
+        x, m, v = carry
+        loss, g = grad_fn(x)
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
+        t = i.astype(jnp.float32) + 1.0
+        mhat = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+        vhat = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+        x = jax.tree.map(
+            lambda x_, m_, v_: x_ - lr * m_ / (jnp.sqrt(v_) + eps), x, mhat, vhat
+        )
+        x = project(x)
+        return (x, m, v), loss
+
+    zeros = jax.tree.map(jnp.zeros_like, x0)
+    (x, _, _), losses = jax.lax.scan(
+        body, (x0, zeros, zeros), jnp.arange(steps)
+    )
+    return x, losses[-1]
+
+
+def admm_box_qp(
+    P, q, A, lo, hi, iters: int = 80, rho: float = 1.0, sigma: float = 1e-6
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """OSQP-style ADMM:  min 1/2 x'Px + q'x  s.t.  lo <= Ax <= hi.
+
+    One Cholesky factorization of (P + sigma I + rho A'A) — the O(n^3) term
+    measured by the complexity benchmark — then `iters` O(n^2) sweeps.
+    Returns (x, primal_residual).
+    """
+    n = q.shape[0]
+    M = P + sigma * jnp.eye(n) + rho * (A.T @ A)
+    chol = jax.scipy.linalg.cho_factor(M)
+
+    def body(carry, _):
+        x, z, u = carry
+        rhs = sigma * x - q + rho * A.T @ (z - u)
+        x = jax.scipy.linalg.cho_solve(chol, rhs)
+        Ax = A @ x
+        z = jnp.clip(Ax + u, lo, hi)
+        u = u + Ax - z
+        return (x, z, u), None
+
+    x0 = jnp.zeros(n)
+    z0 = jnp.clip(A @ x0, lo, hi)
+    (x, z, u), _ = jax.lax.scan(body, (x0, z0, jnp.zeros_like(z0)), None, length=iters)
+    return x, jnp.max(jnp.abs(A @ x - z))

@@ -1,0 +1,202 @@
+"""Table-I experimental configuration: 20 heterogeneous clusters across 4 DCs.
+
+All physical quantities are SI unless noted:
+  - compute capacity: CU (abstract compute units, paper Sec. V-C)
+  - alpha: W of heat per CU of active utilization
+  - phi:   W of electrical draw per CU (= alpha / HEAT_FRACTION)
+  - R: thermal resistance degC/W ; C: thermal capacitance J/degC
+  - prices: $/kWh ; dt: seconds (300 s = 5 min, 288 steps = 24 h)
+
+OCR fixes relative to the paper's Table I are documented in DESIGN.md §6:
+Phoenix is 2 CPU / 3 GPU clusters; Seattle capacity split is 157K CPU +
+95K GPU (= 252K total); the second alpha range per row is the GPU range.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+import jax.numpy as jnp
+
+HEAT_FRACTION = 0.95  # fraction of electrical power converted to heat
+
+# ---------------------------------------------------------------------------
+# Static (python-level) sizing of the job tables. These are shapes, not data.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvDims:
+    """Static shape configuration (hashable; safe to close over in jit)."""
+
+    num_clusters: int = 20
+    num_dcs: int = 4
+    horizon: int = 288            # timesteps per episode (24 h at 5 min)
+    max_arrivals: int = 256       # arrival slots per step (>= 200 nominal)
+    queue_cap: int = 4096         # waiting jobs per cluster
+    run_cap: int = 2048           # concurrently running jobs per cluster
+    pending_cap: int = 2048       # globally deferred (unadmitted) jobs
+    admit_depth: int = 256        # FIFO+backfill scheduler pass depth / step
+    policy_depth: int = 1024      # offered jobs a sequential policy scores / step
+
+    @property
+    def obs_dim(self) -> int:
+        return 3 * self.num_clusters + 3 * self.num_dcs
+
+
+# ---------------------------------------------------------------------------
+# Physical parameters (jnp arrays; a pytree usable inside jit).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvParams:
+    """Physical parameters of the geo-distributed plant (pytree of arrays)."""
+
+    # --- cluster-level (C,) ---
+    dc_id: Any          # int32: hosting datacenter
+    is_gpu: Any         # bool: hardware affinity class
+    c_max: Any          # CU: max compute capacity
+    alpha: Any          # W/CU heat generation coefficient
+    phi: Any            # W/CU compute power coefficient
+    kappa: Any          # share of DC cooling power billed to this cluster
+    p_max: Any          # W: power budget ceiling (Eq. 8 state bound)
+    w_in: Any           # W: grid inflow per step
+
+    # --- datacenter-level (D,) ---
+    r_th: Any           # degC/W thermal resistance
+    c_th: Any           # J/degC thermal capacitance
+    kp: Any             # PID proportional gain (W/degC)
+    ki: Any             # PID integral gain (W/(degC*s))
+    kd: Any             # PID derivative gain (W*s/degC)
+    cool_max: Any       # W: max cooling power Phi_max
+    g_min: Any          # throttle floor
+    setpoint_fixed: Any # degC: fixed setpoint for non-MPC policies
+    price_peak: Any     # $/kWh
+    price_off: Any      # $/kWh
+    amb_base: Any       # degC diurnal mean
+    amb_amp: Any        # degC diurnal amplitude
+    amb_sigma: Any      # degC noise std
+
+    # --- scalars ---
+    dt: Any             # s per step
+    theta_soft: Any     # degC throttling onset
+    theta_max: Any      # degC hard limit
+    setpoint_lo: Any    # degC action bound
+    setpoint_hi: Any    # degC action bound
+    peak_start_h: Any   # hour of day peak tariff begins
+    peak_end_h: Any     # hour of day peak tariff ends
+
+    def tree_flatten(self):  # pragma: no cover - convenience
+        return dataclasses.astuple(self), None
+
+
+DC_NAMES = ("Seattle", "Phoenix", "Chicago", "Dallas")
+
+# Per-DC cluster layout: (n_cpu, n_gpu, cpu_cap_total, gpu_cap_total,
+#                         alpha_cpu_range, alpha_gpu_range)
+_DC_CLUSTERS = (
+    (3, 2, 157_000.0, 95_000.0, (0.3, 0.7), (4.0, 5.0)),   # Seattle
+    (2, 3, 65_000.0, 170_000.0, (0.6, 0.8), (6.5, 8.0)),   # Phoenix
+    (3, 2, 144_000.0, 60_000.0, (0.4, 0.6), (3.5, 4.5)),   # Chicago
+    (2, 3, 90_000.0, 280_000.0, (0.5, 0.7), (6.0, 9.0)),   # Dallas
+)
+
+_DC_PHYS = {
+    "r_th": (0.003, 0.004, 0.005, 0.002),
+    "c_th": (700e6, 600e6, 550e6, 520e6),
+    "kp": (4000.0, 7000.0, 5000.0, 6000.0),
+    "ki": (100.0, 150.0, 80.0, 120.0),
+    "kd": (1000.0, 1500.0, 800.0, 1200.0),
+    "cool_max": (0.68e6, 1.22e6, 0.30e6, 1.97e6),
+    "g_min": (0.2, 0.7, 0.4, 0.3),
+    "setpoint_fixed": (23.0, 25.0, 24.0, 24.0),
+    "price_peak": (0.08, 0.22, 0.13, 0.19),
+    "price_off": (0.06, 0.14, 0.09, 0.11),
+    "amb_base": (10.0, 38.0, 16.0, 30.0),
+    "amb_amp": (5.0, 12.0, 10.0, 11.0),
+    "amb_sigma": (0.5, 0.5, 0.5, 0.5),
+}
+
+
+def make_params(
+    dt: float = 300.0,
+    theta_soft: float = 32.0,
+    theta_max: float = 35.0,
+    setpoint_lo: float = 18.0,
+    setpoint_hi: float = 28.0,
+    power_margin: float = 1.2,
+    inflow_frac: float = 1.05,
+) -> EnvParams:
+    """Build the Table-I plant. Deterministic (alphas via linspace in-range)."""
+    dc_id, is_gpu, c_max, alpha = [], [], [], []
+    for d, (n_cpu, n_gpu, cap_c, cap_g, a_c, a_g) in enumerate(_DC_CLUSTERS):
+        for k in range(n_cpu):
+            dc_id.append(d)
+            is_gpu.append(False)
+            c_max.append(cap_c / n_cpu)
+            alpha.append(np.linspace(a_c[0], a_c[1], n_cpu)[k])
+        for k in range(n_gpu):
+            dc_id.append(d)
+            is_gpu.append(True)
+            c_max.append(cap_g / n_gpu)
+            alpha.append(np.linspace(a_g[0], a_g[1], n_gpu)[k])
+    dc_id = np.asarray(dc_id, np.int32)
+    is_gpu = np.asarray(is_gpu)
+    c_max = np.asarray(c_max, np.float32)
+    alpha = np.asarray(alpha, np.float32)
+    phi = alpha / HEAT_FRACTION
+
+    cool_max = np.asarray(_DC_PHYS["cool_max"], np.float32)
+    dc_cap = np.zeros(len(_DC_CLUSTERS), np.float32)
+    np.add.at(dc_cap, dc_id, c_max)
+    kappa = c_max / dc_cap[dc_id]
+
+    rated = phi * c_max + kappa * cool_max[dc_id]
+    p_max = power_margin * rated
+    w_in = inflow_frac * rated
+
+    f32 = lambda key: jnp.asarray(_DC_PHYS[key], jnp.float32)
+    return EnvParams(
+        dc_id=jnp.asarray(dc_id),
+        is_gpu=jnp.asarray(is_gpu),
+        c_max=jnp.asarray(c_max),
+        alpha=jnp.asarray(alpha),
+        phi=jnp.asarray(phi),
+        kappa=jnp.asarray(kappa),
+        p_max=jnp.asarray(p_max),
+        w_in=jnp.asarray(w_in),
+        r_th=f32("r_th"),
+        c_th=f32("c_th"),
+        kp=f32("kp"),
+        ki=f32("ki"),
+        kd=f32("kd"),
+        cool_max=f32("cool_max"),
+        g_min=f32("g_min"),
+        setpoint_fixed=f32("setpoint_fixed"),
+        price_peak=f32("price_peak"),
+        price_off=f32("price_off"),
+        amb_base=f32("amb_base"),
+        amb_amp=f32("amb_amp"),
+        amb_sigma=f32("amb_sigma"),
+        dt=jnp.float32(dt),
+        theta_soft=jnp.float32(theta_soft),
+        theta_max=jnp.float32(theta_max),
+        setpoint_lo=jnp.float32(setpoint_lo),
+        setpoint_hi=jnp.float32(setpoint_hi),
+        peak_start_h=jnp.float32(8.0),
+        peak_end_h=jnp.float32(20.0),
+    )
+
+
+try:  # register as pytrees so params/state flow through jit/scan/vmap
+    import jax
+
+    jax.tree_util.register_dataclass(
+        EnvParams,
+        data_fields=[f.name for f in dataclasses.fields(EnvParams)],
+        meta_fields=[],
+    )
+except Exception:  # pragma: no cover
+    pass

@@ -1,0 +1,26 @@
+"""Scheduling policies (Sec. IV)."""
+from repro.core.policies.base import Policy, scan_assign, committed_demand
+from repro.core.policies.heuristics import (
+    greedy_policy,
+    power_cool_policy,
+    random_policy,
+    thermal_policy,
+)
+from repro.core.policies.sc_mpc import SCMPCConfig, sc_mpc_policy
+from repro.core.policies.h_mpc import HMPCConfig, h_mpc_policy
+
+
+def make_policy(name: str, dims, **kw) -> Policy:
+    """Factory: random | greedy | thermal | power_cool | sc_mpc | h_mpc."""
+    table = {
+        "random": random_policy,
+        "greedy": greedy_policy,
+        "thermal": thermal_policy,
+        "power_cool": power_cool_policy,
+        "sc_mpc": sc_mpc_policy,
+        "h_mpc": h_mpc_policy,
+    }
+    return table[name](dims, **kw)
+
+
+ALL_POLICIES = ("random", "greedy", "thermal", "power_cool", "sc_mpc", "h_mpc")

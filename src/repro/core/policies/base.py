@@ -1,0 +1,119 @@
+"""Policy interface + the shared sequential scoring machinery.
+
+A policy is a (init, act) pair of pure functions:
+
+    pol_state = policy.init(dims, params)
+    assign, setpoint, pol_state = policy.act(pol_state, env_state, offered,
+                                             params, rng)
+
+`assign`: (J,) int32 in [-1, C) — cluster id or -1 (defer).
+`setpoint`: (D,) float32 cooling setpoints.
+
+Heuristic policies (Sec. IV A–D) decide per job *sequentially* (each
+decision sees the load committed by earlier decisions in the same batch).
+We reproduce that with a bounded lax.scan over the first `policy_depth`
+offered jobs, carrying a committed-utilization estimate; the per-cluster
+score function is the only thing that differs between heuristics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import EnvDims, EnvParams
+
+BIG = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    init: Callable
+    act: Callable
+
+
+def committed_demand(state) -> jnp.ndarray:
+    """(C,) active utilization + resource demand already waiting in queues."""
+    qcap = state.queues.r.shape[1]
+    valid = jnp.arange(qcap)[None, :] < state.queues.count[:, None]
+    queued = jnp.where(valid, state.queues.r, 0.0).sum(axis=1)
+    return state.util + queued
+
+
+def scan_assign(
+    score_fn,
+    pol_ctx,
+    state,
+    offered,
+    params: EnvParams,
+    dims: EnvDims,
+    rng,
+    respect_fit: bool = True,
+):
+    """Sequential per-job assignment with within-batch commitment tracking.
+
+    score_fn(job, u_est, state, params, pol_ctx, key) -> (C,) score (lower
+    is better). Infeasible clusters are masked here; a job with no feasible
+    cluster defers (-1). Jobs beyond `policy_depth` defer.
+    """
+    num_clusters = dims.num_clusters
+    depth = min(dims.policy_depth, offered.r.shape[0])
+    qcap = state.queues.r.shape[1]
+
+    u_est0 = committed_demand(state)
+    q_space0 = (qcap - state.queues.count).astype(jnp.int32)
+    power_ok = state.power > 0.0
+
+    def body(carry, xs):
+        u_est, q_space = carry
+        j, = xs
+        r = offered.r[j]
+        is_gpu = offered.is_gpu[j]
+        valid = offered.valid[j]
+        key = jax.random.fold_in(rng, j)
+
+        type_ok = params.is_gpu == is_gpu
+        feasible = type_ok & power_ok & (q_space > 0)
+        fits = feasible & (u_est + r <= state.c_eff)
+
+        job = {"r": r, "is_gpu": is_gpu}
+        score = score_fn(job, u_est, state, params, pol_ctx, key)
+        if respect_fit:  # prefer clusters with headroom, then feasible-but-full
+            score = jnp.where(fits, score, score + BIG)
+        score = jnp.where(feasible, score, jnp.inf)
+
+        choice = jnp.argmin(score).astype(jnp.int32)
+        ok = valid & jnp.isfinite(score[choice])
+        assign = jnp.where(ok, choice, -1)
+
+        onehot = (jnp.arange(num_clusters) == choice) & ok
+        u_est = u_est + jnp.where(onehot, r, 0.0)
+        q_space = q_space - onehot.astype(jnp.int32)
+        return (u_est, q_space), assign
+
+    (_, _), assigns = jax.lax.scan(body, (u_est0, q_space0), (jnp.arange(depth),))
+    full = jnp.full((offered.r.shape[0],), -1, jnp.int32)
+    return full.at[:depth].set(assigns)
+
+
+def heuristic_policy(
+    name: str, score_fn, dims: EnvDims, respect_fit: bool = True
+) -> Policy:
+    """Heuristic with fixed DC setpoints (paper: baselines do not control
+    cooling). respect_fit=False drops the headroom preference (the random
+    baseline "ignores physical system state", Sec. IV-A)."""
+
+    def init(dims_, params):
+        return ()
+
+    def act(pol_state, state, offered, params, rng):
+        assign = scan_assign(
+            score_fn, None, state, offered, params, dims, rng,
+            respect_fit=respect_fit,
+        )
+        return assign, params.setpoint_fixed, pol_state
+
+    return Policy(name=name, init=init, act=act)

@@ -1,0 +1,267 @@
+"""Hierarchical joint scheduling + thermal control MPC (Sec. IV-F).
+
+Stage 1 (horizon H1, slow thermal timescale): a DC-level supervisory MPC
+over admission/routing fractions rho_{d,tau,k} (parameterized as a softmax
+over D DCs + one defer slot, so the Eq.-26-style feasibility of splitting
+offered load is built into the geometry) and thermal setpoints
+theta^target_{d,k} with explicit soft-constraint slacks xi (Eq. 25).
+
+Stage 2 (horizon H2 <= H1, fast workload timescale): per-DC cluster-level
+allocation — a segment-softmax weight per cluster within its (DC, type)
+group, optimized against cluster-granular queueing/energy/headroom cost
+(Eqs. 27-28); Stage-1 quotas enter as the allocated per-DC load.
+
+The two solves are fixed-iteration projected-Adam programs over
+differentiable plant rollouts (DESIGN.md §5.1), so an entire episode with
+H-MPC in the loop jit-compiles to one XLA program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import thermal
+from repro.core.mpc import rollout as plant
+from repro.core.mpc.solvers import projected_adam
+from repro.core.params import EnvDims, EnvParams
+from repro.core.policies.base import Policy
+
+
+@dataclasses.dataclass(frozen=True)
+class HMPCConfig:
+    h1: int = 24               # supervisory horizon (2 h)
+    h2: int = 6                # cluster-level horizon (30 min)
+    iters1: int = 40
+    iters2: int = 25
+    lr1: float = 0.2
+    lr2: float = 0.2
+    ema: float = 0.2           # arrival-statistics EMA weight
+    util_lo: float = 0.60      # paper: 60-70% nominal band
+    util_hi: float = 0.70
+    # objective weights; every term is normalized to an O(1) per-step scale
+    # (energy by the full-fleet $ rate, queues/defer by fleet capacity)
+    w_energy: float = 1.2
+    w_queue: float = 12.0
+    w_temp_dev: float = 0.02
+    w_soft: float = 40.0
+    soft_margin: float = 4.0   # keep theta this far below theta_soft (headroom)
+    w_hard: float = 1e3
+    w_band: float = 80.0
+    w_reject: float = 10.0
+    w_head: float = 5.0
+    w_bal: float = 2.0
+
+
+jax.tree_util.register_dataclass(
+    HMPCConfig, data_fields=[], meta_fields=[f.name for f in dataclasses.fields(HMPCConfig)]
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HMPCState:
+    ema_count: Any   # (2,) fresh arrivals/step per type
+    ema_rbar: Any    # (2,) mean CU per job
+    ema_mu: Any      # (2,) completion rate per step
+    z_route: Any     # (H1, D+1, 2) stage-1 warm start
+    z_target: Any    # (H1, D)
+    z_alloc: Any     # (C,) stage-2 warm start
+
+
+jax.tree_util.register_dataclass(
+    HMPCState,
+    data_fields=["ema_count", "ema_rbar", "ema_mu", "z_route", "z_target", "z_alloc"],
+    meta_fields=[],
+)
+
+
+def _offered_stats(state, offered):
+    """Per-type fresh arrival count, mean demand, mean completion rate."""
+    pending_n = state.pending.valid.sum()
+    types = offered.is_gpu.astype(jnp.int32)
+    count = jnp.zeros(2).at[types].add(offered.valid.astype(jnp.float32))
+    # fresh arrivals only for rate estimation (offered = pending ++ fresh)
+    fresh_frac = jnp.clip(
+        (count.sum() - pending_n) / jnp.maximum(count.sum(), 1.0), 0.0, 1.0
+    )
+    rsum = jnp.zeros(2).at[types].add(jnp.where(offered.valid, offered.r, 0.0))
+    dsum = jnp.zeros(2).at[types].add(
+        jnp.where(offered.valid, offered.dur.astype(jnp.float32), 0.0)
+    )
+    safe = jnp.maximum(count, 1.0)
+    return count * fresh_frac, rsum / safe, 1.0 / jnp.maximum(dsum / safe, 1.0)
+
+
+def _stage1(state, params, agg, cfg: HMPCConfig, pol: HMPCState, num_dcs: int):
+    """Supervisory MPC (Eq. 25-26): returns (rho0 (D,2), target (H1,D), z's)."""
+    H = cfg.h1
+    st0 = plant.plant_state_from_env(state, params, num_dcs)
+    amb = plant.ambient_forecast(state.t, H, params)
+    price = plant.price_forecast(state.t, H, params)
+    offered_load = pol.ema_count * pol.ema_rbar            # (2,) CU/step
+    cap_type = agg.c_max.sum(0)                            # (2,)
+    cap_total = cap_type.sum()
+    span = params.setpoint_hi - params.setpoint_lo
+    # $/step of the whole fleet at full load: the natural energy-cost scale
+    phibar_fleet = (agg.phi_bar * agg.c_max).sum() / cap_total
+    cost_scale = 0.15 * cap_total * phibar_fleet * params.dt / 3.6e6
+
+    def loss_fn(z):
+        w = jax.nn.softmax(z["route"], axis=1)             # (H, D+1, 2)
+        rho, defer = w[:, :-1, :], w[:, -1, :]
+        target = params.setpoint_lo + jax.nn.sigmoid(z["target"]) * span
+        xi = jax.nn.softplus(z["xi"])                      # (H, D)
+        traj, cool = plant.plant_rollout(
+            st0, rho, defer,
+            target, jnp.broadcast_to(offered_load, (H, 2)), amb,
+            pol.ema_mu, agg, params,
+        )
+        energy_kwh = (
+            (agg.phi_bar * traj.util).sum(-1) + cool
+        ) * params.dt / 3.6e6                              # (H, D)
+        j_energy = cfg.w_energy * jnp.sum(price * energy_kwh) / (H * cost_scale)
+        backlog_frac = (traj.backlog.sum((1, 2)) + traj.defer.sum(1)) / cap_total
+        # saturating queue cost: backlog pressure must not override the
+        # utilization band / thermal headroom under sustained overload (RQ2)
+        j_queue = cfg.w_queue * jnp.sum(jnp.tanh(backlog_frac)) / H
+        j_tdev = cfg.w_temp_dev * jnp.mean((traj.theta - target) ** 2)
+        j_soft = cfg.w_soft * jnp.mean(
+            jax.nn.relu(traj.theta - (params.theta_soft - cfg.soft_margin) - xi) ** 2
+        ) + jnp.mean(xi**2)
+        j_hard = cfg.w_hard * jnp.mean(
+            jax.nn.relu(traj.theta - params.theta_max) ** 2
+        ) + 1.0 * cfg.w_hard * jnp.mean(
+            jax.nn.relu(traj.theta - (params.theta_soft - 1.5)) ** 2
+        )
+        util_frac = traj.util.sum(1) / cap_type[None, :]   # (H, 2) fleet-wide
+        j_band = cfg.w_band * jnp.mean(
+            jax.nn.relu(util_frac - cfg.util_hi) ** 2
+            + jax.nn.relu(cfg.util_lo - util_frac) ** 2
+        )
+        j_rej = cfg.w_reject * jnp.mean(defer * offered_load[None, :]) / cap_total
+        return j_energy + j_queue + j_tdev + j_soft + j_hard + j_band + j_rej
+
+    z0 = {
+        "route": pol.z_route,
+        "target": pol.z_target,
+        "xi": jnp.full((H, num_dcs), -2.0),
+    }
+    z, _ = projected_adam(loss_fn, z0, lambda x: x, steps=cfg.iters1, lr=cfg.lr1)
+    w = jax.nn.softmax(z["route"], axis=1)
+    target = params.setpoint_lo + jax.nn.sigmoid(z["target"]) * span
+    return w[0, :-1, :], target, z["route"], z["target"]
+
+
+def _stage2(state, params, agg, cfg: HMPCConfig, pol: HMPCState, rho0, num_dcs: int):
+    """Cluster-level allocation (Eq. 27-28): per-(DC,type) softmax weights."""
+    group = params.dc_id * 2 + params.is_gpu.astype(jnp.int32)  # (C,)
+    n_groups = num_dcs * 2
+    dc_load = rho0 * (pol.ema_count * pol.ema_rbar)[None, :]    # (D,2) CU/step
+    load_c = dc_load.reshape(-1)[group]                         # (C,) group load
+    mu_c = pol.ema_mu[params.is_gpu.astype(jnp.int32)]
+    price_c = state.price[params.dc_id]
+    qcap = state.queues.r.shape[1]
+    qvalid = jnp.arange(qcap)[None, :] < state.queues.count[:, None]
+    queued = jnp.where(qvalid, state.queues.r, 0.0).sum(1)
+    g = thermal.throttle_factor(state.theta, params)[params.dc_id]
+    c_eff = params.c_max * g
+
+    def seg_softmax(z):
+        zmax = jax.ops.segment_max(z, group, num_segments=n_groups)
+        e = jnp.exp(z - zmax[group])
+        denom = jax.ops.segment_sum(e, group, num_segments=n_groups)
+        return e / jnp.maximum(denom[group], 1e-9)
+
+    def loss_fn(z):
+        w = seg_softmax(z)                                  # (C,) weights
+        inflow = w * load_c
+
+        def body(carry, _):
+            u, b = carry
+            headroom = jax.nn.relu(c_eff - u)
+            start = jnp.minimum(inflow + b, headroom)
+            b = b + inflow - start
+            u = u * (1.0 - mu_c) + start
+            return (u, b), (u, b)
+
+        (_, _), (us, bs) = jax.lax.scan(
+            body, (state.util, queued), None, length=cfg.h2
+        )
+        j_queue = cfg.w_queue * jnp.sum(bs / jnp.maximum(params.c_max, 1.0))
+        j_energy = cfg.w_energy * jnp.sum(
+            price_c[None, :] * params.phi * us * params.dt / 3.6e6
+        )
+        j_head = cfg.w_head * jnp.sum(
+            jax.nn.relu(us - c_eff) / jnp.maximum(params.c_max, 1.0)
+        )
+        frac = us / jnp.maximum(params.c_max, 1.0)          # (H2, C)
+        j_bal = cfg.w_bal * jnp.sum(
+            (frac - frac.mean(axis=1, keepdims=True)) ** 2
+        )
+        return j_queue + j_energy + j_head + j_bal
+
+    z, _ = projected_adam(
+        loss_fn, pol.z_alloc, lambda x: x, steps=cfg.iters2, lr=cfg.lr2
+    )
+    return seg_softmax(z), z
+
+
+def _counts_to_assign(offered, rho0, weights, pol, params, num_clusters: int):
+    """Quota counts -> per-job cluster ids by FIFO rank (vectorized)."""
+    assign = jnp.full(offered.r.shape, -1, jnp.int32)
+    for tau in (0, 1):
+        mask = offered.valid & (offered.is_gpu == bool(tau))
+        n_off = mask.sum()
+        # per-DC admitted counts, then per-cluster counts via stage-2 weights
+        admit_d = jnp.floor(rho0[:, tau] * n_off)                     # (D,)
+        type_ok = params.is_gpu == bool(tau)
+        per_cl = jnp.where(type_ok, weights * admit_d[params.dc_id], 0.0)
+        counts = jnp.floor(per_cl + 1e-6)
+        # distribute floor remainders to the largest weights (stable greedy)
+        cum = jnp.cumsum(counts)
+        rank = jnp.cumsum(mask) - 1
+        idx = jnp.searchsorted(cum, rank.astype(cum.dtype), side="right")
+        ok = mask & (rank < cum[-1])
+        assign = jnp.where(ok, jnp.minimum(idx, num_clusters - 1).astype(jnp.int32), assign)
+    return assign
+
+
+def h_mpc_policy(dims: EnvDims, cfg: HMPCConfig = HMPCConfig()) -> Policy:
+    D, C = dims.num_dcs, dims.num_clusters
+
+    def init(dims_, params):
+        return HMPCState(
+            ema_count=jnp.array([80.0, 120.0]),
+            ema_rbar=jnp.array([100.0, 100.0]),
+            ema_mu=jnp.array([0.12, 0.12]),
+            z_route=jnp.zeros((cfg.h1, D + 1, 2)),
+            z_target=jnp.zeros((cfg.h1, D)),
+            z_alloc=jnp.zeros((C,)),
+        )
+
+    def act(pol_state, state, offered, params, rng):
+        agg = plant.aggregate_params(params, D)
+        count, rbar, mu = _offered_stats(state, offered)
+        e = cfg.ema
+        pol_state = dataclasses.replace(
+            pol_state,
+            ema_count=(1 - e) * pol_state.ema_count + e * count,
+            ema_rbar=(1 - e) * pol_state.ema_rbar + e * rbar,
+            ema_mu=(1 - e) * pol_state.ema_mu + e * mu,
+        )
+        rho0, target, z_route, z_target = _stage1(
+            state, params, agg, cfg, pol_state, D
+        )
+        weights, z_alloc = _stage2(state, params, agg, cfg, pol_state, rho0, D)
+        assign = _counts_to_assign(offered, rho0, weights, pol_state, params, C)
+        pol_state = dataclasses.replace(
+            pol_state,
+            z_route=jnp.roll(z_route, -1, axis=0).at[-1].set(z_route[-1]),
+            z_target=jnp.roll(z_target, -1, axis=0).at[-1].set(z_target[-1]),
+            z_alloc=z_alloc,
+        )
+        return assign, target[0], pol_state
+
+    return Policy(name="h_mpc", init=init, act=act)

@@ -1,0 +1,65 @@
+"""Sec. IV A–D baseline policies: Random, Greedy, Thermal-aware, Power-Cool.
+
+All four are per-job myopic scorers run through base.scan_assign, operating
+with fixed datacenter cooling setpoints (the paper's baselines do not
+control cooling).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import EnvDims
+from repro.core.policies.base import Policy, heuristic_policy
+
+
+def _random_score(job, u_est, state, params, ctx, key):
+    """Eq. 10: uniform over feasible clusters (gumbel-argmin = uniform pick)."""
+    return jax.random.uniform(key, params.c_max.shape)
+
+
+def _greedy_score(job, u_est, state, params, ctx, key):
+    """Eq. 11: lowest normalized committed utilization u / c_eff."""
+    return u_est / jnp.maximum(state.c_eff, 1.0)
+
+
+def _thermal_score(job, u_est, state, params, ctx, key):
+    """Eq. 12 (literal): minimize theta_d(i) + alpha_i * r_j. The heat term
+    alpha*r is converted to degC via the DC's RC step gain (dt/C_d) so both
+    summands live on the temperature scale; a tiny load tiebreak spreads
+    ties within a DC (the paper's formula gives identical scores to all
+    clusters of equal alpha in one DC)."""
+    theta_c = state.theta[params.dc_id]
+    heat_degC = params.alpha * job["r"] * (params.dt / params.c_th[params.dc_id])
+    tiebreak = 1e-6 * u_est / jnp.maximum(params.c_max, 1.0)
+    return theta_c + 1e3 * heat_degC + tiebreak
+
+
+def _power_cool_score(job, u_est, state, params, ctx, key):
+    """Eqs. 13-14: marginal power  phi_i r + omega * gamma * (thermal gap +
+    R_d alpha_i r)."""
+    omega, gamma = ctx
+    gap = (state.theta - state.setpoint)[params.dc_id]
+    heat_load = params.r_th[params.dc_id] * params.alpha * job["r"]
+    cool_est = gamma * (gap + heat_load)
+    price = state.price[params.dc_id]  # weight by local tariff
+    return price * (params.phi * job["r"] + omega * cool_est)
+
+
+def random_policy(dims: EnvDims) -> Policy:
+    return heuristic_policy("random", _random_score, dims, respect_fit=False)
+
+
+def greedy_policy(dims: EnvDims) -> Policy:
+    return heuristic_policy("greedy", _greedy_score, dims)
+
+
+def thermal_policy(dims: EnvDims) -> Policy:
+    return heuristic_policy("thermal", _thermal_score, dims)
+
+
+def power_cool_policy(dims: EnvDims, omega: float = 1.0, gamma: float = 500.0) -> Policy:
+    def score(job, u_est, state, params, ctx, key):
+        return _power_cool_score(job, u_est, state, params, (omega, gamma), key)
+
+    return heuristic_policy("power_cool", score, dims)

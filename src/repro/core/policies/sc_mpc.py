@@ -1,0 +1,96 @@
+"""Safety-Constrained MPC (Sec. IV-E), as evaluated in the paper's RQ1:
+cooling setpoints are optimized over a receding horizon; job placement is
+delegated to the myopic greedy heuristic (the centralized placement MILP is
+intractable, Sec. IV-F4).
+
+The setpoint program matches Eqs. (15)-(24): hard thermal limit theta_max
+(penalty-enforced), soft limit with explicit slack xi >= 0, box-constrained
+setpoints, and nominal exogenous forecasts (ambient, price). The paper
+observes SC-MPC "maintains lower temperatures via conservative cooling,
+increasing energy cost": its stage cost tracks a conservative thermal
+reference (theta_ref below the fixed setpoints) with a small energy weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import thermal
+from repro.core.mpc import rollout as plant
+from repro.core.mpc.solvers import projected_adam
+from repro.core.params import EnvDims, EnvParams
+from repro.core.policies.base import Policy, scan_assign
+from repro.core.policies.heuristics import _greedy_score
+
+
+@dataclasses.dataclass(frozen=True)
+class SCMPCConfig:
+    horizon: int = 24          # 2 h of 5-min steps (slow thermal dynamics)
+    iters: int = 40
+    lr: float = 0.15
+    theta_ref: float = 22.5    # conservative thermal reference (degC)
+    w_track: float = 1.0
+    w_soft: float = 10.0       # slack penalty (Eq. 20)
+    w_hard: float = 1e3        # hard-limit penalty (Eq. 22)
+    w_energy: float = 0.02     # $ per episode-step scale
+
+
+jax.tree_util.register_dataclass(SCMPCConfig, data_fields=[], meta_fields=[
+    f.name for f in dataclasses.fields(SCMPCConfig)])
+
+
+def _setpoint_program(state, params: EnvParams, agg, cfg: SCMPCConfig, warm):
+    """Solve for (H, D) setpoints given frozen utilization (greedy places jobs)."""
+    D = state.theta.shape[0]
+    H = cfg.horizon
+    heat = thermal.compute_heat(state.util, params)      # frozen compute heat
+    amb = plant.ambient_forecast(state.t, H, params)     # (H, D) nominal
+    price = plant.price_forecast(state.t, H, params)     # (H, D)
+
+    def loss_fn(z):
+        target = params.setpoint_lo + jax.nn.sigmoid(z["t"]) * (
+            params.setpoint_hi - params.setpoint_lo
+        )                                                # (H, D)
+        xi = jax.nn.softplus(z["xi"])                    # (H, D) slack >= 0
+
+        def body(theta, xs):
+            tgt, a = xs
+            cool = plant.cooling_proxy(theta, tgt, agg, params)
+            theta = thermal.rc_step(theta, a, heat, cool, params)
+            return theta, (theta, cool)
+
+        _, (thetas, cools) = jax.lax.scan(body, state.theta, (target, amb))
+        energy_kwh = cools * params.dt / 3.6e6
+        track = jnp.sum(jax.nn.relu(thetas - cfg.theta_ref) ** 2)
+        soft = jnp.sum(
+            jax.nn.relu(thetas - params.theta_soft - xi) ** 2
+        ) * cfg.w_soft + jnp.sum(xi**2)
+        hard = cfg.w_hard * jnp.sum(jax.nn.relu(thetas - params.theta_max) ** 2)
+        energy = cfg.w_energy * jnp.sum(price * energy_kwh)
+        return cfg.w_track * track + soft + hard + energy
+
+    z0 = {"t": warm, "xi": jnp.full((H, D), -2.0)}
+    z, _ = projected_adam(loss_fn, z0, lambda x: x, steps=cfg.iters, lr=cfg.lr)
+    target = params.setpoint_lo + jax.nn.sigmoid(z["t"]) * (
+        params.setpoint_hi - params.setpoint_lo
+    )
+    return target, z["t"]
+
+
+def sc_mpc_policy(dims: EnvDims, cfg: SCMPCConfig = SCMPCConfig()) -> Policy:
+    def init(dims_, params):
+        return jnp.zeros((cfg.horizon, dims.num_dcs))  # warm-start logits
+
+    def act(pol_state, state, offered, params, rng):
+        agg = plant.aggregate_params(params, dims.num_dcs)
+        target, zt = _setpoint_program(state, params, agg, cfg, pol_state)
+        assign = scan_assign(
+            _greedy_score, None, state, offered, params, dims, rng
+        )
+        warm = jnp.roll(zt, -1, axis=0).at[-1].set(zt[-1])  # receding horizon
+        return assign, target[0], warm
+
+    return Policy(name="sc_mpc", init=init, act=act)

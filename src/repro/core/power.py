@@ -1,0 +1,48 @@
+"""Power-budget dynamics (Eq. 8), TOU pricing and cost/energy accounting (Eq. 9)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hour_of_day(t, params):
+    return (t.astype(jnp.float32) * params.dt / 3600.0) % 24.0
+
+
+def electricity_price(t, params):
+    """(D,) $/kWh: peak tariff inside [peak_start_h, peak_end_h)."""
+    h = hour_of_day(t, params)
+    peak = (h >= params.peak_start_h) & (h < params.peak_end_h)
+    return jnp.where(peak, params.price_peak, params.price_off)
+
+
+def compute_power(util, params):
+    """(C,) electrical draw of compute: phi_i * u_i."""
+    return params.phi * util
+
+
+def power_step(power, util, phi_cool, params):
+    """Available power budget update (Eq. 8), clipped to [0, p_max]."""
+    draw = compute_power(util, params) + params.kappa * phi_cool[params.dc_id]
+    p = power - params.dt * 0.0 - draw + params.w_in  # W-equivalent budget / step
+    return jnp.clip(p, 0.0, params.p_max)
+
+
+def step_energy_kwh(util, phi_cool, params):
+    """Total electrical energy this step (kWh): (compute + cooling) * dt."""
+    num_dcs = params.r_th.shape[0]
+    comp_w = jax.ops.segment_sum(
+        compute_power(util, params), params.dc_id, num_segments=num_dcs
+    )
+    total_w = comp_w + phi_cool
+    return jnp.sum(total_w) * params.dt / 3.6e6, comp_w
+
+
+def step_cost_usd(util, phi_cool, price, params):
+    """Operational cost this step (Eq. 9): price * (compute + cooling) * dt."""
+    num_dcs = params.r_th.shape[0]
+    comp_w = jax.ops.segment_sum(
+        compute_power(util, params), params.dc_id, num_segments=num_dcs
+    )
+    kwh_d = (comp_w + phi_cool) * params.dt / 3.6e6
+    return jnp.sum(price * kwh_d)

@@ -1,0 +1,132 @@
+"""Environment state pytrees: static-shape job tables + physical state."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import EnvDims
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTable:
+    """Fixed-capacity per-cluster FIFO table (queues or running sets).
+
+    Rows [0, count) are valid and FIFO-ordered (compacted each step).
+    """
+
+    r: Any        # (C, CAP) f32 resource demand
+    dur: Any      # (C, CAP) i32 remaining duration (steps)
+    prio: Any     # (C, CAP) i32 priority
+    count: Any    # (C,) i32 number of valid rows
+
+    @staticmethod
+    def zeros(num_clusters: int, cap: int) -> "JobTable":
+        z = jnp.zeros((num_clusters, cap), jnp.float32)
+        zi = jnp.zeros((num_clusters, cap), jnp.int32)
+        return JobTable(r=z, dur=zi, prio=zi, count=jnp.zeros((num_clusters,), jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingBuffer:
+    """Globally deferred jobs (unadmitted by the policy), re-offered next step."""
+
+    r: Any        # (P,) f32
+    dur: Any      # (P,) i32
+    prio: Any     # (P,) i32
+    is_gpu: Any   # (P,) bool
+    valid: Any    # (P,) bool
+
+    @staticmethod
+    def zeros(cap: int) -> "PendingBuffer":
+        return PendingBuffer(
+            r=jnp.zeros((cap,), jnp.float32),
+            dur=jnp.zeros((cap,), jnp.int32),
+            prio=jnp.zeros((cap,), jnp.int32),
+            is_gpu=jnp.zeros((cap,), bool),
+            valid=jnp.zeros((cap,), bool),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvState:
+    """Full simulator state (pytree)."""
+
+    t: Any                # i32 step index
+    rng: Any              # PRNG key
+    # cluster-level
+    power: Any            # (C,) f32 available power budget p_{i,t}
+    util: Any             # (C,) f32 active demand u_{i,t}
+    c_eff: Any            # (C,) f32 throttled capacity
+    queues: JobTable      # waiting jobs per cluster
+    running: JobTable     # executing jobs per cluster
+    # datacenter-level
+    theta: Any            # (D,) f32 internal temperature proxy
+    theta_amb: Any        # (D,) f32 ambient temperature
+    pid_integral: Any     # (D,) f32 integral of tracking error (degC*s)
+    pid_prev_err: Any     # (D,) f32 previous error (degC)
+    setpoint: Any         # (D,) f32 current cooling setpoint
+    cool_power: Any       # (D,) f32 last applied cooling power (W)
+    price: Any            # (D,) f32 current electricity price ($/kWh)
+    # global
+    pending: PendingBuffer
+    # cumulative counters (diagnostics; metrics proper are step outputs)
+    completed: Any        # i32 total jobs completed
+    dropped: Any          # i32 jobs dropped on queue/pending overflow
+    energy_kwh: Any       # f32 cumulative energy
+    cost_usd: Any         # f32 cumulative cost
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrivals:
+    """One step's batch of arriving jobs (fixed max slots, mask-valid)."""
+
+    r: Any        # (J,) f32
+    dur: Any      # (J,) i32
+    prio: Any     # (J,) i32
+    is_gpu: Any   # (J,) bool
+    valid: Any    # (J,) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    """Composite action (Eq. 2): per-job placement + DC cooling setpoints."""
+
+    assign: Any      # (J,) i32 in [-1, C): cluster id, -1 = defer
+    setpoint: Any    # (D,) f32 cooling setpoints theta^target
+
+
+def init_state(dims: EnvDims, params, rng) -> EnvState:
+    d = dims
+    theta0 = params.setpoint_fixed
+    return EnvState(
+        t=jnp.int32(0),
+        rng=rng,
+        power=params.p_max,
+        util=jnp.zeros((d.num_clusters,), jnp.float32),
+        c_eff=params.c_max,
+        queues=JobTable.zeros(d.num_clusters, d.queue_cap),
+        running=JobTable.zeros(d.num_clusters, d.run_cap),
+        theta=theta0,
+        theta_amb=params.amb_base,
+        pid_integral=jnp.zeros((d.num_dcs,), jnp.float32),
+        pid_prev_err=jnp.zeros((d.num_dcs,), jnp.float32),
+        setpoint=params.setpoint_fixed,
+        cool_power=jnp.zeros((d.num_dcs,), jnp.float32),
+        price=params.price_off,
+        pending=PendingBuffer.zeros(d.pending_cap),
+        completed=jnp.int32(0),
+        dropped=jnp.int32(0),
+        energy_kwh=jnp.float32(0.0),
+        cost_usd=jnp.float32(0.0),
+    )
+
+
+for _cls in (JobTable, PendingBuffer, EnvState, Arrivals, Action):
+    jax.tree_util.register_dataclass(
+        _cls,
+        data_fields=[f.name for f in dataclasses.fields(_cls)],
+        meta_fields=[],
+    )

@@ -1,0 +1,75 @@
+"""Thermal physics: RC model (Eq. 3), PID cooling (Eq. 4), throttling (Eq. 6),
+diurnal ambient (Eq. 7).
+
+Anti-windup note (DESIGN.md §6): the paper defines the tracking error as
+e_t = max(0, theta - target). Used verbatim in the integral term, the
+integral can only grow, which (combined with the always-subtractive active
+cooling term in Eq. 3) drives theta to nonphysical lows once load drops. We
+keep e_t = max(0, .) for the P and D terms and integrate the *signed* error
+with a clamp I in [0, cool_max/ki] (conditional anti-windup). Cooling power
+is clamped to [0, cool_max].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def throttle_factor(theta, params):
+    """g(theta) in [g_min, 1]: linear ramp between theta_soft and theta_max (Eq. 6)."""
+    frac = (theta - params.theta_soft) / (params.theta_max - params.theta_soft)
+    g = 1.0 - (1.0 - params.g_min) * frac
+    return jnp.clip(g, params.g_min, 1.0)
+
+
+def effective_capacity(theta, params):
+    """(C,) throttled capacity c^eff = c_max * g(theta_{d(i)}) (Eq. 5)."""
+    g = throttle_factor(theta, params)
+    return params.c_max * g[params.dc_id]
+
+
+def pid_cooling(theta, setpoint, integral, prev_err, params):
+    """PID cooling power (Eq. 4) with anti-windup. Returns (phi_cool, I', e)."""
+    err = jnp.maximum(0.0, theta - setpoint)           # paper's one-sided error
+    signed = theta - setpoint                          # used for integral decay
+    integral = jnp.clip(
+        integral + signed * params.dt, 0.0, params.cool_max / params.ki
+    )
+    phi = params.kp * err + params.ki * integral + params.kd * (err - prev_err) / params.dt
+    phi = jnp.clip(phi, 0.0, params.cool_max)
+    return phi, integral, err
+
+
+def compute_heat(util, params):
+    """(D,) total compute heat per DC: sum_i alpha_i * u_i (segment sum)."""
+    num_dcs = params.r_th.shape[0]
+    return jax.ops.segment_sum(
+        params.alpha * util, params.dc_id, num_segments=num_dcs
+    )
+
+
+def rc_step(theta, theta_amb, heat, phi_cool, params):
+    """Lumped RC update (Eq. 3), explicit Euler with step dt."""
+    dtheta = (
+        params.dt / params.c_th * heat
+        - params.dt / (params.c_th * params.r_th) * (theta - theta_amb)
+        - params.dt / params.c_th * phi_cool
+    )
+    return theta + dtheta
+
+
+def ambient_temperature(t, noise, params, steps_per_day: int = 288):
+    """Diurnal sinusoid + Gaussian noise (Eq. 7). Peak mid-afternoon (~15:00)."""
+    # phase shift: sin peaks at t_day = 0.25 -> shift so peak lands at 15/24
+    phase = 2.0 * jnp.pi * (t / steps_per_day - (15.0 / 24.0 - 0.25))
+    return params.amb_base + params.amb_amp * jnp.sin(phase) + params.amb_sigma * noise
+
+
+def thermal_step(state_theta, theta_amb, setpoint, integral, prev_err, util, params):
+    """One full thermal transition. Returns (theta', I', e', phi_cool)."""
+    phi_cool, integral, err = pid_cooling(
+        state_theta, setpoint, integral, prev_err, params
+    )
+    heat = compute_heat(util, params)
+    theta = rc_step(state_theta, theta_amb, heat, phi_cool, params)
+    return theta, integral, err, phi_cool

@@ -1,0 +1,220 @@
+"""Workload model: Alibaba-2018-like trace synthesis + real-trace loader.
+
+The paper (Sec. V-C) derives workloads from the Alibaba 2018 cluster trace:
+a contiguous 24 h slice mapped to 5-minute steps, arrivals capped at 200
+jobs/step, CPU/memory demands normalized to compute units (CU) and *scaled
+to cluster capacities* to target ~65% nominal utilization, with a 40/60
+CPU/GPU affinity split synthesized (the trace has no GPU annotations).
+
+The real trace is not redistributable in this container, so
+`synthesize_trace` generates a statistically matched trace (diurnal
+arrival-rate modulation, heavy-tailed log-normal durations and demands) and
+applies the *same* capacity-scaling calibration the paper describes.
+`load_alibaba_csv` ingests the real `batch_task.csv` schema when a file is
+available, then runs through the identical normalization path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import EnvDims, EnvParams
+from repro.core.state import Arrivals
+
+NOMINAL_JOBS_PER_STEP = 200
+CPU_FRACTION = 0.4  # paper: 40/60 CPU/GPU affinity split
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """Episode workload: (T, J) arrays, row t = arrivals at step t."""
+
+    r: Any        # (T, J) f32 resource demand (CU)
+    dur: Any      # (T, J) i32 duration (steps)
+    prio: Any     # (T, J) i32 priority
+    is_gpu: Any   # (T, J) bool
+    valid: Any    # (T, J) bool
+
+    def arrivals_at(self, t) -> Arrivals:
+        return Arrivals(
+            r=self.r[t], dur=self.dur[t], prio=self.prio[t],
+            is_gpu=self.is_gpu[t], valid=self.valid[t],
+        )
+
+    @property
+    def num_steps(self) -> int:
+        return self.r.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    Trace, data_fields=["r", "dur", "prio", "is_gpu", "valid"], meta_fields=[]
+)
+
+
+def _capacity_by_type(params: EnvParams):
+    c_max = np.asarray(params.c_max)
+    is_gpu = np.asarray(params.is_gpu)
+    return float(c_max[~is_gpu].sum()), float(c_max[is_gpu].sum())
+
+
+def _calibrate_scale(r, dur, is_gpu, ref_valid, params, target_util, num_steps):
+    """Scale demands so steady-state demand = target_util * capacity per type
+    at the reference (lambda = 1) arrival rate — the paper's 'normalized to
+    CU and scaled to cluster capacities'. The scale is *estimated* on the
+    reference-mask cells but *applied* to every job of the type, so traces
+    with lambda > 1 genuinely oversubscribe the plant (RQ2)."""
+    cap_cpu, cap_gpu = _capacity_by_type(params)
+    out = r.copy()
+    for gpu, cap in ((False, cap_cpu), (True, cap_gpu)):
+        m = ref_valid & (is_gpu == gpu)
+        demand_rate = float((r[m] * dur[m]).sum()) / num_steps  # CU in service
+        if demand_rate > 0:
+            out = np.where(is_gpu == gpu, r * (target_util * cap / demand_rate), out)
+    return out
+
+
+def synthesize_trace(
+    seed: int,
+    dims: EnvDims,
+    params: EnvParams,
+    lam: float = 1.0,
+    target_util: float = 0.65,
+    gpu_fraction: float = 1.0 - CPU_FRACTION,
+    cap_per_step: int = NOMINAL_JOBS_PER_STEP,
+    dur_median_steps: float = 6.0,
+    dur_sigma: float = 0.9,
+    r_sigma: float = 0.8,
+) -> Trace:
+    """Alibaba-like synthetic trace. `lam` scales the arrival *rate* (RQ2);
+    demand calibration is always done at the lambda = 1 reference so the
+    sweep actually stresses the plant."""
+    T, J = dims.horizon, dims.max_arrivals
+    rng = np.random.default_rng(seed)
+
+    # Diurnal arrival-rate modulation (production traces peak mid-day).
+    t = np.arange(T)
+    diurnal = 1.0 + 0.25 * np.sin(2 * np.pi * (t / T - 0.45))
+    base = cap_per_step * 1.05  # cap binds near the peak, as in the paper
+    step_cap = min(J, int(round(cap_per_step * max(lam, 1.0))))
+    counts = np.minimum(
+        rng.poisson(base * diurnal * lam), step_cap
+    ).astype(np.int32)
+
+    valid = np.arange(J)[None, :] < counts[:, None]
+    dur = np.clip(
+        rng.lognormal(np.log(dur_median_steps), dur_sigma, (T, J)), 1, 96
+    ).astype(np.int32)
+    r_unit = rng.lognormal(0.0, r_sigma, (T, J)).astype(np.float32)
+    is_gpu = rng.random((T, J)) < gpu_fraction
+    prio = rng.integers(1, 4, (T, J)).astype(np.int32)
+
+    # Calibrate CU scaling at the lambda = 1 reference arrival rate.
+    ref_counts = np.minimum(
+        rng.poisson(base * diurnal), min(J, cap_per_step)
+    ).astype(np.int32)
+    ref_valid = np.arange(J)[None, :] < ref_counts[:, None]
+    scaled = _calibrate_scale(r_unit, dur, is_gpu, ref_valid, params, target_util, T)
+    # clip monster jobs to fit the smallest matching cluster
+    c_max = np.asarray(params.c_max)
+    gpu_mask = np.asarray(params.is_gpu)
+    max_cpu = 0.5 * c_max[~gpu_mask].min()
+    max_gpu = 0.5 * c_max[gpu_mask].min()
+    scaled = np.where(is_gpu, np.minimum(scaled, max_gpu), np.minimum(scaled, max_cpu))
+
+    return Trace(
+        r=jnp.asarray(np.where(valid, scaled, 0.0), jnp.float32),
+        dur=jnp.asarray(np.where(valid, dur, 0), jnp.int32),
+        prio=jnp.asarray(np.where(valid, prio, 0), jnp.int32),
+        is_gpu=jnp.asarray(valid & is_gpu),
+        valid=jnp.asarray(valid),
+    )
+
+
+def load_alibaba_csv(
+    path: str,
+    dims: EnvDims,
+    params: EnvParams,
+    target_util: float = 0.65,
+    gpu_fraction: float = 1.0 - CPU_FRACTION,
+    seed: int = 0,
+    start_offset_s: Optional[int] = None,
+) -> Trace:
+    """Load a slice of the real Alibaba 2018 `batch_task.csv`.
+
+    Expected columns (v2018 schema, headerless):
+      task_name, instance_num, job_name, task_type, status,
+      start_time, end_time, plan_cpu, plan_mem
+    """
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    T, J = dims.horizon, dims.max_arrivals
+    dt = float(params.dt)
+    rng = np.random.default_rng(seed)
+
+    start, end, cpu, inst = [], [], [], []
+    with open(path) as f:
+        for line in f:
+            parts = line.rstrip("\n").split(",")
+            if len(parts) < 9:
+                continue
+            try:
+                s, e = float(parts[5]), float(parts[6])
+                c = float(parts[7]) if parts[7] else 100.0
+                n = float(parts[1]) if parts[1] else 1.0
+            except ValueError:
+                continue
+            if e <= s:
+                continue
+            start.append(s); end.append(e); cpu.append(c); inst.append(n)
+    start = np.asarray(start); end = np.asarray(end)
+    cpu = np.asarray(cpu); inst = np.asarray(inst)
+
+    # pick a contiguous 24 h window (skip the first day: startup artifacts)
+    t0 = float(start.min()) + (start_offset_s if start_offset_s is not None else 86400.0)
+    sel = (start >= t0) & (start < t0 + T * dt)
+    start, end, cpu, inst = start[sel], end[sel], cpu[sel], inst[sel]
+
+    step = ((start - t0) // dt).astype(np.int64)
+    dur = np.maximum(1, np.ceil((end - start) / dt)).astype(np.int32)
+    r_raw = (cpu / 100.0) * np.maximum(inst, 1.0)
+
+    r = np.zeros((T, J), np.float32)
+    dmat = np.zeros((T, J), np.int32)
+    valid = np.zeros((T, J), bool)
+    fill = np.zeros(T, np.int64)
+    order = np.argsort(step, kind="stable")
+    for idx in order:
+        ts = step[idx]
+        if fill[ts] >= min(J, NOMINAL_JOBS_PER_STEP):  # paper's 200/step cap
+            continue
+        r[ts, fill[ts]] = r_raw[idx]
+        dmat[ts, fill[ts]] = dur[idx]
+        valid[ts, fill[ts]] = True
+        fill[ts] += 1
+
+    is_gpu = (rng.random((T, J)) < gpu_fraction) & valid
+    scaled = _calibrate_scale(r, dmat, is_gpu, valid, params, target_util, T)
+    prio = rng.integers(1, 4, (T, J)).astype(np.int32) * valid
+
+    return Trace(
+        r=jnp.asarray(np.where(valid, scaled, 0.0), jnp.float32),
+        dur=jnp.asarray(np.where(valid, dmat, 0), jnp.int32),
+        prio=jnp.asarray(prio, jnp.int32),
+        is_gpu=jnp.asarray(is_gpu),
+        valid=jnp.asarray(valid),
+    )
+
+
+def make_trace(
+    seed: int, dims: EnvDims, params: EnvParams, lam: float = 1.0, **kw
+) -> Trace:
+    """Trace factory: real Alibaba CSV if DCGYM_ALIBABA_CSV is set, else synthetic."""
+    path = os.environ.get("DCGYM_ALIBABA_CSV", "")
+    if path:
+        return load_alibaba_csv(path, dims, params, **kw)
+    return synthesize_trace(seed, dims, params, lam=lam, **kw)

@@ -1,0 +1,137 @@
+"""Parameter / optimizer-state / input partition specs.
+
+Maps parameter pytree paths to logical axis names, then resolves them
+against the active mesh via sharding.resolve (divisibility-aware). The same
+table drives training (FSDP+TP), serving (TP, optionally +FSDP for >8GB/chip
+models) and checkpoint resharding.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+# (regex on the flattened key path) -> logical axes for the *trailing* dims
+# (a leading "layers" stack dim is auto-detected by rank).
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"\['embed'\]$", ("vocab", "embed_p")),
+    (r"\['head'\]$", ("embed_p", "vocab")),
+    (r"\['final_norm'\]$", (None,)),
+    (r"\['mixer'\]\['wq'\]$", ("embed_p", "q_heads", "head_dim")),
+    (r"\['mixer'\]\['w[kv]'\]$", ("embed_p", "kv_heads", "head_dim")),
+    (r"\['mixer'\]\['wo'\]$", ("q_heads", "head_dim", "embed_p")),
+    (r"\['mixer'\]\['bq'\]$", ("q_heads", "head_dim")),
+    (r"\['mixer'\]\['b[kv]'\]$", ("kv_heads", "head_dim")),
+    (r"\['mixer'\]\['in_proj'\]$", ("embed_p", "inner")),
+    (r"\['mixer'\]\['out_proj'\]$", ("inner", "embed_p")),
+    (r"\['mixer'\]\['conv_w'\]$", (None, "inner")),
+    (r"\['mixer'\]\['conv_b'\]$", ("inner",)),
+    (r"\['mixer'\]\['(a_log|d_skip|dt_bias)'\]$", (None,)),
+    (r"\['mixer'\]\['norm(_g|_kv)?'\]$", (None,)),
+    (r"\['mixer'\]\['gate'\]$", ()),
+    # router replicated over model: every EP shard routes over ALL experts
+    (r"\['mlp'\]\['router'\]$", ("embed_p", None)),
+    (r"\['mlp'\]\['w[ig]'\]$", ("embed_p", "ffn")),          # dense (rank 3 w/ layers)
+    (r"\['mlp'\]\['wo'\]$", ("ffn", "embed_p")),
+    (r"\['mlp'\]\['shared_w[ig]'\]$", ("embed_p", "ffn")),
+    (r"\['mlp'\]\['shared_wo'\]$", ("ffn", "embed_p")),
+    (r"\['mlp'\]\['norm'\]$", (None,)),
+)
+
+# MoE expert tensors have an extra leading expert dim vs their dense
+# counterparts; detected by rank and prepended with "experts".
+_MOE_EXPERT_KEYS = re.compile(r"\['mlp'\]\['w[igo]'\]$")
+
+
+def logical_axes_for(key: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, key):
+            axes = tuple(axes)
+            if _MOE_EXPERT_KEYS.search(key) and ndim >= len(axes) + 2:
+                axes = ("experts",) + axes
+            # leading stacked-layers dim
+            while len(axes) < ndim:
+                axes = ("layers",) + axes
+            return axes[:ndim] if len(axes) > ndim else axes
+    return (None,) * ndim  # unknown: replicate
+
+
+def param_pspec(key: str, shape, mesh: Mesh, rules=None) -> P:
+    axes = logical_axes_for(key, len(shape))
+    return sh.resolve(axes, dims=shape, mesh=mesh, rules=rules)
+
+
+def tree_pspecs(tree, mesh: Mesh, rules=None):
+    """Pytree of PartitionSpecs matching `tree` (params or ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        specs.append(param_pspec(key, leaf.shape, mesh, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(tree, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_pspecs(tree, mesh, rules),
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def opt_state_shardings(param_shardings, mesh: Mesh):
+    """m/v shard exactly like their parameters (ZeRO-style); step replicated."""
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_pspec(ndim: int, mesh: Mesh, rules=None) -> P:
+    """Inputs: batch on ("pod","data"), everything else replicated."""
+    axes = ("batch",) + (None,) * (ndim - 1)
+    return sh.resolve(axes, mesh=mesh, rules=rules)
+
+
+def batch_shardings(batch_tree, mesh: Mesh, rules=None):
+    def one(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh,
+            sh.resolve(
+                ("batch",) + (None,) * (x.ndim - 1),
+                dims=x.shape, mesh=mesh, rules=rules,
+            ),
+        )
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(model_cfg, caches, mesh: Mesh, rules=None):
+    """Decode caches: (layers, batch, kv_seq, kv_heads, head_dim) for attn,
+    (layers, batch, *) for SSM states."""
+
+    def spec_of(path, leaf):
+        key = jax.tree_util.keystr(path)
+        nd = leaf.ndim
+        if re.search(r"\['(k|v)'\]$", key):
+            axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        elif re.search(r"\['ssm'\]$", key):
+            axes = ("layers", "batch", "inner", None, None)
+        elif re.search(r"\['conv'\]$", key):
+            axes = ("layers", "batch", None, "inner")
+        else:
+            axes = (None,) * nd
+        return NamedSharding(mesh, sh.resolve(axes[:nd], dims=leaf.shape, mesh=mesh, rules=rules))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_of(p, l) for p, l in flat]
+    )

@@ -1,0 +1,90 @@
+"""Pipeline parallelism: GPipe-style microbatch pipeline over a mesh axis,
+built on shard_map + ppermute (the jax-native rendition of 1F1B's fill/
+drain schedule — no torch.distributed emulation).
+
+Layers are stacked (n_stages, layers_per_stage, ...) and sharded over the
+`pipe` axis so each device holds one stage. Microbatches enter at stage 0;
+activations flow stage-to-stage over collective_permute each tick; outputs
+drain from the last stage. Total ticks = n_micro + n_stages - 1 (bubble
+fraction = (S-1)/(M+S-1), the GPipe bound).
+
+This is the deployment answer for a third mesh dimension (e.g. DCN-linked
+pods as stages when DP-over-pod is memory-bound); the production meshes in
+launch/mesh.py default to DP over the pod axis (DESIGN.md §9), so this
+module is exercised by tests and available as a config choice rather than
+wired into the default dry-run.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe(
+    stage_fn: Callable,
+    stage_params,
+    microbatches,
+    mesh: Mesh,
+    axis: str = "pipe",
+):
+    """Run `microbatches` (M, mb, ...) through a pipeline of stages.
+
+    stage_fn(params_for_stage, x) -> y, where params_for_stage is
+    `stage_params` with the leading stage dim removed. stage_params leaves
+    must have leading dim == mesh.shape[axis]. Returns (M, mb, ...) outputs
+    (as produced by the final stage).
+    """
+    n_stages = mesh.shape[axis]
+    m = microbatches.shape[0]
+    ticks = m + n_stages - 1
+
+    def body(params_loc, micro_loc):
+        # params_loc leaves: (1, L, ...) -> strip the stage dim
+        params = jax.tree.map(lambda a: a[0], params_loc)
+        micro = micro_loc  # (M, mb, ...) replicated along the pipe axis
+        stage = jax.lax.axis_index(axis)
+        mb_shape = micro.shape[1:]
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            state = carry                          # activation entering this stage
+            inject = micro[jnp.clip(t, 0, m - 1)]
+            x_in = jnp.where(stage == 0, inject, state)
+            y = stage_fn(params, x_in)
+            # collect at the last stage when its output is for a real
+            # microbatch: tick t carries microbatch (t - (S-1)) there
+            out = jnp.where(stage == n_stages - 1, y, jnp.zeros_like(y))
+            state_next = jax.lax.ppermute(y, axis, perm)
+            return state_next, out
+
+        zeros = jnp.zeros(mb_shape, micro.dtype)
+        _, outs = jax.lax.scan(tick, zeros, jnp.arange(ticks))
+        # outs: (ticks, mb, ...) — valid rows are ticks S-1 .. S-1+M-1 on the
+        # last stage; psum broadcasts them to every member of the axis
+        outs = jax.lax.psum(outs, axis)
+        return jax.lax.dynamic_slice_in_dim(outs, n_stages - 1, m, axis=0)
+
+    in_specs = (
+        jax.tree.map(lambda _: P(axis), stage_params),
+        P(),                                        # microbatches replicated
+    )
+    return shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False
+    )(stage_params, microbatches)
+
+
+def pipeline_stage_mlp(params, x):
+    """Reference stage: a stack of SwiGLU MLP layers (scan over the local
+    stage's layers). params leaves: (L, ...)."""
+
+    def layer(x, p):
+        h = jnp.einsum("bd,df->bf", x, p["wi"])
+        g = jnp.einsum("bd,df->bf", x, p["wg"])
+        return x + jnp.einsum("bf,fd->bd", jax.nn.silu(g) * h, p["wo"]), None
+
+    y, _ = jax.lax.scan(layer, x, params)
+    return y

@@ -1,0 +1,142 @@
+"""Logical-axis sharding: rules table + divisibility-aware resolution.
+
+Model code names array dimensions with *logical* axes ("batch", "embed",
+"q_heads", ...). A rules table maps logical axes to mesh axes; `resolve`
+turns a logical spec into a PartitionSpec, replicating any dimension whose
+mesh assignment is disallowed for that tensor (e.g. kv_heads=4 on a 16-way
+model axis would pad 4x — we replicate instead; q_heads=28 on 16 pads only
+32/28 = 14% and stays sharded).
+
+The active mesh/rules are process-global context (set by the launcher /
+dryrun / trainer); with no mesh set, `constrain` is a no-op so all model
+code runs unchanged on a single device (smoke tests).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),      # resolved to existing mesh axes only
+    "seq": None,
+    "kv_seq": "data",              # SP for long-context decode (batch=1 cells)
+    "embed": None,                 # activations: embed replicated
+    "embed_p": "data",             # params: FSDP over data
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",           # replicated when < axis size (see resolve)
+    "head_dim": None,
+    "ffn": "model",
+    "experts": "model",
+    "capacity": "data",
+    "inner": "model",              # mamba d_inner / heads
+    "ssm_state": None,
+    "conv": None,
+    "img_tokens": None,
+    "layers": None,
+}
+
+_CTX = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES, **(rules or {}))
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_CTX, "mesh", None)
+
+
+def get_rules() -> dict:
+    return getattr(_CTX, "rules", DEFAULT_RULES)
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    prev_mesh, prev_rules = get_mesh(), getattr(_CTX, "rules", None)
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh = prev_mesh
+        _CTX.rules = prev_rules or DEFAULT_RULES
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def resolve(
+    logical: Sequence[Optional[str]],
+    dims: Optional[Sequence[int]] = None,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[dict] = None,
+    max_pad_frac: float = 0.25,
+) -> P:
+    """Logical spec -> PartitionSpec under the active mesh.
+
+    If `dims` is given, a dimension keeps its mesh axis only when sharding
+    wastes at most `max_pad_frac` via padding (GSPMD pads non-divisible
+    dims); otherwise it is replicated. Mesh axes not present in the mesh
+    are dropped (so "pod" rules vanish on single-pod meshes).
+    """
+    mesh = mesh or get_mesh()
+    rules = rules or get_rules()
+    out = []
+    used: set = set()
+    for i, name in enumerate(logical):
+        axis = rules.get(name) if name else None
+        if axis is None or mesh is None:
+            out.append(None)
+            continue
+        if isinstance(axis, (tuple, list)):
+            axis = tuple(a for a in axis if a in mesh.shape and a not in used)
+            axis = axis if axis else None
+        elif axis not in mesh.shape or axis in used:
+            axis = None
+        if axis is None:
+            out.append(None)
+            continue
+        if dims is not None:
+            n = _axis_size(mesh, axis)
+            d = dims[i]
+            if d < n:
+                # would pad >= 2x: replicate instead
+                out.append(None)
+                continue
+            pad = (-d) % n
+            if pad / max(d + pad, 1) > max_pad_frac:
+                out.append(None)
+                continue
+        out.append(axis)
+        used.update(axis if isinstance(axis, tuple) else (axis,))
+    return P(*out)
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = resolve(logical, dims=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical: Sequence[Optional[str]], dims=None) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(logical, dims=dims, mesh=mesh))

@@ -1,0 +1,7 @@
+"""Public jit'd wrappers for the Pallas kernels (interpret-mode on CPU,
+compiled on TPU). Import from here, not from the kernel modules."""
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_update import ssm_update
+from repro.kernels.thermal_rollout import thermal_rollout
+
+__all__ = ["flash_attention", "ssm_update", "thermal_rollout"]

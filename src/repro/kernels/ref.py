@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernel
+tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def thermal_rollout_ref(theta0, heat, amb, target, gain, cool_max, a, b):
+    """Batched RC + proxy-cooling + throttle rollout (the H-MPC inner loop).
+
+    theta0 (B, D); heat (B, H, D) raw compute heat at full capacity;
+    amb (H, D); target (B, H, D); gain/cool_max (D,); a = dt/C (D,);
+    b = dt/(C*R) (D,). Throttle g(theta) scales the heat each step
+    (hotter -> throttled capacity -> less heat), matching the simulator's
+    Eq.(3)+(4 proxy)+(6) composition. Returns (thetas (B,H,D), cool (B,H,D)).
+    """
+    theta_soft, theta_max, g_min = 32.0, 35.0, 0.3
+
+    def throttle(th):
+        frac = (th - theta_soft) / (theta_max - theta_soft)
+        return jnp.clip(1.0 - (1.0 - g_min) * frac, g_min, 1.0)
+
+    def step(theta, xs):
+        h, am, tg = xs
+        g = throttle(theta)
+        cool = jnp.clip(gain * (theta - tg), 0.0, cool_max)
+        theta = theta + a * (h * g) - b * (theta - am) - a * cool
+        return theta, (theta, cool)
+
+    _, (thetas, cools) = jax.lax.scan(
+        step, theta0,
+        (jnp.moveaxis(heat, 1, 0), amb, jnp.moveaxis(target, 1, 0)),
+    )
+    return jnp.moveaxis(thetas, 0, 1), jnp.moveaxis(cools, 0, 1)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q (b,s,h,dh), k/v (b,t,h,dh) -> (b,s,h,dh). f32 softmax."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        s, t = q.shape[1], k.shape[1]
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+
+
+def ssm_update_ref(state, x, dt, a_log, b_vec, c_vec, d_skip):
+    """Mamba-2 selective-state decode update (oracle for kernels.ssm_update).
+
+    state (b,h,p,n) f32; x (b,h,p); dt (b,h); a_log (h,); b_vec/c_vec (b,n);
+    d_skip (h,). Returns (y (b,h,p) f32, state' (b,h,p,n) f32)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32) * a)
+    dtx = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    new_state = state * da[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", dtx, b_vec.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_vec.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    return y, new_state

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: Mamba-2 selective-state decode update.
+
+The long_500k serve cells are bound by streaming the recurrent state
+(b, heads, headdim, d_state) once per token. The jnp oracle materializes
+dtx ⊗ B and the decayed state as separate HBM tensors; this kernel fuses
+decay + rank-1 update + C-contraction in VMEM per (batch, head-block) so
+the state is read and written exactly once.
+
+Grid: (B, H / BLOCK_H). Lane dim = d_state (128 on both SSM archs),
+sublane = headdim — (p, n) tiles are (64..128, 128), MXU/VPU aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(state_ref, x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref,
+            y_ref, newstate_ref):
+    state = state_ref[0]                       # (bh, p, n) f32
+    x = x_ref[0].astype(jnp.float32)           # (bh, p)
+    dt = dt_ref[0].astype(jnp.float32)         # (bh,)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))   # (bh,)
+    bvec = b_ref[0].astype(jnp.float32)        # (n,)
+    cvec = c_ref[0].astype(jnp.float32)        # (n,)
+    dskip = dskip_ref[0].astype(jnp.float32)   # (bh,)
+
+    da = jnp.exp(dt * a)                       # (bh,)
+    dtx = x * dt[:, None]                      # (bh, p)
+    new_state = state * da[:, None, None] + dtx[:, :, None] * bvec[None, None, :]
+    y = (new_state * cvec[None, None, :]).sum(-1)    # (bh, p)
+    y = y + dskip[:, None] * x
+    newstate_ref[0] = new_state
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def ssm_update(state, x, dt, a_log, b_vec, c_vec, d_skip,
+               block_h: int = 8, interpret: bool | None = None):
+    """See kernels.ref.ssm_update_ref. state (b,h,p,n) f32; x (b,h,p);
+    dt (b,h); a_log (h,); b_vec/c_vec (b,n); d_skip (h,)."""
+    b, h, p, n = state.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (b, pl.cdiv(h, block_h))
+    alog_b = jnp.broadcast_to(a_log, (b, h))
+    dskip_b = jnp.broadcast_to(d_skip, (b, h))
+    y, new_state = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_h, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_h, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_h), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_h), lambda i, j: (i, j)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_h), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_h, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_h, p, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(state, x, dt, alog_b, b_vec, c_vec, dskip_b)
+    return y, new_state

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: batched thermal rollout (the H-MPC inner loop).
+
+The H-MPC stage-1 solve evaluates the RC + cooling-proxy + throttle
+recurrence for MANY candidate plans (B = candidates x Monte-Carlo seeds) x
+H horizon steps x D datacenters. The pure-jnp scan round-trips the (B, D)
+state through HBM every step; this kernel tiles candidates into VMEM
+blocks and runs the whole horizon on-chip, streaming only the per-step
+(heat, target) slabs.
+
+Grid: (B / BLOCK_B,). Block shapes put the lane dimension on D (padded to
+128) and the sublane dimension on candidates — the recurrence is element-
+wise over (B, D), so the VPU runs full (8, 128) tiles every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+THETA_SOFT, THETA_MAX, G_MIN = 32.0, 35.0, 0.3
+
+
+def _kernel(theta0_ref, heat_ref, amb_ref, target_ref, gain_ref, coolmax_ref,
+            a_ref, b_ref, thetas_ref, cools_ref, *, horizon: int):
+    theta = theta0_ref[...]                     # (BB, D)
+    gain = gain_ref[...]                        # (1, D)
+    cool_max = coolmax_ref[...]
+    a = a_ref[...]
+    b = b_ref[...]
+
+    def body(t, theta):
+        h = heat_ref[:, t, :]                   # (BB, D)
+        am = amb_ref[0, t, :]                   # (D,)
+        tg = target_ref[:, t, :]
+        frac = (theta - THETA_SOFT) / (THETA_MAX - THETA_SOFT)
+        g = jnp.clip(1.0 - (1.0 - G_MIN) * frac, G_MIN, 1.0)
+        cool = jnp.clip(gain * (theta - tg), 0.0, cool_max)
+        theta = theta + a * (h * g) - b * (theta - am[None, :]) - a * cool
+        thetas_ref[:, t, :] = theta
+        cools_ref[:, t, :] = cool
+        return theta
+
+    jax.lax.fori_loop(0, horizon, body, theta)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def thermal_rollout(theta0, heat, amb, target, gain, cool_max, a, b,
+                    block_b: int = 8):
+    """See kernels.ref.thermal_rollout_ref for semantics/shapes."""
+    bsz, horizon, d = heat.shape
+    f32 = jnp.float32
+    grid = (pl.cdiv(bsz, block_b),)
+    out_shape = (
+        jax.ShapeDtypeStruct((bsz, horizon, d), f32),
+        jax.ShapeDtypeStruct((bsz, horizon, d), f32),
+    )
+    kern = functools.partial(_kernel, horizon=horizon)
+    thetas, cools = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, horizon, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, horizon, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((block_b, horizon, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, horizon, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, horizon, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=_interpret_default(),
+    )(
+        theta0.astype(f32),
+        heat.astype(f32),
+        amb.astype(f32)[None],
+        target.astype(f32),
+        gain.astype(f32)[None],
+        cool_max.astype(f32)[None],
+        a.astype(f32)[None],
+        b.astype(f32)[None],
+    )
+    return thetas, cools
+
+
+def _interpret_default() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, print memory/cost analyses, and record the
+roofline terms (per DESIGN.md §10) to JSON.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 placeholder host
+devices. This module is the ONLY place that flag is set.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze_hlo
+from repro.configs import ARCH_IDS, ShapeCell, get_config, shapes_for
+from repro.distributed import partitioning as pt
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import build_model
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.train_step import make_train_step
+
+# TPU v5e constants (roofline denominators)
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+SERVE_FSDP_THRESHOLD = 8e9  # bytes/chip of bf16 params above which serving
+                            # keeps FSDP on the data axis (else pure TP)
+
+
+def rules_for(cfg, cell: ShapeCell, mesh):
+    """Per-cell logical-rule overrides (DESIGN.md §9)."""
+    rules = {}
+    if cell.kind in ("prefill", "decode"):
+        # serving: pure TP unless params don't fit replicated over data
+        model_axis = mesh.shape.get("model", 1)
+        param_bytes = 2 * cfg.param_count() / model_axis
+        if param_bytes < SERVE_FSDP_THRESHOLD:
+            rules["embed_p"] = None
+    if cell.kind == "decode":
+        # shard the KV cache along sequence (flash-decoding style): batch
+        # takes (pod, data); kv_seq picks up whatever remains (model; plus
+        # data too when batch=1 as in long_500k). Projections stay TP on
+        # (padded) heads; the 1-token q replicates before the cache matmul
+        # (see layers.attention decode branch).
+        rules["kv_seq"] = ("data", "model")
+    return rules
+
+
+def build_cell(arch: str, cell: ShapeCell, mesh, opt_dtype="bfloat16"):
+    """Returns (fn, args tuple of specs, in_shardings, out_shardings)."""
+    model_axis = mesh.shape.get("model", 1)
+    cfg = get_config(arch).scaled(pad_heads_multiple=model_axis)
+    model = build_model(cfg)
+    rules = rules_for(cfg, cell, mesh)
+    specs = input_specs(arch, cell, cfg=cfg)
+    param_specs = model.param_specs()
+
+    with sh.use_mesh(mesh, rules):
+        if cell.kind == "train":
+            opt_cfg = OptConfig(state_dtype=opt_dtype)
+            # 4 microbatches: bounds the saved-residual footprint (the scan
+            # over superblocks stacks one (B_local, S, D) residual per layer)
+            step = make_train_step(model, opt_cfg, num_microbatches=4)
+            opt_specs = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), param_specs)
+            p_sh = pt.tree_shardings(param_specs, mesh, rules=sh.get_rules())
+            o_sh = {
+                "m": pt.tree_shardings(param_specs, mesh, rules=sh.get_rules()),
+                "v": pt.tree_shardings(param_specs, mesh, rules=sh.get_rules()),
+                "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            }
+            b_sh = pt.batch_shardings(specs["batch"], mesh, rules=sh.get_rules())
+            args = (param_specs, opt_specs, specs["batch"])
+            in_sh = (p_sh, o_sh, b_sh)
+            out_sh = (p_sh, o_sh, None)
+            return step, args, in_sh, out_sh, cfg
+
+        # serving params in bf16
+        p16 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s,
+            param_specs,
+        )
+        p_sh = pt.tree_shardings(p16, mesh, rules=sh.get_rules())
+        if cell.kind == "prefill":
+            step = make_prefill_step(model)
+            b_sh = pt.batch_shardings(specs["batch"], mesh, rules=sh.get_rules())
+            args = (p16, specs["batch"])
+            return step, args, (p_sh, b_sh), None, cfg
+
+        step = make_decode_step(model)
+        c_sh = pt.cache_shardings(cfg, specs["caches"], mesh, rules=sh.get_rules())
+        b_sh = pt.batch_shardings(specs["batch"], mesh, rules=sh.get_rules())
+        args = (p16, specs["caches"], specs["batch"])
+        return step, args, (p_sh, c_sh, b_sh), (None, None, c_sh), cfg
+
+
+def run_cell(arch: str, cell: ShapeCell, multi_pod: bool, verbose=True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cfg = get_config(arch)
+    rules = rules_for(cfg, cell, mesh)
+    t0 = time.time()
+    step, args, in_sh, out_sh, cfg = build_cell(arch, cell, mesh)
+    with sh.use_mesh(mesh, rules):
+        jit_kw = {"in_shardings": in_sh}
+        if out_sh is not None:
+            jit_kw["out_shardings"] = out_sh
+        lowered = jax.jit(step, **jit_kw).lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    mc = analyze_hlo(hlo_text)
+    hlo_len = len(hlo_text)
+    del hlo_text, lowered, compiled
+    gc.collect()
+
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    model_flops_6nd = 6.0 * n_active * tokens
+    useful = model_flops_6nd if cell.kind == "train" else 2.0 * n_active * tokens
+
+    flops_dev = mc.flops
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = mc.mem_bytes / HBM_BW
+    coll_s = mc.coll_total / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    bottleneck = max(terms, key=terms.get)
+
+    rec = {
+        "arch": arch,
+        "shape": cell.name,
+        "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        "params": cfg.param_count(),
+        "active_params": n_active,
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "memory": {
+            "argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+            "peak_gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 1e9,
+        },
+        "xla_cost": {"flops": ca.get("flops", 0.0), "bytes": ca.get("bytes accessed", 0.0)},
+        "per_device": {
+            "flops": flops_dev,
+            "hbm_bytes": mc.mem_bytes,
+            "collective_bytes": dict(mc.coll_bytes),
+            "collective_total": mc.coll_total,
+        },
+        "roofline": {
+            **terms,
+            "bottleneck": bottleneck,
+            "step_time_lb_s": max(terms.values()),
+            "model_flops_6nd": model_flops_6nd,
+            "useful_flops": useful,
+            "useful_ratio": useful / max(flops_dev * chips, 1.0),
+            "roofline_frac": min(1.0, useful / chips / PEAK_FLOPS / max(max(terms.values()), 1e-12)),
+        },
+        "trip_counts": mc.trip_counts,
+        "hlo_chars": hlo_len,
+    }
+    if verbose:
+        r = rec["roofline"]
+        print(
+            f"[{rec['mesh']}] {arch:26s} {cell.name:12s} compile={rec['compile_s']:6.1f}s "
+            f"peak/dev={rec['memory']['peak_gb']:7.2f}GB "
+            f"compute={compute_s*1e3:8.2f}ms mem={memory_s*1e3:8.2f}ms coll={coll_s*1e3:8.2f}ms "
+            f"-> {bottleneck[:-2]:10s} frac={r['roofline_frac']:.3f}",
+            flush=True,
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for cell in shapes_for(arch):
+            if args.shape != "all" and cell.name not in args.shape.split(","):
+                continue
+            for mp in meshes:
+                tag = f"{arch}_{cell.name}_{'multipod' if mp else 'pod'}"
+                try:
+                    rec = run_cell(arch, cell, multi_pod=mp)
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    print(f"\ndone: {len(failures)} failures")
+    for t, e in failures:
+        print("  FAIL", t, e[:200])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

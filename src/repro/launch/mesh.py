@@ -1,0 +1,42 @@
+"""Production meshes (TPU v5e target: 256 chips/pod, 16x16 ICI torus).
+
+single-pod:  (16, 16)    = ("data", "model")
+multi-pod:   (2, 16, 16) = ("pod", "data", "model")   # pod axis over DCN
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run under "
+            "launch/dryrun.py which forces 512 host platform devices"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Tiny mesh for unit tests (requires >= data*model local devices)."""
+    import numpy as np
+
+    devices = jax.devices()
+    n = data * model
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(data, model), ("data", "model")
+    )

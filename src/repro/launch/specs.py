@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape) cell
+— weak-type-correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell, get_config
+from repro.configs.base import ModelConfig
+from repro.models.transformer import cache_specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b, s = cell.global_batch, cell.seq_len
+    out: Dict[str, Any] = {"labels": _sds((b, s), jnp.int32)}
+    if cfg.embed_input:
+        out["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        out["img_embeds"] = _sds((b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b, s = cell.global_batch, cell.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.embed_input:
+        out["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        out["img_embeds"] = _sds((b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b = cell.global_batch
+    out: Dict[str, Any] = {"pos": _sds((), jnp.int32)}
+    if cfg.embed_input:
+        out["embeds"] = _sds((b, cfg.d_model), jnp.bfloat16)
+    else:
+        out["token"] = _sds((b,), jnp.int32)
+    return out
+
+
+def decode_cache_specs(cfg: ModelConfig, cell: ShapeCell):
+    return cache_specs(cfg, cell.global_batch, cell.seq_len)
+
+
+def input_specs(arch: str, cell: ShapeCell, cfg: ModelConfig = None) -> Dict[str, Any]:
+    """All model inputs for this cell (excluding params/opt state).
+
+    Pass `cfg` to use a deployment-adjusted config (e.g. padded heads);
+    defaults to the registry config."""
+    cfg = cfg or get_config(arch)
+    if cell.kind == "train":
+        return {"batch": train_batch_specs(cfg, cell)}
+    if cell.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, cell)}
+    if cell.kind == "decode":
+        return {
+            "batch": decode_batch_specs(cfg, cell),
+            "caches": decode_cache_specs(cfg, cell),
+        }
+    raise ValueError(cell.kind)

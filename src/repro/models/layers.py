@@ -1,0 +1,217 @@
+"""Shared transformer layers: RMSNorm, RoPE, (cross-)attention with GQA +
+KV cache, SwiGLU MLP. All functions are pure; activation shardings are
+logical-axis constraints (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * weight).astype(dt)
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (...,) -> (cos, sin) each (..., head_dim/2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (b, s, h, dh); cos/sin (s, dh/2) or (b, s, dh/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (s, half) -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (b, s, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def _project_qkv(x, p, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _expand_kv(k, n_heads: int):
+    """(b, t, kv, dh) -> (b, t, h, dh), repeating kv heads. Constrained so
+    that with q-heads TP-sharded each shard materializes only its own
+    slice (a per-shard gather, not an 8x blowup)."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    k = jnp.repeat(k, n_heads // kv, axis=2)
+    return constrain(k, "batch", "kv_seq", "q_heads", "head_dim")
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0):
+    """q (b,s,h,dh), k/v (b,t,h,dh) -> (b,s,h,dh). Softmax in f32.
+    Used for train/prefill where heads are TP-sharded (expand K/V first)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        s, t = q.shape[1], k.shape[1]
+        qi = q_offset + jnp.arange(s)[:, None]
+        ki = jnp.arange(t)[None, :]
+        scores = jnp.where(ki <= qi, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", probs.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_grouped(q, k, v, pos):
+    """Decode attention in grouped (unexpanded-KV) form: q (b,1,h,dh),
+    k/v = full caches (b,t,kv,dh). Heads stay unsharded (q is one token);
+    the cache's sequence axis carries the sharding (flash-decoding)."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bsngd,btnd->bnsgt", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    t = k.shape[1]
+    mask = (jnp.arange(t) <= pos)[None, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnsgt,btnd->bsngd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, dh)
+
+
+def _sdpa_blockwise(q, k, v, causal: bool, block: int):
+    """Blockwise causal attention: query block i attends keys [0, (i+1)*block)
+    — peak live scores are O(S*block) instead of O(S^2), and the causal
+    upper triangle of never-attended blocks is skipped (flash-attention's
+    work-skipping realized at the XLA level; the Pallas kernel is the TPU
+    fast path, this is the portable one)."""
+    s = q.shape[1]
+    nq = (s + block - 1) // block
+    outs = []
+    for i in range(nq):
+        lo, hi = i * block, min((i + 1) * block, s)
+        qi = q[:, lo:hi]
+        end = hi if causal else s
+        outs.append(_sdpa(qi, k[:, :end], v[:, :end], causal=causal, q_offset=lo))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def attention(
+    x,
+    p,
+    cfg: ModelConfig,
+    positions,
+    cache: Optional[dict] = None,
+    pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Self-attention. Three modes:
+      train:   cache=None            -> full causal attention, no cache out
+      prefill: cache={} (empty dict) -> causal attention, returns filled cache
+      decode:  cache with k/v, pos   -> one-token step against the cache
+    """
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    q, k, v = _project_qkv(h, p, cfg)
+    q = constrain(q, "batch", "seq", "q_heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    decode = cache is not None and "k" in cache
+
+    if decode:
+        if cfg.use_rope:
+            cos, sin = rope_angles(
+                pos.astype(jnp.float32)[None], cfg.head_dim, cfg.rope_theta
+            )
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+        use_k, use_v = ck, cv
+        if ck.dtype != jnp.dtype(cfg.compute_dtype):  # fp8 cache: dequant at use
+            use_k = ck.astype(cfg.compute_dtype)
+            use_v = cv.astype(cfg.compute_dtype)
+        # flash-decoding: the 1-token q is tiny — replicate it over the model
+        # axis so attention splits along the (model-sharded) cache sequence;
+        # softmax over the sharded key axis lowers to partial-softmax + AR.
+        q = constrain(q, "batch", "seq", None, None)
+        out = _sdpa_grouped(q, use_k, use_v, pos)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        if cfg.use_rope:
+            cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        kk = _expand_kv(k, cfg.n_heads_eff)
+        vv = _expand_kv(v, cfg.n_heads_eff)
+        if q.shape[1] > cfg.attn_block:
+            out = _sdpa_blockwise(q, kk, vv, causal=True, block=cfg.attn_block)
+        else:
+            out = _sdpa(q, kk, vv, causal=True)
+        new_cache = None
+        if cache is not None:  # prefill: persist k/v
+            kvdt = jnp.dtype(cfg.kv_cache_dtype)
+            new_cache = {"k": k.astype(kvdt), "v": v.astype(kvdt)}
+
+    out = constrain(out, "batch", "seq", "q_heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x + constrain(y, "batch", "seq", "embed"), new_cache
+
+
+def cross_attention(
+    x,
+    p,
+    cfg: ModelConfig,
+    img_embeds: Optional[jnp.ndarray] = None,
+    cache: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Cross-attention to (stubbed) image patch embeddings. KV is computed
+    once from `img_embeds` (prefill/train) and cached for decode; a learned
+    tanh gate (zero-init) matches the llama-3.2-vision block structure."""
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    decode = cache is not None and "k" in cache
+    if decode:
+        k, v = cache["k"], cache["v"]
+        new_cache = {"k": k, "v": v}
+    else:
+        kv_in = rms_norm(img_embeds, p["norm_kv"], cfg.rms_eps)
+        k = jnp.einsum("bsd,dhk->bshk", kv_in, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_in, p["wv"])
+        new_cache = {"k": k, "v": v} if cache is not None else None
+    out = _sdpa(
+        q, _expand_kv(k, cfg.n_heads_eff), _expand_kv(v, cfg.n_heads_eff),
+        causal=False,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    gate = jnp.tanh(p["gate"]).astype(y.dtype)
+    return x + constrain(gate * y, "batch", "seq", "embed"), new_cache
+
+
+def mlp(x, p, cfg: ModelConfig, d_ff: Optional[int] = None):
+    """Pre-norm SwiGLU MLP with residual."""
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    up = jnp.einsum("bsd,df->bsf", h, p["wi"])
+    gate = jnp.einsum("bsd,df->bsf", h, p["wg"])
+    act = jax.nn.silu(gate) * up
+    act = constrain(act, "batch", "seq", "ffn")
+    y = jnp.einsum("bsf,fd->bsd", act, p["wo"])
+    return x + constrain(y, "batch", "seq", "embed")

@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD, state-space duality) mixer: chunked scan for train/prefill,
+O(1)-state recurrent step for decode.
+
+Layout follows the Mamba-2 block: in_proj -> [z | x | B | C | dt], short
+depthwise causal conv over (x,B,C), SSD core, gated RMSNorm, out_proj.
+Single B/C group (ngroups=1), A scalar per head. The chunked algorithm is
+the standard 4-term SSD decomposition (intra-chunk quadratic + chunk-state
+accumulation + inter-chunk recurrence + state-to-output), which keeps the
+materialized state at (n_chunks, heads, headdim, d_state) instead of
+(seqlen, ...) — this is what makes `long_500k` tractable.
+
+`kernels/ssm_update.py` provides the Pallas decode kernel; the jnp path
+here is the oracle and the default on CPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import rms_norm
+
+
+def _gated_rms_norm(x, z, weight, eps):
+    """Mamba-2's norm: RMSNorm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z), weight, eps)
+
+
+def _segsum(x):
+    """x (..., l) -> (..., l, l) with out[i,j] = sum_{j < k <= i} x[k];
+    -inf above the diagonal (causal decay matrix in log space)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _conv1d(x, w, b, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x (b, s, ch), w (k, ch), b (ch,).
+    With cache (b, k-1, ch): single/short-step mode using cached history."""
+    k = w.shape[0]
+    if cache is not None:
+        ctx = jnp.concatenate([cache, x], axis=1)            # (b, k-1+s, ch)
+        new_cache = ctx[:, -(k - 1):, :]
+        x_pad = ctx
+    else:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_cache = x_pad[:, -(k - 1):, :]
+    out = jax.lax.conv_general_dilated(
+        x_pad,
+        w[:, None, :],                                       # (k, 1, ch)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return jax.nn.silu(out + b), new_cache
+
+
+def _split_proj(h, cfg: ModelConfig):
+    di, n, nh = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(h, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt  # xbc = [x | B | C] fed through the conv
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """SSD core. x (b,s,h,p), dt (b,s,h) softplus-ed, a_log (h,),
+    b_mat/c_mat (b,s,n). Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    bsz, s_orig, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-s_orig) % chunk
+    if pad:  # pad with dt=0 steps: decay=1, zero input -> state unchanged
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, b_mat, c_mat = map(zpad, (x, dt, b_mat, c_mat))
+    s = s_orig + pad
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (h,) negative
+    dta = dt.astype(jnp.float32) * a                         # (b,s,h) log-decay
+    dtx = x * dt[..., None].astype(x.dtype)                  # dt-weighted input
+
+    # chunked views
+    r = lambda t, tail: t.reshape((bsz, nc, chunk) + tail)
+    xc = r(dtx, (h, p))
+    dtac = r(dta, (h,)).transpose(0, 1, 3, 2)                # (b,nc,h,l)
+    bc = r(b_mat, (n,))
+    cc = r(c_mat, (n,))
+
+    # 1) intra-chunk (quadratic in chunk length)
+    L = jnp.exp(_segsum(dtac))                               # (b,nc,h,l,l)
+    scores = jnp.einsum("bcln,bcmn->bclm", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))              # (b,nc,l,m)
+    y_intra = jnp.einsum(
+        "bclm,bchlm,bcmhp->bclhp", scores, L, xc.astype(jnp.float32)
+    )
+
+    # 2) per-chunk state contribution: decay-to-chunk-end * B ⊗ dtx
+    cum = jnp.cumsum(dtac, axis=-1)                          # (b,nc,h,l)
+    decay_end = jnp.exp(cum[..., -1:] - cum)                 # (b,nc,h,l)
+    states = jnp.einsum(
+        "bchl,bcln,bclhp->bchpn", decay_end, bc.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )                                                        # (b,nc,h,p,n)
+
+    # 3) inter-chunk recurrence over nc (sequential scan, tiny trip count)
+    chunk_decay = jnp.exp(cum[..., -1])                      # (b,nc,h)
+
+    def body(carry, xs):
+        st_in = carry                                        # (b,h,p,n)
+        st_c, dec = xs                                       # (b,h,p,n),(b,h)
+        st_out = st_in * dec[..., None, None] + st_c
+        return st_out, st_in                                 # emit state *before* chunk
+
+    st0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+           else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        body,
+        st0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,h,p,n)
+
+    # 4) inter-chunk output: C · (decayed incoming state)
+    decay_in = jnp.exp(cum)                                  # (b,nc,h,l)
+    y_inter = jnp.einsum(
+        "bcln,bchl,bchpn->bclhp", cc.astype(jnp.float32), decay_in, prev_states
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :s_orig], final_state
+
+
+def ssm_decode_step(state, x, dt, a_log, b_vec, c_vec, d_skip):
+    """Recurrent step: state (b,h,p,n), x (b,h,p), dt (b,h), b/c (b,n).
+    Returns (y (b,h,p), state'). Pure-jnp oracle for kernels/ssm_update."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32) * a)                 # (b,h)
+    dtx = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    state = state * da[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", dtx, b_vec.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, c_vec.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    return y, state
+
+
+def mamba_mixer(
+    x,
+    p,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full Mamba-2 block with residual. Modes as in layers.attention:
+    train (cache None) / prefill (cache {}) / decode (cache populated)."""
+    bsz, s, d = x.shape
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_heads, cfg.ssm_headdim
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    proj = constrain(proj, "batch", "seq", "inner")
+    z, xbc, dt = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,s,nh)
+
+    decode = cache is not None and "conv" in cache
+    if decode:
+        xbc, conv_cache = _conv1d(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+        xs, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+        xh = xs.reshape(bsz, nh, hp)
+        if use_pallas:
+            from repro.kernels.ops import ssm_update
+
+            y, state = ssm_update(
+                cache["ssm"], xh, dt[:, 0], p["a_log"], b_mat[:, 0], c_mat[:, 0], p["d_skip"]
+            )
+        else:
+            y, state = ssm_decode_step(
+                cache["ssm"], xh, dt[:, 0], p["a_log"], b_mat[:, 0], c_mat[:, 0], p["d_skip"]
+            )
+        y = y.reshape(bsz, 1, di)
+        new_cache = {"conv": conv_cache, "ssm": state}
+    else:
+        xbc, conv_cache = _conv1d(xbc, p["conv_w"], p["conv_b"])
+        xs, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+        xh = xs.reshape(bsz, s, nh, hp)
+        xh = constrain(xh, "batch", "seq", "inner", None)
+        y, state = ssd_chunked(
+            xh, dt, p["a_log"], b_mat, c_mat, p["d_skip"], cfg.ssm_chunk
+        )
+        y = y.reshape(bsz, s, di)
+        new_cache = None
+        if cache is not None:  # prefill
+            new_cache = {"conv": conv_cache, "ssm": state}
+
+    y = _gated_rms_norm(y.astype(x.dtype), z, p["norm_g"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + constrain(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,355 @@
+"""Model assembly: scan-over-superblock decoder covering all ten assigned
+architectures (dense / MoE / SSM / hybrid / VLM / audio).
+
+Parameters are stored stacked over superblocks — every leaf of
+params["blocks"][pos] has leading dim n_superblocks — so the layer stack is
+one `lax.scan` (compact HLO, fast compiles, known trip counts for the
+roofline's while-loop correction). Heterogeneous stacks (jamba, llama4,
+llama-vision) unroll *within* the superblock and scan across repeats.
+
+Modes:
+  forward/loss: training path (remat per superblock)
+  prefill:      forward + returns stacked KV/SSM caches
+  decode_step:  one token against the caches (serve_step of decode cells)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as E
+
+
+# --------------------------------------------------------------------------
+# parameter init (one superblock position, unstacked)
+# --------------------------------------------------------------------------
+
+
+def _norm(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+def _dense(rng, shape, fan_in):
+    return (jax.random.normal(rng, shape, jnp.float32) / jnp.sqrt(fan_in))
+
+
+def _init_mixer(rng, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads_eff, cfg.n_kv_heads_eff, cfg.head_dim
+    ks = jax.random.split(rng, 8)
+    if kind in ("attn", "xattn"):
+        p = {
+            "norm": _norm(d),
+            "wq": _dense(ks[0], (d, h, dh), d),
+            "wk": _dense(ks[1], (d, kv, dh), d),
+            "wv": _dense(ks[2], (d, kv, dh), d),
+            "wo": _dense(ks[3], (h, dh, d), h * dh),
+        }
+        if cfg.qkv_bias and kind == "attn":
+            p.update(
+                bq=jnp.zeros((h, dh), jnp.float32),
+                bk=jnp.zeros((kv, dh), jnp.float32),
+                bv=jnp.zeros((kv, dh), jnp.float32),
+            )
+        if kind == "xattn":
+            p["norm_kv"] = _norm(d)
+            p["gate"] = jnp.zeros((), jnp.float32)
+        return p
+    if kind == "mamba":
+        di, n, nh = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_heads
+        conv_ch = di + 2 * n
+        proj_out = 2 * di + 2 * n + nh
+        dt = jnp.exp(
+            jax.random.uniform(ks[4], (nh,), jnp.float32) * (jnp.log(0.1) - jnp.log(1e-3))
+            + jnp.log(1e-3)
+        )
+        return {
+            "norm": _norm(d),
+            "in_proj": _dense(ks[0], (d, proj_out), d),
+            "conv_w": _dense(ks[1], (cfg.conv_width, conv_ch), cfg.conv_width),
+            "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+            "a_log": jnp.log(
+                jax.random.uniform(ks[2], (nh,), jnp.float32, 1.0, 16.0)
+            ),
+            "d_skip": jnp.ones((nh,), jnp.float32),
+            "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus
+            "norm_g": _norm(di),
+            "out_proj": _dense(ks[3], (di, d), di),
+        }
+    raise ValueError(kind)
+
+
+def _init_mlp(rng, cfg: ModelConfig, kind: str) -> Optional[Dict[str, Any]]:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 8)
+    if kind == "dense":
+        f = cfg.d_ff
+        return {
+            "norm": _norm(d),
+            "wi": _dense(ks[0], (d, f), d),
+            "wg": _dense(ks[1], (d, f), d),
+            "wo": _dense(ks[2], (f, d), f),
+        }
+    if kind == "moe":
+        f, e = cfg.moe_d_ff, cfg.n_experts
+        p = {
+            "norm": _norm(d),
+            "router": _dense(ks[0], (d, e), d),
+            "wi": _dense(ks[1], (e, d, f), d),
+            "wg": _dense(ks[2], (e, d, f), d),
+            "wo": _dense(ks[3], (e, f, d), f),
+        }
+        if cfg.shared_expert:
+            p.update(
+                shared_wi=_dense(ks[4], (d, f), d),
+                shared_wg=_dense(ks[5], (d, f), d),
+                shared_wo=_dense(ks[6], (f, d), f),
+            )
+        return p
+    if kind == "none":
+        return None
+    raise ValueError(kind)
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    """Full parameter pytree; block leaves stacked over superblocks."""
+    k_embed, k_head, k_blocks = jax.random.split(rng, 3)
+    vp, d = cfg.vocab_padded, cfg.d_model
+
+    def one_superblock(key):
+        out = []
+        for i, (mixer, mlpk) in enumerate(zip(cfg.block_pattern, cfg.mlp_pattern)):
+            km, kf = jax.random.split(jax.random.fold_in(key, i))
+            blk = {"mixer": _init_mixer(km, cfg, mixer)}
+            mp = _init_mlp(kf, cfg, mlpk)
+            if mp is not None:
+                blk["mlp"] = mp
+            out.append(blk)
+        return tuple(out)
+
+    keys = jax.random.split(k_blocks, cfg.n_superblocks)
+    blocks = jax.vmap(one_superblock)(keys)
+    params = {
+        "blocks": blocks,
+        "final_norm": _norm(d),
+        "head": _dense(k_head, (d, vp), d),
+    }
+    if not cfg.embed_input:
+        params["embed"] = 0.02 * jax.random.normal(k_embed, (vp, d), jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        tree,
+    )
+
+
+def _embed_in(params, batch, cfg: ModelConfig):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.embed_input:
+        x = batch["embeds"].astype(cdt)
+    else:
+        # all-gather the FSDP'd embed dim before the lookup: the gather then
+        # produces batch-sharded activations directly (otherwise GSPMD falls
+        # back to a full rematerialization of the (B,S,D/16) intermediate)
+        emb = constrain(params["embed"].astype(cdt), "vocab", None)
+        x = emb[batch["tokens"]]
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _superblock(x, sb_params, cfg: ModelConfig, positions, img_embeds, caches, pos):
+    """Apply one superblock. caches: None (train) | tuple per position."""
+    aux = jnp.float32(0.0)
+    new_caches = []
+    for i, (mixer, mlpk) in enumerate(zip(cfg.block_pattern, cfg.mlp_pattern)):
+        bp = sb_params[i]
+        mp = _cast(bp["mixer"], cfg.compute_dtype)
+        c_in = None if caches is None else caches[i]
+        if mixer == "attn":
+            x, c = L.attention(x, mp, cfg, positions, cache=c_in, pos=pos)
+        elif mixer == "xattn":
+            x, c = L.cross_attention(x, mp, cfg, img_embeds=img_embeds, cache=c_in)
+        elif mixer == "mamba":
+            x, c = M.mamba_mixer(x, mp, cfg, cache=c_in)
+        else:
+            raise ValueError(mixer)
+        new_caches.append(c)
+        if mlpk != "none":
+            fp = _cast(bp["mlp"], cfg.compute_dtype)
+            if mlpk == "dense":
+                x = L.mlp(x, fp, cfg)
+            else:
+                x, a = E.moe_layer(x, fp, cfg)
+                aux = aux + a
+    return x, aux, tuple(new_caches)
+
+
+def forward(params, batch, cfg: ModelConfig, remat: bool = True,
+            remat_policy: str = "full"):
+    """Training/eval forward: returns (logits f32, moe aux loss).
+
+    remat_policy: "full" recomputes everything in backward (min memory);
+    "dots" saves matmul outputs (jax.checkpoint_policies
+    .dots_with_no_batch_dims_saveable) trading HBM capacity for ~1/3 less
+    recompute traffic (§Perf iteration on the MoE train cell)."""
+    x = _embed_in(params, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    img = batch.get("img_embeds")
+    if img is not None:
+        img = img.astype(cfg.compute_dtype)
+
+    def body(carry, sb_params):
+        x, aux = carry
+        x, a, _ = _superblock(x, sb_params, cfg, positions, img, None, None)
+        return (x, aux + a), None
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv",
+        x,
+        params["head"].astype(cfg.compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return constrain(logits, "batch", "seq", "vocab"), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, aux_weight: float = 0.01,
+            remat_policy: str = "full"):
+    logits, aux = forward(params, batch, cfg, remat_policy=remat_policy)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll).mean()
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Serving prefill: returns (last-token logits, stacked caches)."""
+    x = _embed_in(params, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    img = batch.get("img_embeds")
+    if img is not None:
+        img = img.astype(cfg.compute_dtype)
+    empty = tuple({} for _ in cfg.block_pattern)
+
+    def body(x, sb_params):
+        x, _, caches = _superblock(x, sb_params, cfg, positions, img, empty, None)
+        return x, caches
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["head"].astype(cfg.compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return logits[:, 0], caches
+
+
+def decode_step(params, caches, batch, cfg: ModelConfig):
+    """One-token decode against caches. batch: token (B,) [or embeds], pos ()."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    pos = batch["pos"]
+    if cfg.embed_input:
+        x = batch["embeds"].astype(cdt)[:, None, :]
+    else:
+        x = params["embed"].astype(cdt)[batch["token"]][:, None, :]
+    x = constrain(x, "batch", "seq", "embed")
+
+    def body(x, xs):
+        sb_params, sb_caches = xs
+        x, _, new_caches = _superblock(
+            x, sb_params, cfg, None, None, sb_caches, pos
+        )
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["head"].astype(cfg.compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return logits[:, 0], new_caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    """ShapeDtypeStructs of the stacked decode caches (dry-run inputs)."""
+    cdt = jnp.dtype(cfg.kv_cache_dtype)
+    r = cfg.n_superblocks
+    out = []
+    for mixer in cfg.block_pattern:
+        if mixer == "attn":
+            kv = (r, batch, seq_len, cfg.n_kv_heads_eff, cfg.head_dim)
+            out.append({"k": jax.ShapeDtypeStruct(kv, cdt),
+                        "v": jax.ShapeDtypeStruct(kv, cdt)})
+        elif mixer == "xattn":
+            kv = (r, batch, cfg.n_img_tokens, cfg.n_kv_heads_eff, cfg.head_dim)
+            out.append({"k": jax.ShapeDtypeStruct(kv, cdt),
+                        "v": jax.ShapeDtypeStruct(kv, cdt)})
+        elif mixer == "mamba":
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_d_state
+            out.append({
+                "conv": jax.ShapeDtypeStruct(
+                    (r, batch, cfg.conv_width - 1, conv_ch), cdt
+                ),
+                "ssm": jax.ShapeDtypeStruct(
+                    (r, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_d_state),
+                    jnp.float32,
+                ),
+            })
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# public bundle
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, rng):
+        return init_params(rng, self.cfg)
+
+    def param_specs(self):
+        return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), self.cfg))
+
+    def forward(self, params, batch, remat: bool = True, remat_policy: str = "full"):
+        return forward(params, batch, self.cfg, remat=remat, remat_policy=remat_policy)
+
+    def loss(self, params, batch, remat_policy: str = "full"):
+        return loss_fn(params, batch, self.cfg, remat_policy=remat_policy)
+
+    def prefill(self, params, batch):
+        return prefill(params, batch, self.cfg)
+
+    def decode_step(self, params, caches, batch):
+        return decode_step(params, caches, batch, self.cfg)
+
+    def cache_specs(self, batch: int, seq_len: int):
+        return cache_specs(self.cfg, batch, seq_len)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,98 @@
+"""AdamW + LR schedules (cosine, and WSD for minicpm-2b) + global-norm clip.
+
+Optimizer state dtype is configurable: bf16 m/v halves optimizer HBM for
+the 400B-class models (DESIGN.md §9); master params stay f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1    # last 10% of steps decay (minicpm WSD)
+    state_dtype: str = "bfloat16"  # m/v dtype
+
+
+def schedule_lr(step, cfg: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        # Warmup-Stable-Decay: constant plateau, then 1-sqrt decay tail
+        decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+        frac = jnp.clip(
+            (step - decay_start) / jnp.maximum(cfg.total_steps - decay_start, 1.0),
+            0.0, 1.0,
+        )
+        return cfg.lr * warm * (1.0 - (1.0 - jnp.sqrt(1.0 - frac)))
+    # cosine
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    return cfg.lr * warm * (0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(
+    params, grads, opt_state, cfg: OptConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule_lr(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * update).astype(p.dtype),
+            m32.astype(sdt),
+            v32.astype(sdt),
+        )
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params, new_m, new_v = jax.tree.transpose(
+        jax.tree.structure(params), jax.tree.structure((0, 0, 0)), out
+    )
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,70 @@
+"""Serving steps: prefill and single-token decode (the `serve_step` lowered
+by the decode_32k / long_500k dry-run cells) plus greedy sampling."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    """serve_step: one new token against a KV/SSM cache of length seq_len."""
+
+    def decode_step(params, caches, batch):
+        logits, caches = model.decode_step(params, caches, batch)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, caches
+
+    return decode_step
+
+
+def _grow_attn_caches(model: Model, caches, extra: int, prompt_len: int):
+    """Extend self-attention KV caches by `extra` positions (zeros).
+    Cross-attention caches (fixed img length) and SSM states are untouched."""
+    out = []
+    for kind, entry in zip(model.cfg.block_pattern, caches):
+        if kind == "attn":
+            pad = lambda v: jnp.concatenate(
+                [v, jnp.zeros(v.shape[:2] + (extra,) + v.shape[3:], v.dtype)],
+                axis=2,
+            )
+            out.append({"k": pad(entry["k"]), "v": pad(entry["v"])})
+        else:
+            out.append(entry)
+    return tuple(out)
+
+
+def generate(
+    model: Model, params, prompt_batch: Dict[str, Any], max_new_tokens: int
+):
+    """Greedy generation: prefill the prompt, grow the KV cache, then scan
+    single-token decode steps."""
+    logits, caches = model.prefill(params, prompt_batch)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    start = prompt_batch["tokens"].shape[1]
+    caches = _grow_attn_caches(model, caches, max_new_tokens, start)
+
+    def body(carry, i):
+        tok, caches = carry
+        logits, caches = model.decode_step(
+            params, caches, {"token": tok, "pos": start + i}
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, caches), tok
+
+    (_, _), toks = jax.lax.scan(
+        body, (tok0, caches), jnp.arange(max_new_tokens, dtype=jnp.int32)
+    )
+    return toks.T  # (B, max_new_tokens)

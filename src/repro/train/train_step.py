@@ -1,0 +1,77 @@
+"""Train-step factory: loss + grad (+ optional microbatch accumulation) +
+AdamW update. Pure function of (params, opt_state, batch) — distribution
+comes entirely from pjit in_shardings/out_shardings plus the logical
+constraints inside the model, so the same step runs on 1 CPU device or a
+512-chip mesh unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: OptConfig,
+    num_microbatches: int = 1,
+    remat_policy: str = "full",
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    With num_microbatches > 1, `batch` leaves must have leading dim
+    divisible by it; gradients accumulate in f32 across a lax.scan (the
+    standard memory/throughput trade at large global batch).
+    """
+
+    def loss_of(params, batch):
+        loss, aux = model.loss(params, batch, remat_policy=remat_policy)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def single(params, batch):
+        (loss, aux), grads = grad_fn(params, batch)
+        return loss, aux, grads
+
+    def accumulate(params, batch):
+        def reshape(x):
+            b = x.shape[0]
+            assert b % num_microbatches == 0
+            return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, aux), grads = grad_fn(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / num_microbatches,
+                g_acc, grads,
+            )
+            return (g_acc, loss_acc + loss / num_microbatches), aux
+
+        (grads, loss), aux = jax.lax.scan(body, (zeros, 0.0), micro)
+        aux = jax.tree.map(lambda x: x[-1], aux)
+        return loss, aux, grads
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            loss, aux, grads = accumulate(params, batch)
+        else:
+            loss, aux, grads = single(params, batch)
+        params, opt_state, stats = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **aux, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, opt_cfg: OptConfig, rng):
+    params = model.init(rng)
+    return params, init_opt_state(params, opt_cfg)

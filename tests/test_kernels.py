@@ -1,0 +1,109 @@
+"""Per-kernel allclose tests: sweep shapes/dtypes against the ref.py
+pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import flash_attention, ssm_update, thermal_rollout
+
+RNG = np.random.default_rng(42)
+
+
+def _t(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+@pytest.mark.parametrize("b,s,t,h,dh", [
+    (1, 128, 128, 1, 64),
+    (2, 256, 256, 4, 128),
+    (1, 512, 512, 2, 64),
+    (2, 128, 384, 2, 128),   # cross-length (non-causal only)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, s, t, h, dh, dtype):
+    causal = s == t
+    q, k, v = _t((b, s, h, dh), dtype), _t((b, t, h, dh), dtype), _t((b, t, h, dh), dtype)
+    got = flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    q, k, v = (_t((1, 256, 2, 64)) for _ in range(3))
+    got = flash_attention(q, k, v, causal=True, block_q=block_q, block_k=block_k)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,p,n", [
+    (1, 8, 64, 128), (2, 16, 64, 128), (4, 8, 128, 128), (2, 80, 64, 128),
+])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_update_matches_ref(b, h, p, n, xdtype):
+    state = _t((b, h, p, n))
+    x = _t((b, h, p), xdtype)
+    dt = jnp.asarray(RNG.uniform(1e-3, 0.1, (b, h)), jnp.float32)
+    a_log = jnp.asarray(RNG.uniform(0, 2, (h,)), jnp.float32)
+    bv, cv = _t((b, n), xdtype), _t((b, n), xdtype)
+    ds = jnp.asarray(RNG.uniform(0.5, 1.5, (h,)), jnp.float32)
+    y1, s1 = ssm_update(state, x, dt, a_log, bv, cv, ds)
+    y2, s2 = ref.ssm_update_ref(state, x, dt, a_log, bv, cv, ds)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_update_matches_model_decode_path():
+    """Kernel oracle == the model's decode step math (mamba2.ssm_decode_step)."""
+    from repro.models.mamba2 import ssm_decode_step
+
+    b, h, p, n = 2, 8, 64, 128
+    state, x = _t((b, h, p, n)), _t((b, h, p))
+    dt = jnp.asarray(RNG.uniform(1e-3, 0.1, (b, h)), jnp.float32)
+    a_log = jnp.asarray(RNG.uniform(0, 2, (h,)), jnp.float32)
+    bv, cv, ds = _t((b, n)), _t((b, n)), jnp.ones((h,))
+    y1, s1 = ref.ssm_update_ref(state, x, dt, a_log, bv, cv, ds)
+    y2, s2 = ssm_decode_step(state, x, dt, a_log, bv, cv, ds)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bsz,horizon,d,block_b", [
+    (8, 12, 128, 4), (16, 24, 128, 8), (5, 6, 256, 2),  # uneven batch too
+])
+def test_thermal_rollout_matches_ref(bsz, horizon, d, block_b):
+    theta0 = jnp.asarray(RNG.uniform(20, 34, (bsz, d)), jnp.float32)
+    heat = jnp.asarray(RNG.uniform(0, 2e6, (bsz, horizon, d)), jnp.float32)
+    amb = jnp.asarray(RNG.uniform(5, 45, (horizon, d)), jnp.float32)
+    target = jnp.asarray(RNG.uniform(18, 28, (bsz, horizon, d)), jnp.float32)
+    gain = jnp.asarray(RNG.uniform(3e5, 1e6, (d,)), jnp.float32)
+    cm = jnp.asarray(RNG.uniform(3e5, 2e6, (d,)), jnp.float32)
+    a = jnp.full((d,), 300 / 6e8, jnp.float32)
+    b = jnp.full((d,), 300 / (6e8 * 300.0), jnp.float32)
+    t1, c1 = thermal_rollout(theta0, heat, amb, target, gain, cm, a, b, block_b=block_b)
+    t2, c2 = ref.thermal_rollout_ref(theta0, heat, amb, target, gain, cm, a, b)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), atol=1e-4, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-2, rtol=1e-5)
+
+
+def test_thermal_rollout_throttle_engages():
+    """Above theta_soft the throttle must reduce effective heat."""
+    d = 128
+    theta0 = jnp.full((2, d), 34.0)
+    heat = jnp.full((2, 4, d), 1e6)
+    amb = jnp.full((4, d), 20.0)
+    target = jnp.full((2, 4, d), 40.0)  # no cooling (target above temp)
+    gain = jnp.full((d,), 1e6)
+    cm = jnp.zeros((d,))                # cooling disabled
+    a = jnp.full((d,), 1e-6)
+    b = jnp.zeros((d,))
+    t_hot, _ = thermal_rollout(theta0, heat, amb, target, gain, cm, a, b)
+    t_cold, _ = thermal_rollout(theta0 - 14.0, heat, amb, target, gain, cm, a, b)
+    dhot = float(t_hot[0, 0, 0] - 34.0)
+    dcold = float(t_cold[0, 0, 0] - 20.0)
+    assert dhot < dcold  # throttled plant heats slower

@@ -1,0 +1,169 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + no NaNs, plus prefill/decode cache
+consistency for a representative subset."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, shapes_for
+from repro.data.pipeline import batch_for_cell
+from repro.models import build_model
+from repro.optim.adamw import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    batch = {}
+    if cfg.embed_input:
+        batch["embeds"] = jax.random.normal(rng, (B, S, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(rng, (B, cfg.n_img_tokens, cfg.d_model))
+    batch["labels"] = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.ssm_d_state:
+        cfg = cfg.scaled(ssm_chunk=16)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    batch = _batch(cfg, rng)
+
+    logits, aux = model.forward(model.init(rng), batch, remat=False)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+
+    step = make_train_step(model, OptConfig(lr=1e-3, warmup_steps=1))
+    params, opt = init_train_state(model, OptConfig(), rng)
+    params2, opt2, m = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    assert int(opt2["step"]) == 1
+    # parameters actually moved
+    delta = jax.tree.reduce(
+        lambda a, l: a + float(jnp.abs(l).sum()),
+        jax.tree.map(lambda a, b: a - b, params, params2), 0.0,
+    )
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "mamba2-2.7b", "jamba-1.5-large-398b",
+                                  "llama-3.2-vision-90b", "musicgen-medium",
+                                  "qwen3-moe-235b-a22b"])
+def test_prefill_decode_consistency(arch):
+    cfg = get_smoke_config(arch).scaled(capacity_factor=8.0)
+    if cfg.ssm_d_state:
+        cfg = cfg.scaled(ssm_chunk=8)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = model.init(rng)
+    full = {}
+    if cfg.embed_input:
+        emb = jax.random.normal(rng, (B, S + 1, cfg.d_model), jnp.float32)
+        full["embeds"] = emb
+    else:
+        toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+        full["tokens"] = toks
+    if cfg.family == "vlm":
+        full["img_embeds"] = jax.random.normal(rng, (B, cfg.n_img_tokens, cfg.d_model))
+    want = model.forward(params, full, remat=False)[0][:, S]
+
+    pre = {k: (v[:, :S] if k in ("tokens", "embeds") else v) for k, v in full.items()}
+    _, cache = model.prefill(params, pre)
+    padded = []
+    for kind, e in zip(cfg.block_pattern, cache):
+        if kind == "attn":
+            pad = lambda v: jnp.concatenate(
+                [v, jnp.zeros(v.shape[:2] + (4,) + v.shape[3:], v.dtype)], axis=2
+            )
+            padded.append({"k": pad(e["k"]), "v": pad(e["v"])})
+        else:
+            padded.append(e)
+    dec = {"pos": jnp.int32(S)}
+    if cfg.embed_input:
+        dec["embeds"] = full["embeds"][:, S]
+    else:
+        dec["token"] = full["tokens"][:, S]
+    got, _ = model.decode_step(params, tuple(padded), dec)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    assert float(jnp.max(jnp.abs(got - want))) < 0.05 * scale + 0.05
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_materialized(arch):
+    """Analytic param_count (drives MODEL_FLOPS) == actual leaf count."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    specs = model.param_specs()
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(specs))
+    assert n == cfg.param_count()
+
+
+def test_active_params_less_than_total_for_moe():
+    for arch in ("qwen3-moe-235b-a22b", "llama4-maverick-400b-a17b",
+                 "jamba-1.5-large-398b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_assigned_full_configs_match_spec():
+    """The registry carries the exact assigned dims."""
+    c = get_config("qwen2-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (28, 3584, 28, 4, 18944, 152064)
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k) == (94, 4096, 128, 8)
+    c = get_config("jamba-1.5-large-398b")
+    assert c.n_layers == 72 and c.block_pattern.count("attn") == 1
+    assert len(c.block_pattern) == 8  # 1:7 attn:mamba
+    c = get_config("mamba2-2.7b")
+    assert c.ssm_d_state == 128 and c.d_model == 2560
+    c = get_config("llama-3.2-vision-90b")
+    assert c.n_layers == 100 and c.block_pattern.count("xattn") == 1
+
+
+def test_long_500k_only_for_subquadratic():
+    for arch in ARCH_IDS:
+        names = [c.name for c in shapes_for(arch)]
+        if arch in ("mamba2-2.7b", "jamba-1.5-large-398b"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+
+
+def test_data_pipeline_deterministic_and_learnable():
+    cfg = get_smoke_config("qwen2-7b")
+    b1 = batch_for_cell(0, 7, cfg, 16, 4)
+    b2 = batch_for_cell(0, 7, cfg, 16, 4)
+    assert bool((b1["tokens"] == b2["tokens"]).all())
+    b3 = batch_for_cell(0, 8, cfg, 16, 4)
+    assert not bool((b1["tokens"] == b3["tokens"]).all())
+
+
+def test_fp8_kv_cache_close_to_bf16():
+    """Opt-in fp8 KV cache: decode logits stay within a few percent."""
+    cfg = get_smoke_config("qwen2-7b")
+    m16 = build_model(cfg)
+    m8 = build_model(cfg.scaled(kv_cache_dtype="float8_e4m3fn"))
+    params = m16.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab_size)
+
+    def decode_with(model):
+        _, cache = model.prefill(params, {"tokens": toks[:, :S]})
+        pad = lambda v: jnp.concatenate(
+            [v, jnp.zeros(v.shape[:2] + (4,) + v.shape[3:], v.dtype)], axis=2
+        )
+        cache = tuple({"k": pad(e["k"]), "v": pad(e["v"])} for e in cache)
+        out, _ = model.decode_step(params, cache, {"token": toks[:, S], "pos": jnp.int32(S)})
+        return out
+
+    g16, g8 = decode_with(m16), decode_with(m8)
+    assert g8.dtype == g16.dtype
+    scale = float(jnp.max(jnp.abs(g16))) + 1e-6
+    assert float(jnp.max(jnp.abs(g16 - g8))) < 0.10 * scale

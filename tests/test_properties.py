@@ -1,0 +1,123 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EnvDims, make_params
+from repro.core import thermal as T
+from repro.core import jobs as J
+from repro.core.state import JobTable
+from repro.distributed.compression import quantize_int8, dequantize_int8
+from repro.optim.adamw import OptConfig, schedule_lr
+
+PARAMS = make_params()
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.floats(-20.0, 60.0))
+@settings(**SETTINGS)
+def test_throttle_bounded_and_monotone(theta):
+    g = T.throttle_factor(jnp.full(4, theta, jnp.float32), PARAMS)
+    g2 = T.throttle_factor(jnp.full(4, theta + 1.0, jnp.float32), PARAMS)
+    assert bool((g >= PARAMS.g_min - 1e-6).all()) and bool((g <= 1.0).all())
+    assert bool((g2 <= g + 1e-6).all())  # hotter never raises capacity
+
+
+@given(st.floats(0.0, 5e6), st.floats(-10.0, 50.0), st.floats(15.0, 40.0))
+@settings(**SETTINGS)
+def test_rc_step_is_contraction_without_forcing(heat, amb, theta):
+    """With zero heat/cooling the plant moves toward ambient, never past it."""
+    th = jnp.full(4, theta)
+    am = jnp.full(4, amb)
+    nxt = T.rc_step(th, am, jnp.zeros(4), jnp.zeros(4), PARAMS)
+    before = np.abs(theta - amb)
+    after = np.abs(np.asarray(nxt) - amb)
+    assert (after <= before + 1e-5).all()
+
+
+@given(st.floats(-5.0, 5.0))
+@settings(**SETTINGS)
+def test_pid_cooling_nonnegative_and_capped(err):
+    theta = PARAMS.setpoint_fixed + err
+    phi, integral, _ = T.pid_cooling(
+        theta, PARAMS.setpoint_fixed, jnp.zeros(4), jnp.zeros(4), PARAMS
+    )
+    assert bool((phi >= 0).all()) and bool((phi <= PARAMS.cool_max).all())
+    assert bool((integral >= 0).all())
+
+
+@given(
+    st.lists(st.floats(1.0, 100.0), min_size=1, max_size=12),
+    st.floats(10.0, 200.0),
+)
+@settings(**SETTINGS)
+def test_backfill_never_exceeds_capacity(rs, cap):
+    q = JobTable.zeros(1, 16)
+    n = len(rs)
+    q = JobTable(
+        r=q.r.at[0, :n].set(jnp.asarray(rs, jnp.float32)),
+        dur=q.dur.at[0, :n].set(2),
+        prio=q.prio,
+        count=q.count.at[0].set(n),
+    )
+    run = JobTable.zeros(1, 16)
+    q2, run2 = J.admit_backfill(q, run, jnp.asarray([cap]), jnp.asarray([1.0]), 16)
+    assert float(J.job_utilization(run2)[0]) <= cap + 1e-4
+    # conservation: every job is either still queued or running
+    assert int(q2.count[0]) + int(run2.count[0]) == n
+
+
+@given(st.lists(st.floats(1.0, 50.0), min_size=1, max_size=16))
+@settings(**SETTINGS)
+def test_fifo_greedy_admission_is_maximal(rs):
+    """No skipped job would still fit after the admission pass (greedy
+    backfill is exhaustive within the scheduler depth)."""
+    q = JobTable.zeros(1, 32)
+    n = len(rs)
+    q = JobTable(
+        r=q.r.at[0, :n].set(jnp.asarray(rs, jnp.float32)),
+        dur=q.dur.at[0, :n].set(1),
+        prio=q.prio,
+        count=q.count.at[0].set(n),
+    )
+    run = JobTable.zeros(1, 32)
+    cap = 60.0
+    q2, run2 = J.admit_backfill(q, run, jnp.asarray([cap]), jnp.asarray([1.0]), 32)
+    rem = cap - float(J.job_utilization(run2)[0])
+    queued = np.asarray(q2.r[0, : int(q2.count[0])])
+    assert (queued > rem + 1e-4).all()
+
+
+@given(st.integers(0, 40000))
+@settings(**SETTINGS)
+def test_lr_schedules_positive_and_bounded(step):
+    for sched in ("cosine", "wsd", "constant"):
+        cfg = OptConfig(schedule=sched, total_steps=40000, warmup_steps=200)
+        lr = float(schedule_lr(jnp.int32(step), cfg))
+        assert 0.0 <= lr <= cfg.lr + 1e-9
+
+
+@given(st.lists(st.floats(-1e4, 1e4), min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_int8_quantization_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    assert (err <= float(scale) * 0.5 + 1e-6).all()
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_moe_dispatch_conserves_mass(n_tokens, seed):
+    """Without capacity drops, MoE combine weights sum to 1 per token."""
+    from repro.configs import get_smoke_config
+    from repro.models.moe import moe_layer
+    from repro.models.transformer import _init_mlp
+
+    cfg = get_smoke_config("qwen3-moe-235b-a22b").scaled(capacity_factor=8.0)
+    p = _init_mlp(jax.random.PRNGKey(seed), cfg, "moe")
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, n_tokens, cfg.d_model))
+    y, aux = moe_layer(x, p, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all()) and float(aux) >= 0.0

@@ -1,0 +1,122 @@
+"""Sharding rules + partitioning table + HLO analyzer unit tests.
+(Spec-level tests use AbstractMesh — no devices needed; compile-level
+multi-device tests live in test_multidevice.py as subprocesses.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.analysis.hlo import analyze_hlo
+from repro.distributed import partitioning as pt
+from repro.distributed import sharding as sh
+
+MESH2 = AbstractMesh((2, 2), ("data", "model"))
+MESH16 = AbstractMesh((16, 16), ("data", "model"))
+MESHPOD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_resolve_divisibility_fallback():
+    spec = sh.resolve(("embed_p", "kv_heads", "head_dim"), dims=(64, 1, 16), mesh=MESH2)
+    assert spec == P("data", None, None)
+    spec = sh.resolve(("embed_p", "q_heads", "head_dim"), dims=(64, 4, 16), mesh=MESH2)
+    assert spec == P("data", "model", None)
+    # 4 kv heads on a 16-way model axis would pad 4x -> replicate
+    spec = sh.resolve(("kv_heads",), dims=(4,), mesh=MESH16)
+    assert spec == P(None)
+    # 28 q heads pad to 32 (12.5%) -> stay sharded
+    spec = sh.resolve(("q_heads",), dims=(32,), mesh=MESH16)
+    assert spec == P("model")
+
+
+def test_resolve_duplicate_axis_guard():
+    spec = sh.resolve(
+        ("batch", "kv_seq", None, None), dims=(32, 64, 4, 16), mesh=MESH2,
+        rules=dict(sh.DEFAULT_RULES, kv_seq="data"),
+    )
+    assert spec == P(("data",), None, None, None)
+
+
+def test_resolve_kv_seq_picks_up_remaining_axes():
+    rules = dict(sh.DEFAULT_RULES, kv_seq=("data", "model"))
+    # decode_32k: batch shards (pod, data); kv_seq takes model
+    spec = sh.resolve(("batch", "kv_seq", "kv_heads", "head_dim"),
+                      dims=(128, 32768, 4, 128), mesh=MESHPOD, rules=rules)
+    assert spec == P(("pod", "data"), ("model",), None, None)
+    # long_500k: batch=1 replicates; kv_seq takes (data, model)
+    spec = sh.resolve(("batch", "kv_seq", "kv_heads", "head_dim"),
+                      dims=(1, 524288, 8, 128), mesh=MESHPOD, rules=rules)
+    assert spec == P(None, ("data", "model"), None, None)
+
+
+def test_resolve_drops_absent_pod_axis():
+    spec = sh.resolve(("batch",), dims=(8,), mesh=MESH2)
+    assert spec == P(("data",))
+
+
+def test_param_rules_cover_all_archs():
+    """Every parameter leaf of every smoke config matches a non-default rule
+    or is a norm/scalar (replicated by design)."""
+    from repro.configs import ARCH_IDS, get_smoke_config
+    from repro.models import build_model
+
+    for arch in ARCH_IDS:
+        model = build_model(get_smoke_config(arch))
+        specs = model.param_specs()
+        flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+        for path, leaf in flat:
+            key = jax.tree_util.keystr(path)
+            axes = pt.logical_axes_for(key, len(leaf.shape))
+            if all(a is None for a in axes):
+                assert ("norm" in key or "gate" in key or "a_log" in key
+                        or "d_skip" in key or "dt_bias" in key), (
+                    f"{arch}: unmatched param {key}"
+                )
+
+
+def test_moe_expert_axes():
+    axes = pt.logical_axes_for("['blocks'][0]['mlp']['wi']", 4)
+    assert axes == ("layers", "experts", "embed_p", "ffn")
+    axes = pt.logical_axes_for("['blocks'][0]['mlp']['wi']", 3)
+    assert axes == ("layers", "embed_p", "ffn")
+    axes = pt.logical_axes_for("['blocks'][0]['mixer']['wq']", 4)
+    assert axes == ("layers", "embed_p", "q_heads", "head_dim")
+
+
+def test_hlo_analyzer_trip_count_correction():
+    """Scan flops must equal unrolled flops (10x XLA's raw count)."""
+
+    def f_scan(ws, x):
+        def body(x, w):
+            return jnp.dot(x, w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    def f_unroll(ws, x):
+        for i in range(10):
+            x = jnp.dot(x, ws[i])
+        return x
+
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cs = jax.jit(f_scan).lower(ws, x).compile()
+    cu = jax.jit(f_unroll).lower(ws, x).compile()
+    ms, mu = analyze_hlo(cs.as_text()), analyze_hlo(cu.as_text())
+    assert ms.flops == mu.flops == 2 * 64 ** 3 * 10
+    assert 10 in ms.trip_counts.values()
+
+
+def test_hlo_analyzer_nested_scan():
+    def f(ws, x):
+        def outer(x, w):
+            def inner(x, _):
+                return jnp.dot(x, w), None
+            x, _ = jax.lax.scan(inner, x, None, length=3)
+            return x, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    mc = analyze_hlo(jax.jit(f).lower(ws, x).compile().as_text())
+    assert mc.flops == 2 * 32 ** 3 * 15  # 5 outer x 3 inner

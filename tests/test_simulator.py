@@ -1,0 +1,204 @@
+"""Unit tests for the DataCenterGym physics + job engine (Sec. III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DataCenterGym, EnvDims, make_params, metrics, observe, rollout,
+    synthesize_trace,
+)
+from repro.core import jobs as J
+from repro.core import power as P
+from repro.core import thermal as T
+from repro.core.state import Arrivals, JobTable
+from repro.core.policies import make_policy
+
+DIMS = EnvDims(
+    horizon=24, queue_cap=128, run_cap=128, pending_cap=64,
+    max_arrivals=64, admit_depth=64, policy_depth=128,
+)
+PARAMS = make_params()
+
+
+# ---------------------------------------------------------------- thermal
+
+
+def test_throttle_boundaries():
+    # theta is per-DC (D=4); probe the ramp with uniform fleet temperatures
+    ones = jnp.ones(4)
+    assert bool((T.throttle_factor(31.0 * ones, PARAMS) == 1.0).all())
+    assert bool((T.throttle_factor(32.0 * ones, PARAMS) == 1.0).all())
+    mid = T.throttle_factor(33.5 * ones, PARAMS)
+    assert bool((mid < 1.0).all()) and bool((mid > PARAMS.g_min).all())
+    np.testing.assert_allclose(
+        np.asarray(T.throttle_factor(35.0 * ones, PARAMS)),
+        np.asarray(PARAMS.g_min), rtol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(T.throttle_factor(40.0 * ones, PARAMS)),
+        np.asarray(PARAMS.g_min), rtol=1e-6,
+    )
+
+
+def test_rc_step_heating_and_cooling_signs():
+    theta = PARAMS.setpoint_fixed
+    hot = T.rc_step(theta, theta, jnp.full_like(theta, 1e6), jnp.zeros_like(theta), PARAMS)
+    cold = T.rc_step(theta, theta, jnp.zeros_like(theta), jnp.full_like(theta, 1e6), PARAMS)
+    assert bool((hot > theta).all()) and bool((cold < theta).all())
+
+
+def test_rc_step_relaxes_toward_ambient():
+    amb = PARAMS.amb_base
+    theta = amb + 10.0
+    nxt = T.rc_step(theta, amb, jnp.zeros_like(theta), jnp.zeros_like(theta), PARAMS)
+    assert bool((nxt < theta).all()) and bool((nxt > amb).all())
+
+
+def test_pid_cooling_clamped_and_antiwindup():
+    theta = PARAMS.setpoint_fixed + 50.0  # huge error
+    integral = jnp.zeros_like(theta)
+    prev = jnp.zeros_like(theta)
+    for _ in range(50):
+        phi, integral, prev = T.pid_cooling(theta, PARAMS.setpoint_fixed, integral, prev, PARAMS)
+    assert bool((phi <= PARAMS.cool_max).all())
+    # after the plant cools below target, the integral must decay to zero
+    theta = PARAMS.setpoint_fixed - 5.0
+    for _ in range(300):
+        phi, integral, prev = T.pid_cooling(theta, PARAMS.setpoint_fixed, integral, prev, PARAMS)
+    assert bool((phi == 0.0).all())
+
+
+def test_ambient_diurnal_period():
+    t = jnp.arange(288.0)
+    amb = jax.vmap(lambda tt: T.ambient_temperature(tt, jnp.zeros(4), PARAMS))(t)
+    np.testing.assert_allclose(np.asarray(amb.mean(0)), np.asarray(PARAMS.amb_base), atol=0.1)
+    np.testing.assert_allclose(
+        np.asarray(amb.max(0) - amb.min(0)), np.asarray(2 * PARAMS.amb_amp), rtol=0.01
+    )
+
+
+# ---------------------------------------------------------------- pricing
+
+
+def test_tou_price_switches():
+    # step size 300s: hour 10 = step 120 (peak), hour 23 = step 276 (off)
+    peak = P.electricity_price(jnp.int32(120), PARAMS)
+    off = P.electricity_price(jnp.int32(276), PARAMS)
+    np.testing.assert_allclose(np.asarray(peak), np.asarray(PARAMS.price_peak))
+    np.testing.assert_allclose(np.asarray(off), np.asarray(PARAMS.price_off))
+
+
+# ---------------------------------------------------------------- job engine
+
+
+def _arrivals(rs, gpus, durs=None):
+    n = len(rs)
+    pad = DIMS.max_arrivals - n
+    durs = durs or [3] * n
+    return Arrivals(
+        r=jnp.asarray(rs + [0.0] * pad, jnp.float32),
+        dur=jnp.asarray(durs + [0] * pad, jnp.int32),
+        prio=jnp.ones(DIMS.max_arrivals, jnp.int32),
+        is_gpu=jnp.asarray(gpus + [False] * pad),
+        valid=jnp.asarray([True] * n + [False] * pad),
+    )
+
+
+def test_insert_and_fifo_order():
+    q = JobTable.zeros(DIMS.num_clusters, DIMS.queue_cap)
+    jobs = _arrivals([10.0, 20.0, 30.0], [False] * 3)
+    assign = jnp.asarray([2, 2, 2] + [-1] * (DIMS.max_arrivals - 3), jnp.int32)
+    q, dropped = J.insert_arrivals(q, jobs, assign, DIMS.num_clusters)
+    assert int(q.count[2]) == 3 and int(dropped) == 0
+    np.testing.assert_allclose(np.asarray(q.r[2, :3]), [10.0, 20.0, 30.0])
+
+
+def test_backfill_skips_too_big_but_admits_smaller_behind():
+    q = JobTable.zeros(1, 16)
+    # FIFO: [60, 50, 15] with capacity 80 -> admit 60, skip 50, admit 15 (backfill)
+    q = JobTable(
+        r=q.r.at[0, :3].set(jnp.asarray([60.0, 50.0, 15.0])),
+        dur=q.dur.at[0, :3].set(3),
+        prio=q.prio,
+        count=q.count.at[0].set(3),
+    )
+    run = JobTable.zeros(1, 16)
+    c_eff = jnp.asarray([80.0])
+    q2, run2 = J.admit_backfill(q, run, c_eff, jnp.asarray([1.0]), admit_depth=16)
+    assert int(run2.count[0]) == 2
+    np.testing.assert_allclose(sorted(np.asarray(run2.r[0, :2])), [15.0, 60.0])
+    assert int(q2.count[0]) == 1 and float(q2.r[0, 0]) == 50.0
+
+
+def test_tick_completes_jobs():
+    run = JobTable.zeros(1, 8)
+    run = JobTable(
+        r=run.r.at[0, :2].set(jnp.asarray([5.0, 7.0])),
+        dur=run.dur.at[0, :2].set(jnp.asarray([1, 3])),
+        prio=run.prio,
+        count=run.count.at[0].set(2),
+    )
+    run2, done = J.tick_running(run)
+    assert int(done) == 1 and int(run2.count[0]) == 1
+    assert float(run2.r[0, 0]) == 7.0 and int(run2.dur[0, 0]) == 2
+
+
+def test_power_gating_blocks_admission():
+    q = JobTable.zeros(1, 8)
+    q = JobTable(
+        r=q.r.at[0, 0].set(10.0), dur=q.dur.at[0, 0].set(2),
+        prio=q.prio, count=q.count.at[0].set(1),
+    )
+    run = JobTable.zeros(1, 8)
+    _, run_ok = J.admit_backfill(q, run, jnp.asarray([100.0]), jnp.asarray([1.0]), 8)
+    _, run_blocked = J.admit_backfill(q, run, jnp.asarray([100.0]), jnp.asarray([0.0]), 8)
+    assert int(run_ok.count[0]) == 1 and int(run_blocked.count[0]) == 0
+
+
+# ---------------------------------------------------------------- episode
+
+
+@pytest.mark.parametrize("policy", ["random", "greedy", "thermal", "power_cool"])
+def test_episode_invariants(policy):
+    trace = synthesize_trace(0, DIMS, PARAMS)
+    env = DataCenterGym(DIMS, PARAMS)
+    pol = make_policy(policy, DIMS)
+    state, infos = jax.jit(lambda r: rollout(env, pol, trace, r))(jax.random.PRNGKey(0))
+    assert bool(jnp.all(infos.admitted_util <= PARAMS.c_max[None, :] + 1e-3))
+    assert bool(jnp.all(infos.energy_kwh >= 0))
+    assert bool(jnp.all(infos.cost_usd >= 0))
+    assert bool(jnp.all(jnp.isfinite(infos.theta)))
+    assert int(state.completed) > 0
+    m = metrics.summarize(infos)
+    assert 0 <= float(m["cpu_util_pct"]) <= 100.0
+    assert float(m["kwh_per_job"]) > 0
+
+
+def test_observation_shape_and_obs_dim():
+    env = DataCenterGym(DIMS, PARAMS)
+    state = env.reset(jax.random.PRNGKey(0))
+    obs = observe(state, PARAMS)
+    assert obs.shape == (DIMS.obs_dim,) == (3 * 20 + 3 * 4,)
+
+
+def test_workload_calibration_scales_with_lambda():
+    """Demand is calibrated to 65% at lambda=1 and genuinely oversubscribes
+    the plant at lambda>1 (the RQ2 stressor)."""
+    from repro.core import synthesize_trace as synth
+
+    dims = EnvDims(horizon=96, max_arrivals=640)
+    cap = float(PARAMS.c_max.sum())
+    d1 = float((lambda t: (t.r * t.dur).sum())(synth(0, dims, PARAMS, lam=1.0))) / 96 / cap
+    d25 = float((lambda t: (t.r * t.dur).sum())(synth(0, dims, PARAMS, lam=2.5))) / 96 / cap
+    assert 0.55 < d1 < 0.75, d1
+    assert d25 > 1.4, d25
+
+
+def test_monte_carlo_vmap_over_seeds():
+    trace = synthesize_trace(0, DIMS, PARAMS)
+    env = DataCenterGym(DIMS, PARAMS)
+    pol = make_policy("greedy", DIMS)
+    run = jax.jit(jax.vmap(lambda r: rollout(env, pol, trace, r)[1].cost_usd.sum()))
+    costs = run(jax.random.split(jax.random.PRNGKey(0), 3))
+    assert costs.shape == (3,) and bool(jnp.all(costs > 0))

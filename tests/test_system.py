@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests: the paper's qualitative claims reproduced on
+reduced episodes (the full-scale quantitative runs live in benchmarks/)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DataCenterGym, EnvDims, make_params, metrics, rollout, synthesize_trace
+from repro.core.policies import make_policy
+
+DIMS = EnvDims(
+    horizon=96, queue_cap=1024, run_cap=1024, pending_cap=512,
+    max_arrivals=256, admit_depth=128, policy_depth=512,
+)
+PARAMS = make_params()
+
+
+def _episode(policy_name: str, lam: float = 1.0, seed: int = 0, dims: EnvDims = DIMS):
+    trace = synthesize_trace(seed, dims, PARAMS, lam=lam)
+    env = DataCenterGym(dims, PARAMS)
+    pol = make_policy(policy_name, dims)
+    _, infos = jax.jit(lambda r: rollout(env, pol, trace, r))(jax.random.PRNGKey(seed))
+    return {k: float(v) for k, v in metrics.summarize(infos).items()}, infos
+
+
+def test_nominal_regime_no_throttling():
+    """Paper Table III: all policies thermally safe at 200 jobs/step."""
+    for name in ("greedy", "h_mpc"):
+        m, _ = _episode(name)
+        assert m["throttle_pct"] <= 2.0, (name, m["throttle_pct"])
+        assert m["theta_max"] < 33.0
+
+
+def test_greedy_beats_random_on_queues():
+    mg, _ = _episode("greedy")
+    mr, _ = _episode("random")
+    assert mg["cpu_queue"] + mg["gpu_queue"] <= 1.3 * (mr["cpu_queue"] + mr["gpu_queue"])
+
+
+def test_hmpc_cost_and_queue_advantage():
+    """Paper Table III headline: H-MPC lowest cost + lowest queues."""
+    mh, _ = _episode("h_mpc")
+    mg, _ = _episode("greedy")
+    assert mh["cost_usd"] < mg["cost_usd"], (mh["cost_usd"], mg["cost_usd"])
+    # on short (8h) horizons admission shaping can delay completions, so
+    # allow a small kWh/job tolerance; the 24h benchmark asserts strictly
+    assert mh["kwh_per_job"] < 1.08 * mg["kwh_per_job"]
+    assert mh["gpu_queue"] <= mg["gpu_queue"] * 1.5 + 50
+
+
+def test_scmpc_runs_cooler():
+    """Paper Table III: SC-MPC keeps lower temperatures (conservative)."""
+    ms, _ = _episode("sc_mpc")
+    mg, _ = _episode("greedy")
+    assert ms["theta_mean"] < mg["theta_mean"] + 0.1
+
+
+def test_overload_drives_thermal_stress_under_greedy():
+    """Paper RQ2: beyond the knee, greedy rides into thermal stress while
+    H-MPC preserves headroom."""
+    dims = EnvDims(
+        horizon=96, queue_cap=2048, run_cap=1024, pending_cap=512,
+        max_arrivals=640, admit_depth=192, policy_depth=768,
+    )
+    mg, _ = _episode("greedy", lam=2.5, dims=dims)
+    mg1, _ = _episode("greedy", lam=1.0, dims=dims)
+    mh, _ = _episode("h_mpc", lam=2.5, dims=dims)
+    assert mg["theta_max"] > mg1["theta_max"] + 0.5   # monotone thermal stress
+    assert mh["theta_max"] <= mg["theta_max"] + 0.5
+    assert mh["throttle_pct"] <= mg["throttle_pct"] + 1e-6
+
+
+def test_utilization_scales_with_lambda():
+    m_lo, _ = _episode("greedy", lam=0.5)
+    m_hi, _ = _episode("greedy", lam=2.0)
+    assert m_hi["gpu_util_pct"] > m_lo["gpu_util_pct"]
+
+
+def test_cluster_scheduler_integration():
+    """The paper's technique scheduling THIS framework's LM jobs."""
+    from repro.launch.cluster_scheduler import job_classes, schedule_lm_fleet
+
+    classes = job_classes()
+    assert len(classes) == 20  # 10 archs x (train, serve)
+    m, _ = schedule_lm_fleet("greedy", horizon=24, jobs_per_step=6.0)
+    assert m["completed_jobs"] > 0 and m["cost_usd"] > 0
