@@ -1,0 +1,19 @@
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test check bench quickstart sweep
+
+test:            ## tier-1 test suite (slow tests deselected)
+	$(PY) -m pytest -q -m "not slow"
+
+check:           ## CI smoke: tier-1 tests + tiny scenario-suite evaluation
+	$(PY) -m benchmarks.run --smoke
+
+bench:           ## CI-sized benchmark pass
+	$(PY) -m benchmarks.run --fast
+
+quickstart:
+	$(PY) examples/quickstart.py
+
+sweep:
+	$(PY) examples/scenario_sweep.py

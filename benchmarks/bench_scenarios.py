@@ -1,0 +1,84 @@
+"""Scenario-suite benchmark: per-scenario wall-clock and env-steps/sec for
+the batched Monte-Carlo harness (jit(vmap(rollout)) over seeds).
+
+  PYTHONPATH=src python -m benchmarks.bench_scenarios
+  PYTHONPATH=src python -m benchmarks.run --only scenarios
+
+The first scenario is timed twice: the first call includes XLA compilation
+(shared by every later scenario — shapes and dtypes are identical across
+the suite, so the executable is reused).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.core import EnvDims, metrics
+from repro.core.env import rollout_params
+from repro.core.policies import make_policy
+from repro.scenarios import build_cells, names, registry
+
+
+def run(
+    policy: str = "greedy",
+    scenarios=None,
+    seeds: int = 4,
+    dims: Optional[EnvDims] = None,
+    fast: bool = False,
+) -> Dict[str, Dict[str, float]]:
+    if dims is None:
+        dims = EnvDims(
+            horizon=48 if fast else 288,
+            max_arrivals=64 if fast else 256,
+            queue_cap=256 if fast else 4096,
+            run_cap=256 if fast else 2048,
+            pending_cap=128 if fast else 2048,
+            admit_depth=64 if fast else 256,
+            policy_depth=128 if fast else 1024,
+        )
+    if fast:
+        seeds = min(seeds, 2)
+    scen_names = tuple(scenarios or names())
+    pol = make_policy(policy, dims)
+
+    def cell(p, t, r):
+        _, infos = rollout_params(dims, pol, p, t, r)
+        return metrics.summarize(infos)
+
+    run_fn = jax.jit(jax.vmap(cell))
+
+    results: Dict[str, Dict[str, float]] = {}
+    compile_s = None
+    for i, name in enumerate(scen_names):
+        stacked = build_cells([registry.get(name)], seeds, dims)
+        if i == 0:  # first call compiles; executable is reused afterwards
+            t0 = time.time()
+            jax.block_until_ready(run_fn(*stacked))
+            compile_s = time.time() - t0
+        t0 = time.time()
+        out = jax.block_until_ready(run_fn(*stacked))
+        wall = time.time() - t0
+        results[name] = {
+            "wall_s": wall,
+            "steps_per_s": seeds * dims.horizon / wall,
+            "cost_usd": float(out["cost_usd"].mean()),
+            "throttle_pct": float(out["throttle_pct"].mean()),
+        }
+
+    print(f"# policy={policy} seeds={seeds} horizon={dims.horizon} "
+          f"first-call(incl. compile)={compile_s:.1f}s")
+    print("scenario,wall_s,steps_per_s,cost_usd,throttle_pct")
+    for name, r in results.items():
+        print(f"{name},{r['wall_s']:.3f},{r['steps_per_s']:.0f},"
+              f"{r['cost_usd']:.0f},{r['throttle_pct']:.1f}")
+    return results
+
+
+def main(fast: bool = False):
+    return run(fast=fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,15 +8,54 @@ name,seconds,key-result CSV lines print at the end of each section.
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import time
+
+
+def smoke() -> int:
+    """CI smoke: tier-1 tests + one tiny scenario-suite evaluation."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    print("=== smoke: tier-1 tests ===")
+    rc = subprocess.call(
+        [sys.executable, "-m", "pytest", "-q", "-m", "not slow"],
+        cwd=repo, env=env,
+    )
+    if rc != 0:
+        return rc
+
+    print("\n=== smoke: 2-scenario x 2-seed suite (greedy) ===")
+    src = os.path.join(repo, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.core import EnvDims
+    from repro.scenarios import evaluate_suite
+
+    dims = EnvDims(horizon=24, max_arrivals=64, queue_cap=128, run_cap=128,
+                   pending_cap=64, admit_depth=64, policy_depth=128)
+    res = evaluate_suite(["greedy"], scenarios=["nominal", "cooling_degraded"],
+                         seeds=2, dims=dims)
+    print(res.format_summary("cost_usd"))
+    print("\nsmoke OK")
+    return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced horizons/seeds (CI-sized)")
-    ap.add_argument("--only", default="", help="comma list: rq1,rq2,complexity,throughput,kernels")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tier-1 tests + tiny scenario suite, then exit")
+    ap.add_argument("--only", default="",
+                    help="comma list: rq1,rq2,complexity,throughput,kernels,scenarios")
     args, _ = ap.parse_known_args()
+    if args.smoke:
+        sys.exit(smoke())
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
@@ -57,6 +96,15 @@ def main() -> None:
         res = bench_env_throughput.main(fast=args.fast)
         rows.append(("throughput", time.time() - t0,
                      f"speedup={res['jit_sps']/res['python_sps']:.0f}x"))
+
+    if want("scenarios"):
+        from benchmarks import bench_scenarios
+
+        print("\n=== Scenario suite: per-scenario wall-clock + steps/sec ===")
+        t0 = time.time()
+        res = bench_scenarios.main(fast=args.fast)
+        sps = max(r["steps_per_s"] for r in res.values())
+        rows.append(("scenarios", time.time() - t0, f"peak_sps={sps:.0f}"))
 
     if want("kernels"):
         from benchmarks import bench_kernels

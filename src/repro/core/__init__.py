@@ -5,8 +5,14 @@ Physics-grounded, closed-loop simulation of geo-distributed datacenters
 built so that a full episode — policy included — compiles to a single XLA
 program (`env.rollout`) and Monte-Carlo evaluation is one `vmap`.
 """
-from repro.core.params import EnvDims, EnvParams, make_params, DC_NAMES
+from repro.core.params import (
+    EnvDims, EnvParams, make_params, perturb, stack_params, DC_NAMES,
+)
 from repro.core.state import Action, Arrivals, EnvState
-from repro.core.workload import Trace, make_trace, synthesize_trace, load_alibaba_csv
-from repro.core.env import DataCenterGym, GymAdapter, StepInfo, observe, rollout
+from repro.core.workload import (
+    Trace, make_trace, rate_modulation, synthesize_trace, load_alibaba_csv,
+)
+from repro.core.env import (
+    DataCenterGym, GymAdapter, StepInfo, observe, rollout, rollout_params,
+)
 from repro.core import metrics

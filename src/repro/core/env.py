@@ -191,6 +191,24 @@ def rollout(
     return state, infos
 
 
+def rollout_params(
+    dims: EnvDims,
+    policy,
+    params: EnvParams,
+    trace: Trace,
+    rng,
+) -> Tuple[EnvState, StepInfo]:
+    """`rollout` with the plant parameters as an explicit pytree argument.
+
+    `DataCenterGym` only stores statics, so constructing it inside a traced
+    function is free; with params/trace/rng as arguments the episode vmaps
+    over *stacked plants* as well as seeds — the scenario suite batches
+    scenario x seed into one `jit(vmap(rollout_params))` this way (see
+    repro.scenarios.suite).
+    """
+    return rollout(DataCenterGym(dims, params), policy, trace, rng)
+
+
 class GymAdapter:
     """Gymnasium-style stateful wrapper (observation = Eq. 1 vector)."""
 

@@ -190,6 +190,82 @@ def make_params(
     )
 
 
+# ---------------------------------------------------------------------------
+# Scenario support: declarative perturbation + stacking of param pytrees.
+# ---------------------------------------------------------------------------
+
+# Structural fields define the plant topology; scenarios may not touch them.
+_STRUCTURAL_FIELDS = ("dc_id", "is_gpu")
+# Fields that must stay strictly positive (a zero tariff degenerates Eq. 9).
+_PRICE_FLOOR = 1e-4
+_PRICE_FIELDS = ("price_peak", "price_off")
+# Physically non-negative quantities, clamped after any scale/offset.
+_NONNEG_FIELDS = (
+    "c_max", "alpha", "phi", "kappa", "p_max", "w_in",
+    "r_th", "c_th", "kp", "ki", "kd", "cool_max",
+    "amb_amp", "amb_sigma", "dt",
+)
+
+
+def perturb(
+    params: EnvParams,
+    scale: dict | None = None,
+    offset: dict | None = None,
+    replace: dict | None = None,
+) -> EnvParams:
+    """Apply a declarative perturbation to an EnvParams pytree (DESIGN.md §11).
+
+    `scale` multiplies a field, `offset` adds to it (scale applies first when
+    a field appears in both), `replace` substitutes it outright. Physical
+    bounds are enforced afterwards: prices stay >= 1e-4 $/kWh, non-negative
+    quantities (cool_max, capacities, gains, ...) are clamped at 0, and
+    g_min stays in [0, 1]. Structural fields (dc_id, is_gpu) are rejected.
+    """
+    scale, offset, replace = scale or {}, offset or {}, replace or {}
+    valid = {f.name for f in dataclasses.fields(EnvParams)}
+    for key in {*scale, *offset, *replace}:
+        if key not in valid:
+            raise KeyError(f"unknown EnvParams field: {key!r}")
+        if key in _STRUCTURAL_FIELDS:
+            raise ValueError(f"structural field {key!r} cannot be perturbed")
+
+    updates: dict = {}
+    for name in {*scale, *offset, *replace}:
+        cur = jnp.asarray(getattr(params, name))
+        if name in replace:
+            val = jnp.asarray(replace[name], cur.dtype)
+        else:
+            val = cur
+            if name in scale:
+                val = val * scale[name]
+            if name in offset:
+                val = val + offset[name]
+        if name in _PRICE_FIELDS:
+            val = jnp.maximum(val, _PRICE_FLOOR)
+        elif name in _NONNEG_FIELDS:
+            val = jnp.maximum(val, 0.0)
+        elif name == "g_min":
+            val = jnp.clip(val, 0.0, 1.0)
+        updates[name] = val
+    return dataclasses.replace(params, **updates)
+
+
+def stack_params(params_list) -> EnvParams:
+    """Stack N EnvParams pytrees leaf-wise along a new leading axis.
+
+    The result feeds `jax.vmap` directly: one batched rollout evaluates all
+    N plants (scenario x seed Monte-Carlo) in a single XLA program. Works on
+    any pytree whose leaves share shapes (traces included).
+    """
+    import jax as _jax
+
+    if not params_list:
+        raise ValueError("stack_params needs at least one pytree")
+    return _jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack([jnp.asarray(l) for l in leaves]), *params_list
+    )
+
+
 try:  # register as pytrees so params/state flow through jit/scan/vmap
     import jax
 

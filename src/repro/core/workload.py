@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Any, Optional
 
 import numpy as np
@@ -78,6 +79,33 @@ def _calibrate_scale(r, dur, is_gpu, ref_valid, params, target_util, num_steps):
     return out
 
 
+def rate_modulation(
+    num_steps: int,
+    diurnal_amp: float = 0.25,
+    diurnal_shift: float = 0.0,
+    burst_windows: tuple = (),
+):
+    """Per-step arrival-rate multipliers: (diurnal, burst) arrays of shape (T,).
+
+    `diurnal_shift` moves the workload peak by a fraction of the day (0.5
+    puts the peak 12 h later); `burst_windows` is a tuple of
+    (start_frac, end_frac, multiplier) triples applied multiplicatively on
+    top of the diurnal cycle (flash crowds, failover surges).
+    """
+    t = np.arange(num_steps)
+    diurnal = 1.0 + diurnal_amp * np.sin(
+        2 * np.pi * (t / num_steps - 0.45 - diurnal_shift)
+    )
+    burst = np.ones(num_steps)
+    for start_frac, end_frac, mult in burst_windows:
+        lo = int(round(start_frac * num_steps))
+        hi = int(round(end_frac * num_steps))
+        burst[lo:hi] *= mult
+    # Rates feed a Poisson draw; clamp so extreme amp/multiplier overrides
+    # degrade to zero arrivals instead of crashing.
+    return np.maximum(diurnal, 0.0), np.maximum(burst, 0.0)
+
+
 def synthesize_trace(
     seed: int,
     dims: EnvDims,
@@ -89,20 +117,39 @@ def synthesize_trace(
     dur_median_steps: float = 6.0,
     dur_sigma: float = 0.9,
     r_sigma: float = 0.8,
+    diurnal_amp: float = 0.25,
+    diurnal_shift: float = 0.0,
+    burst_windows: tuple = (),
 ) -> Trace:
     """Alibaba-like synthetic trace. `lam` scales the arrival *rate* (RQ2);
-    demand calibration is always done at the lambda = 1 reference so the
-    sweep actually stresses the plant."""
+    demand calibration is always done at the lambda = 1, burst-free reference
+    so the sweep actually stresses the plant. `diurnal_amp` / `diurnal_shift`
+    / `burst_windows` reshape *when* load arrives (scenario hooks) without
+    touching the calibration."""
+    if lam < 0:
+        raise ValueError(f"lam must be >= 0, got {lam}")
+    if not 0.0 <= gpu_fraction <= 1.0:
+        raise ValueError(f"gpu_fraction must be in [0, 1], got {gpu_fraction}")
     T, J = dims.horizon, dims.max_arrivals
     rng = np.random.default_rng(seed)
 
-    # Diurnal arrival-rate modulation (production traces peak mid-day).
-    t = np.arange(T)
-    diurnal = 1.0 + 0.25 * np.sin(2 * np.pi * (t / T - 0.45))
+    # Diurnal arrival-rate modulation (production traces peak mid-day),
+    # optionally phase-shifted and overlaid with burst windows.
+    diurnal, burst = rate_modulation(T, diurnal_amp, diurnal_shift, burst_windows)
     base = cap_per_step * 1.05  # cap binds near the peak, as in the paper
-    step_cap = min(J, int(round(cap_per_step * max(lam, 1.0))))
+    # Per-step cap: the paper's 200/step limit scales with the *local* rate
+    # multiplier, so a burst window raises its own cap without inflating
+    # baseline steps outside the window.
+    step_cap = np.round(cap_per_step * np.maximum(lam * burst, 1.0)).astype(np.int64)
+    if int(step_cap.max()) > J:
+        warnings.warn(
+            f"arrival slots saturate: per-step cap {int(step_cap.max())} exceeds "
+            f"EnvDims.max_arrivals={J}; the delivered burst/oversubscription is "
+            f"weaker than requested — raise max_arrivals to remove the ceiling",
+            stacklevel=2,
+        )
     counts = np.minimum(
-        rng.poisson(base * diurnal * lam), step_cap
+        rng.poisson(base * diurnal * burst * lam), np.minimum(step_cap, J)
     ).astype(np.int32)
 
     valid = np.arange(J)[None, :] < counts[:, None]

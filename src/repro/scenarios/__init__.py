@@ -1,0 +1,11 @@
+"""Scenario subsystem: named operating conditions + batched evaluation.
+
+    from repro.scenarios import evaluate_suite, names
+    res = evaluate_suite(["greedy"], scenarios=["nominal", "heatwave"], seeds=4)
+    print(res.format_summary("cost_usd"))
+
+See DESIGN.md §11 for the spec/registry/suite layering.
+"""
+from repro.scenarios.spec import Scenario
+from repro.scenarios.registry import all_scenarios, get, names, register
+from repro.scenarios.suite import SuiteResult, build_cells, evaluate_suite

@@ -1,0 +1,51 @@
+"""Declarative scenario specs (DESIGN.md §11).
+
+A `Scenario` names one physical + workload condition the testbed must
+handle: it composes trace-generator overrides (arrival-rate scale, GPU mix,
+burst windows, diurnal phase) with `EnvParams` perturbations (ambient
+offsets, tariff scaling, cooling derating) applied through
+`repro.core.params.perturb`, which enforces physical bounds. Scenarios are
+pure data — building params or traces from one is explicit and
+deterministic per seed, so a suite cell (scenario, seed) is reproducible
+across policies and machines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from repro.core.params import EnvDims, EnvParams, make_params, perturb
+from repro.core.workload import Trace, synthesize_trace
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named operating condition for the geo-distributed plant.
+
+    `trace_overrides` are keyword overrides for `synthesize_trace` (`lam`,
+    `gpu_fraction`, `burst_windows`, `diurnal_shift`, ...). `param_scale` /
+    `param_offset` / `param_replace` feed `perturb` (scale applies before
+    offset). Fields not mentioned keep their Table-I values — in particular
+    cluster capacities stay untouched unless a scenario names them.
+    """
+
+    name: str
+    description: str
+    trace_overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    param_scale: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    param_offset: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    param_replace: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def build_params(self, base: EnvParams | None = None) -> EnvParams:
+        """Perturbed plant parameters (bounds enforced by `perturb`)."""
+        base = make_params() if base is None else base
+        return perturb(
+            base,
+            scale=dict(self.param_scale),
+            offset=dict(self.param_offset),
+            replace=dict(self.param_replace),
+        )
+
+    def build_trace(self, seed: int, dims: EnvDims, params: EnvParams) -> Trace:
+        """Seeded workload trace under this scenario's arrival process."""
+        return synthesize_trace(seed, dims, params, **dict(self.trace_overrides))

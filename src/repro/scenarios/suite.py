@@ -1,0 +1,154 @@
+"""Batched Monte-Carlo scenario evaluation (DESIGN.md §11).
+
+`evaluate_suite` runs policy x scenario x seed and emits Table-II metrics
+per cell. All (scenario, seed) cells share one set of stacked pytrees —
+scenario-perturbed `EnvParams`, seeded `Trace`s, and rollout keys — so each
+policy's entire grid is a single `jit(vmap(rollout_params))` call: the
+policy loop, the physics, and the metric reduction all live inside one XLA
+program. `batch_mode="scan"` swaps the vmap for `lax.map` (sequential
+episodes, same single jit) when the vmapped state does not fit in memory.
+
+Workload traces and rollout keys are fixed per seed across policies and
+scenarios (the paper's protocol), so column differences are attributable to
+the policy and row differences to the scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.env import rollout_params
+from repro.core.params import EnvDims, EnvParams, make_params, stack_params
+from repro.core.policies import Policy, make_policy
+from repro.scenarios import registry
+from repro.scenarios.spec import Scenario
+
+SUMMARY_METRICS = ("cost_usd", "kwh_per_job", "throttle_pct", "dropped_jobs")
+
+
+@dataclasses.dataclass
+class SuiteResult:
+    """Per-cell Table-II metrics: `cells[policy][scenario][metric]` is (K,)."""
+
+    policies: Tuple[str, ...]
+    scenarios: Tuple[str, ...]
+    seeds: int
+    cells: Dict[str, Dict[str, Dict[str, np.ndarray]]]
+
+    def mean(self, policy: str, scenario: str) -> Dict[str, float]:
+        return {m: float(v.mean()) for m, v in self.cells[policy][scenario].items()}
+
+    def format_scenario_tables(self) -> str:
+        """One Table-II block per scenario, policies as columns."""
+        blocks = []
+        for scen in self.scenarios:
+            rows = {pol: self.mean(pol, scen) for pol in self.policies}
+            blocks.append(f"### scenario: {scen}\n" + metrics.format_table(rows))
+        return "\n\n".join(blocks)
+
+    def format_summary(self, metric: str = "cost_usd") -> str:
+        """Cross-scenario summary: rows = scenarios, columns = policies."""
+        out = [f"| {metric} | " + " | ".join(self.policies) + " |",
+               "|---" * (len(self.policies) + 1) + "|"]
+        for scen in self.scenarios:
+            vals = []
+            for pol in self.policies:
+                v = self.cells[pol][scen][metric]
+                vals.append(f"{v.mean():,.2f} ± {v.std():,.2f}")
+            out.append(f"| {scen} | " + " | ".join(vals) + " |")
+        return "\n".join(out)
+
+
+def _resolve_policies(policies, dims) -> Dict[str, Policy]:
+    resolved: Dict[str, Policy] = {}
+    for p in policies:
+        pol = make_policy(p, dims) if isinstance(p, str) else p
+        resolved[pol.name] = pol
+    return resolved
+
+
+def _resolve_scenarios(scenarios) -> Tuple[Scenario, ...]:
+    if scenarios is None:
+        return registry.all_scenarios()
+    return tuple(registry.get(s) if isinstance(s, str) else s for s in scenarios)
+
+
+def build_cells(
+    scenarios: Sequence[Scenario],
+    seeds: int,
+    dims: EnvDims,
+    base_params: Optional[EnvParams] = None,
+):
+    """Stack scenario-perturbed params, seeded traces, and rollout keys into
+    leading-axis-(S*K) pytrees ready for one vmapped/scanned rollout."""
+    base = make_params() if base_params is None else base_params
+    params_cells, trace_cells, rng_cells = [], [], []
+    for scen in scenarios:
+        scen_params = scen.build_params(base)
+        for k in range(seeds):
+            params_cells.append(scen_params)
+            trace_cells.append(scen.build_trace(k, dims, scen_params))
+            rng_cells.append(jax.random.PRNGKey(k))
+    return (
+        stack_params(params_cells),
+        stack_params(trace_cells),
+        jnp.stack(rng_cells),
+    )
+
+
+def evaluate_suite(
+    policies: Iterable,
+    scenarios: Optional[Iterable] = None,
+    seeds: int = 4,
+    dims: Optional[EnvDims] = None,
+    base_params: Optional[EnvParams] = None,
+    batch_mode: str = "vmap",
+    warmup: int = 0,
+) -> SuiteResult:
+    """Evaluate policies over the scenario grid; one jitted call per policy.
+
+    `policies` / `scenarios` accept names or Policy/Scenario objects
+    (default scenarios: the full registry). Returns per-cell Table-II
+    metrics as (seeds,)-arrays per (policy, scenario).
+    """
+    if batch_mode not in ("vmap", "scan"):
+        raise ValueError(f"batch_mode must be 'vmap' or 'scan', got {batch_mode!r}")
+    dims = dims or EnvDims()
+    pols = _resolve_policies(policies, dims)
+    scens = _resolve_scenarios(scenarios)
+    stacked_params, stacked_traces, stacked_rngs = build_cells(
+        scens, seeds, dims, base_params
+    )
+
+    cells: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
+    for name, pol in pols.items():
+        def cell(p, t, r, pol=pol):
+            _, infos = rollout_params(dims, pol, p, t, r)
+            return metrics.summarize(infos, warmup=warmup)
+
+        if batch_mode == "vmap":
+            run = jax.jit(jax.vmap(cell))
+            out = run(stacked_params, stacked_traces, stacked_rngs)
+        else:  # scan-over-episodes fallback: sequential, memory-bound safe
+            run = jax.jit(
+                lambda ps, ts, rs: jax.lax.map(lambda a: cell(*a), (ps, ts, rs))
+            )
+            out = run(stacked_params, stacked_traces, stacked_rngs)
+
+        grid = {m: np.asarray(v).reshape(len(scens), seeds) for m, v in out.items()}
+        cells[name] = {
+            scen.name: {m: grid[m][si] for m in grid}
+            for si, scen in enumerate(scens)
+        }
+
+    return SuiteResult(
+        policies=tuple(pols),
+        scenarios=tuple(s.name for s in scens),
+        seeds=seeds,
+        cells=cells,
+    )

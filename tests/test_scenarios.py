@@ -1,0 +1,163 @@
+"""Scenario subsystem tests: registry integrity, physical bounds on
+perturbed params, workload hooks, and batched-suite parity with
+per-episode rollouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EnvDims, make_params, metrics, perturb, rollout_params, stack_params,
+    synthesize_trace,
+)
+from repro.core.policies import make_policy
+from repro.scenarios import all_scenarios, evaluate_suite, get, names
+
+DIMS = EnvDims(
+    horizon=24, queue_cap=128, run_cap=128, pending_cap=64,
+    max_arrivals=64, admit_depth=64, policy_depth=128,
+)
+PARAMS = make_params()
+
+
+# ---------------------------------------------------------------- perturb
+
+
+def test_perturb_scale_offset_replace():
+    p = perturb(PARAMS, scale={"cool_max": 0.5}, offset={"amb_base": 8.0},
+                replace={"theta_soft": 30.0})
+    np.testing.assert_allclose(np.asarray(p.cool_max),
+                               0.5 * np.asarray(PARAMS.cool_max), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p.amb_base),
+                               np.asarray(PARAMS.amb_base) + 8.0, rtol=1e-6)
+    assert float(p.theta_soft) == 30.0
+    # untouched fields are identical objects/values
+    np.testing.assert_array_equal(np.asarray(p.c_max), np.asarray(PARAMS.c_max))
+
+
+def test_perturb_enforces_physical_bounds():
+    p = perturb(PARAMS, scale={"price_peak": -1.0}, offset={"cool_max": -1e12})
+    assert bool((p.price_peak > 0).all())
+    assert bool((p.cool_max >= 0).all())
+    p = perturb(PARAMS, offset={"g_min": 5.0})
+    assert bool((p.g_min <= 1.0).all())
+
+
+def test_perturb_rejects_structural_and_unknown_fields():
+    with pytest.raises(ValueError):
+        perturb(PARAMS, scale={"is_gpu": 2.0})
+    with pytest.raises(KeyError):
+        perturb(PARAMS, scale={"not_a_field": 2.0})
+
+
+def test_stack_params_adds_leading_axis():
+    stacked = stack_params([PARAMS, perturb(PARAMS, scale={"cool_max": 0.5})])
+    assert stacked.cool_max.shape == (2, 4)
+    assert stacked.c_max.shape == (2, 20)
+    np.testing.assert_allclose(np.asarray(stacked.cool_max[1]),
+                               0.5 * np.asarray(stacked.cool_max[0]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- workload hooks
+
+
+def test_burst_window_raises_arrivals_inside_window():
+    # small cap_per_step leaves headroom below max_arrivals so the burst
+    # shows up in the counts instead of saturating the slot cap
+    plain = synthesize_trace(0, DIMS, PARAMS, cap_per_step=16)
+    burst = synthesize_trace(0, DIMS, PARAMS, cap_per_step=16,
+                             burst_windows=((0.25, 0.75, 3.0),))
+    T = DIMS.horizon
+    lo, hi = T // 4, 3 * T // 4
+    in_win = float(burst.valid[lo:hi].sum()) / max(float(plain.valid[lo:hi].sum()), 1)
+    out_win = float(burst.valid[:lo].sum()) / max(float(plain.valid[:lo].sum()), 1)
+    assert in_win > 1.5, in_win          # burst window genuinely denser
+    assert 0.8 < out_win < 1.25, out_win  # outside the window unchanged-ish
+
+
+def test_diurnal_shift_moves_peak():
+    dims = EnvDims(horizon=96, max_arrivals=256)
+    plain = synthesize_trace(0, dims, PARAMS, diurnal_amp=0.5)
+    shifted = synthesize_trace(0, dims, PARAMS, diurnal_amp=0.5, diurnal_shift=0.5)
+    peak_plain = int(np.argmax(np.asarray(plain.valid.sum(axis=1))))
+    peak_shift = int(np.argmax(np.asarray(shifted.valid.sum(axis=1))))
+    delta = abs(peak_plain - peak_shift) % dims.horizon
+    delta = min(delta, dims.horizon - delta)
+    assert delta > dims.horizon // 4  # peak moved ~half a day
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_registry_has_documented_suite():
+    expected = {"nominal", "heatwave", "flash_crowd", "price_spike",
+                "gpu_heavy", "oversubscribed", "cooling_degraded",
+                "diurnal_shift"}
+    assert expected <= set(names())
+
+
+def test_every_scenario_builds_within_physical_bounds():
+    for scen in all_scenarios():
+        p = scen.build_params(PARAMS)
+        assert bool((p.price_peak > 0).all()), scen.name
+        assert bool((p.price_off > 0).all()), scen.name
+        assert bool((p.cool_max >= 0).all()), scen.name
+        # capacities unchanged unless the scenario names them
+        if "c_max" not in {*scen.param_scale, *scen.param_offset,
+                           *scen.param_replace}:
+            np.testing.assert_array_equal(
+                np.asarray(p.c_max), np.asarray(PARAMS.c_max),
+                err_msg=scen.name,
+            )
+        t = scen.build_trace(0, DIMS, p)
+        assert t.r.shape == (DIMS.horizon, DIMS.max_arrivals), scen.name
+        assert bool(t.valid.any()), scen.name
+        assert bool((t.r >= 0).all()), scen.name
+
+
+# ---------------------------------------------------------------- suite
+
+
+def test_evaluate_suite_matches_per_episode_rollout():
+    scen_names = ["nominal", "cooling_degraded"]
+    res = evaluate_suite(["greedy"], scenarios=scen_names, seeds=2, dims=DIMS)
+    assert res.policies == ("greedy",)
+    assert res.scenarios == tuple(scen_names)
+
+    pol = make_policy("greedy", DIMS)
+    for scen_name in scen_names:
+        scen = get(scen_name)
+        p = scen.build_params()
+        for k in range(2):
+            t = scen.build_trace(k, DIMS, p)
+            _, infos = jax.jit(
+                lambda r, p=p, t=t: rollout_params(DIMS, pol, p, t, r)
+            )(jax.random.PRNGKey(k))
+            want = metrics.summarize(infos)
+            got = res.cells["greedy"][scen_name]
+            for key in ("cost_usd", "total_energy_kwh", "completed_jobs",
+                        "theta_max", "cpu_util_pct"):
+                np.testing.assert_allclose(
+                    float(got[key][k]), float(want[key]), rtol=1e-5,
+                    err_msg=f"{scen_name}/{key}/seed{k}",
+                )
+
+
+def test_evaluate_suite_scan_mode_matches_vmap():
+    kw = dict(scenarios=["nominal", "flash_crowd"], seeds=2, dims=DIMS)
+    res_v = evaluate_suite(["greedy"], **kw)
+    res_s = evaluate_suite(["greedy"], batch_mode="scan", **kw)
+    for scen in res_v.scenarios:
+        for key in ("cost_usd", "completed_jobs"):
+            np.testing.assert_allclose(
+                res_v.cells["greedy"][scen][key],
+                res_s.cells["greedy"][scen][key], rtol=1e-5)
+
+
+def test_suite_tables_render():
+    res = evaluate_suite(["greedy"], scenarios=["nominal"], seeds=2, dims=DIMS)
+    summary = res.format_summary("cost_usd")
+    tables = res.format_scenario_tables()
+    assert "nominal" in summary and "greedy" in summary
+    assert "scenario: nominal" in tables and "cost_usd" in tables
+    assert "±" in summary

@@ -11,9 +11,10 @@ from repro.analysis.hlo import analyze_hlo
 from repro.distributed import partitioning as pt
 from repro.distributed import sharding as sh
 
-MESH2 = AbstractMesh((2, 2), ("data", "model"))
-MESH16 = AbstractMesh((16, 16), ("data", "model"))
-MESHPOD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# jax 0.4.37 AbstractMesh signature: one tuple of (axis_name, size) pairs.
+MESH2 = AbstractMesh((("data", 2), ("model", 2)))
+MESH16 = AbstractMesh((("data", 16), ("model", 16)))
+MESHPOD = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_resolve_divisibility_fallback():
