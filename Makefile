@@ -1,12 +1,15 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test check bench quickstart sweep
+.PHONY: test check bench docs quickstart sweep
 
 test:            ## tier-1 test suite (slow tests deselected)
 	$(PY) -m pytest -q -m "not slow"
 
-check:           ## CI smoke: tier-1 tests + tiny scenario-suite evaluation
+docs:            ## docs consistency: §-citations, scenario tables, md links
+	$(PY) -m pytest -q tests/test_docs.py
+
+check: docs      ## CI smoke: docs checks + tier-1 tests + tiny suite eval
 	$(PY) -m benchmarks.run --smoke
 
 bench:           ## CI-sized benchmark pass

@@ -1,16 +1,23 @@
 """Kernel micro-benchmarks: Pallas (interpret on CPU / compiled on TPU) vs
 the pure-jnp oracle, plus the analytic HBM-traffic comparison that drives
-the §Perf flash-attention claim (wall-clock on CPU interpret mode is NOT
-meaningful — the derived byte counts are)."""
+the §Perf flash-attention claim. On CPU the Pallas numbers come from
+interpret mode — wall-clock there is NOT meaningful (the derived byte
+counts are); on TPU the same entry points time the compiled kernels.
+Results land in BENCH_kernels.json at the repo root."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_kernels.json")
 
 
 def flash_attention_traffic(b=1, s=4096, h=8, dh=128, block=128):
@@ -57,19 +64,54 @@ def main(fast: bool = False):
     print(f"ssm_update oracle b={b} h={h}: {t*1e3:8.3f} ms; state traffic {traffic:.1f} MB "
           f"(kernel: read+write state exactly once)")
 
-    B, H, D = (32, 24, 128)
+    B, H, D = (8, 12, 128) if fast else (32, 24, 128)
     theta0 = jnp.asarray(rng.uniform(20, 30, (B, D)), jnp.float32)
     heat = jnp.asarray(rng.uniform(0, 2e6, (B, H, D)), jnp.float32)
     amb = jnp.asarray(rng.uniform(5, 45, (H, D)), jnp.float32)
     target = jnp.asarray(rng.uniform(18, 28, (B, H, D)), jnp.float32)
     gain = jnp.full((D,), 5e5); cm = jnp.full((D,), 1e6)
     a = jnp.full((D,), 5e-7); bb = jnp.full((D,), 1e-6)
-    t = time_fn(jax.jit(lambda *args: ref.thermal_rollout_ref(*args)[0]),
-                theta0, heat, amb, target, gain, cm, a, bb)
-    hbm_scan = B * D * 4 * 2 * H  # state round-trips HBM each step
-    hbm_kernel = B * H * D * 4 * 2  # stream heat/target once
-    print(f"thermal_rollout oracle B={B} H={H}: {t*1e3:8.3f} ms; "
-          f"state round-trip {hbm_scan/1e6:.2f} MB -> kernel stream {hbm_kernel/1e6:.2f} MB")
+    args = (theta0, heat, amb, target, gain, cm, a, bb)
+    t_therm_ref = time_fn(
+        jax.jit(lambda *ar: ref.thermal_rollout_ref(*ar)[0]), *args
+    )
+    # the actual Pallas kernel (interpret mode on CPU, compiled on TPU)
+    t_therm_pal = time_fn(lambda *ar: ops.thermal_rollout(*ar)[0], *args)
+    # HBM traffic: both paths stream the (heat, target) inputs and the
+    # (thetas, cools) outputs once (4 slabs); the jnp scan additionally
+    # round-trips the (B, D) carry through HBM every step (2 more slabs),
+    # which the kernel keeps in VMEM for the whole horizon.
+    hbm_scan = 6 * B * H * D * 4
+    hbm_kernel = 4 * B * H * D * 4
+    backend = jax.default_backend()
+    wall_note = "" if backend == "tpu" else " (interpret: wall not meaningful)"
+    print(f"thermal_rollout B={B} H={H}: oracle {t_therm_ref*1e3:8.3f} ms, "
+          f"pallas {t_therm_pal*1e3:8.3f} ms{wall_note}; "
+          f"scan HBM {hbm_scan/1e6:.2f} MB -> kernel stream {hbm_kernel/1e6:.2f} MB")
+
+    payload = {
+        "bench": "kernels",
+        "fast": fast,
+        "jax_backend": backend,
+        "pallas_interpret": backend != "tpu",
+        "thermal_rollout": {
+            "shape": {"B": B, "H": H, "D": D},
+            "ref_ms": t_therm_ref * 1e3,
+            "pallas_ms": t_therm_pal * 1e3,
+            "hbm_bytes_scan": hbm_scan,
+            "hbm_bytes_kernel": hbm_kernel,
+        },
+        "ssm_update": {"ref_ms": t * 1e3},
+        "flash_attention": {
+            "ref_ms": t_ref * 1e3,
+            "hbm_bytes_naive_32k": naive,
+            "hbm_bytes_flash_32k": flash,
+        },
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {BENCH_JSON}")
+    return payload
 
 
 if __name__ == "__main__":

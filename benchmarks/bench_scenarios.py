@@ -1,17 +1,22 @@
 """Scenario-suite benchmark: per-scenario wall-clock and env-steps/sec for
-the batched Monte-Carlo harness (jit(vmap(rollout)) over seeds).
+the batched Monte-Carlo harness, plus a per-backend throughput comparison
+(vmap / chunked / shard / scan — DESIGN.md §11) written to
+BENCH_scenarios.json at the repo root.
 
   PYTHONPATH=src python -m benchmarks.bench_scenarios
   PYTHONPATH=src python -m benchmarks.run --only scenarios
 
-The first scenario is timed twice: the first call includes XLA compilation
-(shared by every later scenario — shapes and dtypes are identical across
-the suite, so the executable is reused).
+Backends are timed on the *second* call of a prebuilt runner, so reported
+steps/sec exclude XLA compilation; the compile time is reported separately.
+Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 (or on real
+multi-device hardware) to include the `shard` backend.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 
@@ -19,6 +24,22 @@ from repro.core import EnvDims, metrics
 from repro.core.env import rollout_params
 from repro.core.policies import make_policy
 from repro.scenarios import build_cells, names, registry
+from repro.scenarios.suite import default_chunk_size, make_runner
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_scenarios.json")
+
+
+def _bench_dims(fast: bool) -> EnvDims:
+    return EnvDims(
+        horizon=48 if fast else 288,
+        max_arrivals=64 if fast else 256,
+        queue_cap=256 if fast else 4096,
+        run_cap=256 if fast else 2048,
+        pending_cap=128 if fast else 2048,
+        admit_depth=64 if fast else 256,
+        policy_depth=128 if fast else 1024,
+    )
 
 
 def run(
@@ -28,16 +49,9 @@ def run(
     dims: Optional[EnvDims] = None,
     fast: bool = False,
 ) -> Dict[str, Dict[str, float]]:
+    """Per-scenario wall-clock under the vmap backend (legacy output)."""
     if dims is None:
-        dims = EnvDims(
-            horizon=48 if fast else 288,
-            max_arrivals=64 if fast else 256,
-            queue_cap=256 if fast else 4096,
-            run_cap=256 if fast else 2048,
-            pending_cap=128 if fast else 2048,
-            admit_depth=64 if fast else 256,
-            policy_depth=128 if fast else 1024,
-        )
+        dims = _bench_dims(fast)
     if fast:
         seeds = min(seeds, 2)
     scen_names = tuple(scenarios or names())
@@ -76,8 +90,75 @@ def run(
     return results
 
 
+def backends_throughput(
+    policy: str = "greedy",
+    scenarios=None,
+    seeds: int = 4,
+    dims: Optional[EnvDims] = None,
+    fast: bool = False,
+    backends: Optional[List[str]] = None,
+) -> Dict[str, Dict[str, float]]:
+    """Whole-grid throughput per execution backend, compile excluded."""
+    if dims is None:
+        dims = _bench_dims(fast)
+    if fast:
+        seeds = min(seeds, 2)
+    scen_names = tuple(scenarios or names())
+    n_cells = len(scen_names) * seeds
+    pol = make_policy(policy, dims)
+    stacked = build_cells([registry.get(s) for s in scen_names], seeds, dims)
+
+    if backends is None:
+        backends = ["vmap", "chunked", "scan"]
+        if len(jax.devices()) > 1:
+            backends.insert(1, "shard")
+
+    def cell(p, t, r):
+        _, infos = rollout_params(dims, pol, p, t, r)
+        return metrics.summarize(infos)
+
+    out: Dict[str, Dict[str, float]] = {}
+    for mode in backends:
+        chunk = max(1, n_cells // 4) if mode == "chunked" else None
+        runner = make_runner(cell, n_cells, mode, chunk_size=chunk, dims=dims)
+        t0 = time.time()
+        jax.block_until_ready(runner(*stacked))
+        compile_s = time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(runner(*stacked))
+        wall = time.time() - t0
+        out[mode] = {
+            "wall_s": wall,
+            "steps_per_s": n_cells * dims.horizon / wall,
+            "first_call_s": compile_s,
+        }
+
+    print(f"\n# backends: {n_cells} cells ({len(scen_names)} scenarios x "
+          f"{seeds} seeds), horizon={dims.horizon}, "
+          f"devices={len(jax.devices())}")
+    print("backend,wall_s,steps_per_s,first_call_s")
+    for mode, r in out.items():
+        print(f"{mode},{r['wall_s']:.3f},{r['steps_per_s']:.0f},"
+              f"{r['first_call_s']:.1f}")
+    return out
+
+
 def main(fast: bool = False):
-    return run(fast=fast)
+    results = run(fast=fast)
+    backends = backends_throughput(fast=fast)
+    payload = {
+        "bench": "scenarios",
+        "fast": fast,
+        "jax_backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "per_scenario_vmap": results,
+        "per_backend": backends,
+        "default_chunk_size": default_chunk_size(_bench_dims(fast)),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {BENCH_JSON}")
+    return results, backends
 
 
 if __name__ == "__main__":

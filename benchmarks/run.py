@@ -102,9 +102,13 @@ def main() -> None:
 
         print("\n=== Scenario suite: per-scenario wall-clock + steps/sec ===")
         t0 = time.time()
-        res = bench_scenarios.main(fast=args.fast)
+        res, backends = bench_scenarios.main(fast=args.fast)
         sps = max(r["steps_per_s"] for r in res.values())
-        rows.append(("scenarios", time.time() - t0, f"peak_sps={sps:.0f}"))
+        per_backend = " ".join(
+            f"{m}={r['steps_per_s']:.0f}" for m, r in backends.items()
+        )
+        rows.append(("scenarios", time.time() - t0,
+                     f"peak_sps={sps:.0f} backend_sps: {per_backend}"))
 
     if want("kernels"):
         from benchmarks import bench_kernels

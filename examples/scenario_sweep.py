@@ -1,14 +1,21 @@
 """Scenario sweep: evaluate heuristic schedulers across named operating
 conditions (heatwave, flash crowd, oversubscription, ...) with batched
-Monte-Carlo — every scenario x seed cell of a policy runs in ONE
-jit(vmap(rollout)) call.
+Monte-Carlo — every scenario x seed cell of a policy runs in ONE jitted
+call per policy, spread over every visible device.
 
   PYTHONPATH=src python examples/scenario_sweep.py
+  PYTHONPATH=src python examples/scenario_sweep.py --batch-mode chunked
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/scenario_sweep.py --batch-mode shard
+
+See SIMULATOR_GUIDE.md for the backend decision table.
 """
+import argparse
 import time
 
 from repro.core import EnvDims
 from repro.scenarios import evaluate_suite, get
+from repro.scenarios.suite import BATCH_MODES
 
 SCENARIOS = ("nominal", "heatwave", "flash_crowd", "oversubscribed",
              "cooling_degraded", "price_spike")
@@ -16,6 +23,11 @@ POLICIES = ("greedy", "thermal")
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch-mode", default="auto", choices=BATCH_MODES,
+                    help="suite execution backend (default: auto-select)")
+    args = ap.parse_args()
+
     # Moderate dims keep the demo CPU-friendly; drop the overrides for the
     # full Table-I configuration.
     dims = EnvDims(horizon=96, max_arrivals=128, queue_cap=512, run_cap=512,
@@ -26,10 +38,12 @@ def main():
         print(f"  {name:17s} {get(name).description}")
 
     t0 = time.time()
-    res = evaluate_suite(POLICIES, scenarios=SCENARIOS, seeds=4, dims=dims)
+    res = evaluate_suite(POLICIES, scenarios=SCENARIOS, seeds=4, dims=dims,
+                         batch_mode=args.batch_mode)
     n_cells = len(POLICIES) * len(SCENARIOS) * 4
     print(f"\n{n_cells} episodes ({len(SCENARIOS)} scenarios x 4 seeds x "
-          f"{len(POLICIES)} policies) in {time.time() - t0:.1f}s\n")
+          f"{len(POLICIES)} policies, batch_mode={args.batch_mode}) "
+          f"in {time.time() - t0:.1f}s\n")
 
     print("Cost ($ / episode) by scenario:")
     print(res.format_summary("cost_usd"))

@@ -133,6 +133,52 @@ def plant_rollout(
     return traj, cool
 
 
+def candidate_thermal_rollout(
+    theta0,            # (B, D)
+    heat,              # (B, H, D) planned compute heat (pre-throttle)
+    amb,               # (H, D) ambient forecast
+    target,            # (B, H, D) candidate setpoint sequences
+    agg: AggregateParams,
+    params: EnvParams,
+    backend: str = "auto",
+):
+    """Thermal recurrence for B candidate plans at once (DESIGN.md §12).
+
+    The H-MPC stage-1.5 refinement scores many candidate setpoint
+    sequences against the same planned heat trajectory. That inner loop is
+    exactly `kernels.thermal_rollout`: RC step + cooling proxy + throttle,
+    elementwise over (B, D), sequential over H. `backend` selects the
+    implementation:
+
+    - "pallas": the VMEM-resident Pallas kernel (`kernels.ops`),
+    - "ref":    the pure-jnp scan oracle (`kernels.ref`) — bitwise the
+                same arithmetic, state round-trips HBM each step,
+    - "auto":   pallas on TPU, ref elsewhere (the kernel's interpret mode
+                is correct on CPU but adds no speed).
+
+    Both paths hard-code the nominal throttle constants (theta_soft 32,
+    theta_max 35, g_min 0.3) — a planning approximation; the simulator
+    applies the per-plant values. Returns (thetas (B,H,D), cool (B,H,D)).
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    a = params.dt / params.c_th
+    b = params.dt / (params.c_th * params.r_th)
+    if backend == "pallas":
+        from repro.kernels.ops import thermal_rollout
+
+        return thermal_rollout(
+            theta0, heat, amb, target, agg.gain, params.cool_max, a, b
+        )
+    if backend == "ref":
+        from repro.kernels.ref import thermal_rollout_ref
+
+        return thermal_rollout_ref(
+            theta0, heat, amb, target, agg.gain, params.cool_max, a, b
+        )
+    raise ValueError(f"backend must be 'auto', 'pallas', or 'ref', got {backend!r}")
+
+
 def ambient_forecast(t0, horizon: int, params: EnvParams, steps_per_day: int = 288):
     """Nominal (noise-free) exogenous ambient forecast eta_hat (Eq. 21)."""
     ts = t0.astype(jnp.float32) + jnp.arange(1, horizon + 1, dtype=jnp.float32)

@@ -53,6 +53,13 @@ class HMPCConfig:
     w_reject: float = 10.0
     w_head: float = 5.0
     w_bal: float = 2.0
+    # stage-1.5 candidate setpoint refinement (DESIGN.md §12): evaluate
+    # `refine_candidates` shifted copies of the Adam plan's setpoint
+    # sequence through the batched thermal recurrence and keep the best.
+    # 0 disables; use an odd count so the unshifted plan is a candidate.
+    refine_candidates: int = 0
+    refine_span: float = 2.0       # degC: candidate offsets in ±span
+    thermal_backend: str = "auto"  # 'auto' | 'pallas' | 'ref' (DESIGN.md §12)
 
 
 jax.tree_util.register_dataclass(
@@ -152,6 +159,63 @@ def _stage1(state, params, agg, cfg: HMPCConfig, pol: HMPCState, num_dcs: int):
     w = jax.nn.softmax(z["route"], axis=1)
     target = params.setpoint_lo + jax.nn.sigmoid(z["target"]) * span
     return w[0, :-1, :], target, z["route"], z["target"]
+
+
+def _refine_targets(
+    state, params, agg, cfg: HMPCConfig, pol: HMPCState, rho, defer, target,
+    num_dcs: int,
+):
+    """Stage-1.5: candidate-batched setpoint refinement (DESIGN.md §12).
+
+    Re-rolls the aggregate plant once under the optimized routing to get
+    the planned compute-heat trajectory, then scores `refine_candidates`
+    uniformly shifted copies of the setpoint sequence through the batched
+    thermal recurrence (`candidate_thermal_rollout` — the Pallas kernel on
+    TPU, the ref oracle elsewhere) and returns the argmin sequence. The
+    scoring reuses the stage-1 thermal/energy weights; forward passes
+    only, so the non-differentiable kernel path is fine here.
+    """
+    H, B = cfg.h1, cfg.refine_candidates
+    st0 = plant.plant_state_from_env(state, params, num_dcs)
+    amb = plant.ambient_forecast(state.t, H, params)
+    price = plant.price_forecast(state.t, H, params)
+    offered_load = pol.ema_count * pol.ema_rbar
+    traj, _ = plant.plant_rollout(
+        st0, rho, defer, target, jnp.broadcast_to(offered_load, (H, 2)), amb,
+        pol.ema_mu, agg, params,
+    )
+    # candidate_thermal_rollout expects PRE-throttle heat (its recurrence
+    # applies g(theta) itself, per candidate). The plant's util is already
+    # capacity-throttled by g(theta_{t-1}), so divide that factor back out
+    # — the kernel then reproduces the plan's heat when a candidate tracks
+    # the planned temperatures and scales it as candidates run hot/cold.
+    theta_prev = jnp.concatenate([st0.theta[None], traj.theta[:-1]], axis=0)
+    g_plan = thermal.throttle_factor(theta_prev, params)   # (H, D)
+    heat = (agg.alpha_bar * traj.util).sum(-1) / g_plan    # (H, D)
+
+    offsets = jnp.linspace(-cfg.refine_span, cfg.refine_span, B)
+    cands = jnp.clip(
+        target[None] + offsets[:, None, None],
+        params.setpoint_lo, params.setpoint_hi,
+    )                                                      # (B, H, D)
+    thetas, cools = plant.candidate_thermal_rollout(
+        jnp.broadcast_to(st0.theta, (B, num_dcs)),
+        jnp.broadcast_to(heat, (B, H, num_dcs)),
+        amb, cands, agg, params, backend=cfg.thermal_backend,
+    )
+
+    cap_total = agg.c_max.sum()
+    phibar_fleet = (agg.phi_bar * agg.c_max).sum() / cap_total
+    cost_scale = 0.15 * cap_total * phibar_fleet * params.dt / 3.6e6
+    cool_kwh = cools * params.dt / 3.6e6                   # (B, H, D)
+    j_energy = cfg.w_energy * (price[None] * cool_kwh).sum((1, 2)) / (H * cost_scale)
+    j_soft = cfg.w_soft * jnp.mean(
+        jax.nn.relu(thetas - (params.theta_soft - cfg.soft_margin)) ** 2, (1, 2)
+    )
+    j_hard = cfg.w_hard * jnp.mean(jax.nn.relu(thetas - params.theta_max) ** 2, (1, 2))
+    j_dev = cfg.w_temp_dev * jnp.mean((thetas - cands) ** 2, (1, 2))
+    best = jnp.argmin(j_energy + j_soft + j_hard + j_dev)
+    return jnp.take(cands, best, axis=0)                   # (H, D)
 
 
 def _stage2(state, params, agg, cfg: HMPCConfig, pol: HMPCState, rho0, num_dcs: int):
@@ -254,6 +318,12 @@ def h_mpc_policy(dims: EnvDims, cfg: HMPCConfig = HMPCConfig()) -> Policy:
         rho0, target, z_route, z_target = _stage1(
             state, params, agg, cfg, pol_state, D
         )
+        if cfg.refine_candidates > 0:
+            w = jax.nn.softmax(z_route, axis=1)
+            target = _refine_targets(
+                state, params, agg, cfg, pol_state,
+                w[:, :-1, :], w[:, -1, :], target, D,
+            )
         weights, z_alloc = _stage2(state, params, agg, cfg, pol_state, rho0, D)
         assign = _counts_to_assign(offered, rho0, weights, pol_state, params, C)
         pol_state = dataclasses.replace(

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 THETA_SOFT, THETA_MAX, G_MIN = 32.0, 35.0, 0.3
+LANE = 128  # TPU lane width: D is padded up to a multiple of this
 
 
 def _kernel(theta0_ref, heat_ref, amb_ref, target_ref, gain_ref, coolmax_ref,
@@ -48,8 +49,21 @@ def _kernel(theta0_ref, heat_ref, amb_ref, target_ref, gain_ref, coolmax_ref,
 @functools.partial(jax.jit, static_argnames=("block_b",))
 def thermal_rollout(theta0, heat, amb, target, gain, cool_max, a, b,
                     block_b: int = 8):
-    """See kernels.ref.thermal_rollout_ref for semantics/shapes."""
-    bsz, horizon, d = heat.shape
+    """See kernels.ref.thermal_rollout_ref for semantics/shapes.
+
+    D is zero-padded up to a LANE multiple so small-D callers (the H-MPC
+    candidate refinement runs D = num_dcs = 4) still produce lane-aligned
+    blocks on TPU; padded lanes have a = b = gain = cool_max = 0, so their
+    state stays exactly 0 and is sliced off before returning.
+    """
+    bsz, horizon, d_in = heat.shape
+    d_pad = (-d_in) % LANE
+    if d_pad:
+        lastdim = lambda x: jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, d_pad)])
+        theta0, heat, amb, target, gain, cool_max, a, b = (
+            lastdim(x) for x in (theta0, heat, amb, target, gain, cool_max, a, b)
+        )
+    d = d_in + d_pad
     f32 = jnp.float32
     grid = (pl.cdiv(bsz, block_b),)
     out_shape = (
@@ -86,6 +100,8 @@ def thermal_rollout(theta0, heat, amb, target, gain, cool_max, a, b,
         a.astype(f32)[None],
         b.astype(f32)[None],
     )
+    if d_pad:
+        thetas, cools = thetas[..., :d_in], cools[..., :d_in]
     return thetas, cools
 
 

@@ -29,6 +29,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(dev_array, axes)
 
 
+def make_cells_mesh(n_devices: int | None = None):
+    """1-D mesh over every visible device, axis "cells" (DESIGN.md §11).
+
+    The scenario suite's `batch_mode="shard"` lays its stacked
+    (scenario x seed) cell pytrees over this axis with `shard_map`; cells
+    are embarrassingly parallel, so a flat axis is the whole story — no
+    model/data split, no collectives inside the rollout.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else n_devices
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("cells",))
+
+
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Tiny mesh for unit tests (requires >= data*model local devices)."""
     import numpy as np

@@ -3,10 +3,24 @@
 `evaluate_suite` runs policy x scenario x seed and emits Table-II metrics
 per cell. All (scenario, seed) cells share one set of stacked pytrees —
 scenario-perturbed `EnvParams`, seeded `Trace`s, and rollout keys — so each
-policy's entire grid is a single `jit(vmap(rollout_params))` call: the
-policy loop, the physics, and the metric reduction all live inside one XLA
-program. `batch_mode="scan"` swaps the vmap for `lax.map` (sequential
-episodes, same single jit) when the vmapped state does not fit in memory.
+policy's entire grid is a single jitted call: the policy loop, the physics,
+and the metric reduction all live inside one XLA program.
+
+Four execution backends trade memory for parallelism over the same stacked
+cells (`make_runner`):
+
+- ``vmap``    — one `jit(vmap(cell))`; fastest when the whole batched state
+                fits in memory.
+- ``chunked`` — `lax.map` over chunks with a vmap inside each chunk: peak
+                memory is one chunk's worth, still a single jit.
+- ``shard``   — `shard_map` over a 1-D device mesh (`launch.mesh.
+                make_cells_mesh`), vmap within each device's shard; the
+                grid is padded to a multiple of the device count.
+- ``scan``    — `lax.map` over single episodes; the sequential,
+                memory-minimal fallback.
+
+`batch_mode="auto"` picks one from the grid size, the estimated per-cell
+state footprint, and the number of visible XLA devices.
 
 Workload traces and rollout keys are fixed per seed across policies and
 scenarios (the paper's protocol), so column differences are attributable to
@@ -15,11 +29,13 @@ the policy and row differences to the scenario.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import metrics
 from repro.core.env import rollout_params
@@ -29,6 +45,13 @@ from repro.scenarios import registry
 from repro.scenarios.spec import Scenario
 
 SUMMARY_METRICS = ("cost_usd", "kwh_per_job", "throttle_pct", "dropped_jobs")
+
+BATCH_MODES = ("auto", "vmap", "chunked", "shard", "scan")
+
+# Default accelerator-memory budget the auto-selector plans against. CPU
+# hosts usually have much more RAM than this; the budget is deliberately
+# conservative so "auto" degrades to chunked before an OOM, not after.
+DEFAULT_MEMORY_BUDGET = 2 << 30  # 2 GiB
 
 
 @dataclasses.dataclass
@@ -85,7 +108,7 @@ def build_cells(
     base_params: Optional[EnvParams] = None,
 ):
     """Stack scenario-perturbed params, seeded traces, and rollout keys into
-    leading-axis-(S*K) pytrees ready for one vmapped/scanned rollout."""
+    leading-axis-(S*K) pytrees ready for one vmapped/sharded rollout."""
     base = make_params() if base_params is None else base_params
     params_cells, trace_cells, rng_cells = [], [], []
     for scen in scenarios:
@@ -101,29 +124,176 @@ def build_cells(
     )
 
 
+# ---------------------------------------------------------------------------
+# Backend selection & execution
+# ---------------------------------------------------------------------------
+
+
+def estimate_cell_bytes(dims: EnvDims) -> int:
+    """Order-of-magnitude per-cell memory footprint (bytes) of one episode.
+
+    Counts the dominant static-shape arrays a batched rollout materializes
+    per cell: the job tables carried through the scan (DESIGN.md §5.2), the
+    workload trace, and the stacked per-step StepInfo outputs. Deliberately
+    rough — it drives the auto backend choice, nothing numerical.
+    """
+    C, T, J = dims.num_clusters, dims.horizon, dims.max_arrivals
+    tables = C * (dims.queue_cap + dims.run_cap) * 4 * 4   # r/dur/prio (+slack)
+    pending = dims.pending_cap * 4 * 4
+    trace = T * J * (4 + 4 + 4 + 1 + 1)                    # r/dur/prio/is_gpu/valid
+    infos = T * (C + 6 * dims.num_dcs + 10) * 4            # stacked StepInfo
+    # the scan carries ~2 live copies of the state (carry + in-flight update)
+    return 2 * (tables + pending) + trace + infos
+
+
+def select_batch_mode(
+    n_cells: int,
+    dims: EnvDims,
+    n_devices: Optional[int] = None,
+    memory_budget: int = DEFAULT_MEMORY_BUDGET,
+) -> str:
+    """Pick a concrete backend for `batch_mode="auto"`.
+
+    shard when >1 device is visible AND each device's slice of the grid
+    fits the (per-device) budget — padding the grid to the device count
+    is cheap next to leaving devices idle, but the shard runner vmaps its
+    whole slice, so an oversized slice must degrade to chunked *before*
+    the OOM, not after. Single-device: vmap while the whole grid fits,
+    chunked beyond that. `scan` is never auto-selected — it is the
+    explicit last resort.
+    """
+    nd = len(jax.devices()) if n_devices is None else n_devices
+    cell_bytes = estimate_cell_bytes(dims)
+    if nd > 1:
+        per_device_cells = -(-n_cells // nd)
+        if per_device_cells * cell_bytes <= memory_budget:
+            return "shard"
+        return "chunked"
+    if n_cells * cell_bytes > memory_budget:
+        return "chunked"
+    return "vmap"
+
+
+def default_chunk_size(
+    dims: EnvDims, memory_budget: int = DEFAULT_MEMORY_BUDGET
+) -> int:
+    """Largest per-chunk cell count whose footprint fits the budget."""
+    return max(1, int(memory_budget // estimate_cell_bytes(dims)))
+
+
+def _pad_cells(tree, pad: int):
+    """Pad the leading (cell) axis by repeating the last cell `pad` times.
+
+    Edge replication keeps the padding physically valid (it re-runs a real
+    cell), so no backend ever sees a degenerate plant; padded outputs are
+    sliced off before results are reported.
+    """
+    if pad == 0:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.concatenate(
+            [leaf, jnp.repeat(leaf[-1:], pad, axis=0)]
+        ),
+        tree,
+    )
+
+
+def make_runner(
+    cell: Callable,
+    n_cells: int,
+    batch_mode: str,
+    chunk_size: Optional[int] = None,
+    dims: Optional[EnvDims] = None,
+) -> Callable:
+    """Compile `cell(params, trace, rng) -> {metric: scalar}` into a grid
+    runner over stacked cells under the chosen backend.
+
+    The returned callable maps stacked (N, ...) pytrees to {metric: (N,)}
+    and can be invoked repeatedly without re-tracing (benchmarks time the
+    second call to exclude compilation). `batch_mode` must already be
+    concrete — resolve "auto" with `select_batch_mode` first.
+    """
+    if batch_mode == "vmap":
+        return jax.jit(jax.vmap(cell))
+
+    if batch_mode == "scan":
+        return jax.jit(lambda ps, ts, rs: jax.lax.map(lambda a: cell(*a), (ps, ts, rs)))
+
+    if batch_mode == "chunked":
+        chunk = chunk_size or (default_chunk_size(dims) if dims else 16)
+        chunk = max(1, min(chunk, n_cells))
+        m = -(-n_cells // chunk) * chunk
+
+        run = jax.jit(
+            lambda stacked: jax.lax.map(lambda a: jax.vmap(cell)(*a), stacked)
+        )
+
+        def chunked(ps, ts, rs):
+            stacked = _pad_cells((ps, ts, rs), m - n_cells)
+            stacked = jax.tree_util.tree_map(
+                lambda l: l.reshape(m // chunk, chunk, *l.shape[1:]), stacked
+            )
+            out = run(stacked)
+            return jax.tree_util.tree_map(
+                lambda l: l.reshape(m, *l.shape[2:])[:n_cells], out
+            )
+
+        return chunked
+
+    if batch_mode == "shard":
+        from repro.launch.mesh import make_cells_mesh
+
+        mesh = make_cells_mesh()
+        nd = mesh.shape["cells"]
+        m = -(-n_cells // nd) * nd
+        run = jax.jit(
+            shard_map(
+                lambda ps, ts, rs: jax.vmap(cell)(ps, ts, rs),
+                mesh=mesh,
+                in_specs=(P("cells"), P("cells"), P("cells")),
+                out_specs=P("cells"),
+                check_rep=False,
+            )
+        )
+
+        def sharded(ps, ts, rs):
+            ps, ts, rs = _pad_cells((ps, ts, rs), m - n_cells)
+            out = run(ps, ts, rs)
+            return jax.tree_util.tree_map(lambda l: l[:n_cells], out)
+
+        return sharded
+
+    raise ValueError(f"batch_mode must be one of {BATCH_MODES}, got {batch_mode!r}")
+
+
 def evaluate_suite(
     policies: Iterable,
     scenarios: Optional[Iterable] = None,
     seeds: int = 4,
     dims: Optional[EnvDims] = None,
     base_params: Optional[EnvParams] = None,
-    batch_mode: str = "vmap",
+    batch_mode: str = "auto",
+    chunk_size: Optional[int] = None,
+    memory_budget: int = DEFAULT_MEMORY_BUDGET,
     warmup: int = 0,
 ) -> SuiteResult:
     """Evaluate policies over the scenario grid; one jitted call per policy.
 
     `policies` / `scenarios` accept names or Policy/Scenario objects
-    (default scenarios: the full registry). Returns per-cell Table-II
-    metrics as (seeds,)-arrays per (policy, scenario).
+    (default scenarios: the full registry). `batch_mode` selects the
+    execution backend (see module docstring); the default "auto" resolves
+    via `select_batch_mode`. Returns per-cell Table-II metrics as
+    (seeds,)-arrays per (policy, scenario).
     """
-    if batch_mode not in ("vmap", "scan"):
-        raise ValueError(f"batch_mode must be 'vmap' or 'scan', got {batch_mode!r}")
+    if batch_mode not in BATCH_MODES:
+        raise ValueError(f"batch_mode must be one of {BATCH_MODES}, got {batch_mode!r}")
     dims = dims or EnvDims()
     pols = _resolve_policies(policies, dims)
     scens = _resolve_scenarios(scenarios)
-    stacked_params, stacked_traces, stacked_rngs = build_cells(
-        scens, seeds, dims, base_params
-    )
+    stacked = build_cells(scens, seeds, dims, base_params)
+    n_cells = len(scens) * seeds
+    if batch_mode == "auto":
+        batch_mode = select_batch_mode(n_cells, dims, memory_budget=memory_budget)
 
     cells: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
     for name, pol in pols.items():
@@ -131,14 +301,8 @@ def evaluate_suite(
             _, infos = rollout_params(dims, pol, p, t, r)
             return metrics.summarize(infos, warmup=warmup)
 
-        if batch_mode == "vmap":
-            run = jax.jit(jax.vmap(cell))
-            out = run(stacked_params, stacked_traces, stacked_rngs)
-        else:  # scan-over-episodes fallback: sequential, memory-bound safe
-            run = jax.jit(
-                lambda ps, ts, rs: jax.lax.map(lambda a: cell(*a), (ps, ts, rs))
-            )
-            out = run(stacked_params, stacked_traces, stacked_rngs)
+        run = make_runner(cell, n_cells, batch_mode, chunk_size=chunk_size, dims=dims)
+        out = run(*stacked)
 
         grid = {m: np.asarray(v).reshape(len(scens), seeds) for m, v in out.items()}
         cells[name] = {

@@ -1,0 +1,85 @@
+"""H-MPC thermal fast path (DESIGN.md §12): the Pallas candidate rollout
+and the ref.py oracle must be interchangeable — same selected setpoints,
+same policy trajectory — and the refinement flag must default off."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnvDims, make_params, synthesize_trace
+from repro.core.env import rollout_params
+from repro.core.mpc import rollout as plant
+from repro.core.policies import make_policy
+from repro.core.policies.h_mpc import HMPCConfig
+
+PARAMS = make_params()
+AGG = plant.aggregate_params(PARAMS, 4)
+DIMS = EnvDims(horizon=6, max_arrivals=32, queue_cap=64, run_cap=64,
+               pending_cap=32, admit_depth=32, policy_depth=64)
+RNG = np.random.default_rng(7)
+
+
+def _candidates(b, h, d):
+    theta0 = jnp.asarray(RNG.uniform(20, 34, (b, d)), jnp.float32)
+    heat = jnp.asarray(RNG.uniform(0, 2e6, (b, h, d)), jnp.float32)
+    amb = jnp.asarray(RNG.uniform(5, 45, (h, d)), jnp.float32)
+    target = jnp.asarray(RNG.uniform(18, 28, (b, h, d)), jnp.float32)
+    return theta0, heat, amb, target
+
+
+@pytest.mark.parametrize("b,h", [(3, 6), (5, 12)])
+def test_candidate_thermal_rollout_backends_agree(b, h):
+    """Pallas (interpret on CPU) vs pure-jnp oracle at the plant's D=4."""
+    args = _candidates(b, h, 4)
+    t_pal, c_pal = plant.candidate_thermal_rollout(
+        *args, AGG, PARAMS, backend="pallas")
+    t_ref, c_ref = plant.candidate_thermal_rollout(
+        *args, AGG, PARAMS, backend="ref")
+    np.testing.assert_allclose(np.asarray(t_pal), np.asarray(t_ref),
+                               atol=1e-5, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(c_pal), np.asarray(c_ref),
+                               atol=1e-2, rtol=1e-6)
+
+
+def test_candidate_thermal_rollout_rejects_unknown_backend():
+    args = _candidates(2, 4, 4)
+    with pytest.raises(ValueError):
+        plant.candidate_thermal_rollout(*args, AGG, PARAMS, backend="cuda")
+
+
+def _run_hmpc(backend=None, refine=0):
+    cfg = HMPCConfig(h1=6, h2=3, iters1=3, iters2=3,
+                     refine_candidates=refine,
+                     thermal_backend=backend or "auto")
+    pol = make_policy("h_mpc", DIMS, cfg=cfg)
+    trace = synthesize_trace(0, DIMS, PARAMS)
+    _, infos = jax.jit(
+        lambda r: rollout_params(DIMS, pol, PARAMS, trace, r)
+    )(jax.random.PRNGKey(0))
+    return infos
+
+
+def test_hmpc_pallas_path_matches_ref_oracle():
+    """Acceptance: H-MPC with the Pallas thermal path enabled produces the
+    ref-oracle policy trajectory on the smoke grid — identical refined
+    setpoints (candidate argmin must agree), hence identical admissions
+    and costs."""
+    i_ref = _run_hmpc("ref", refine=3)
+    i_pal = _run_hmpc("pallas", refine=3)
+    np.testing.assert_allclose(np.asarray(i_ref.setpoint),
+                               np.asarray(i_pal.setpoint), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(i_ref.admitted_util),
+                               np.asarray(i_pal.admitted_util),
+                               atol=1e-4, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(i_ref.cost_usd),
+                               np.asarray(i_pal.cost_usd), rtol=1e-5)
+
+
+def test_hmpc_refinement_defaults_off_and_changes_setpoints_when_on():
+    i_base = _run_hmpc()                 # refine_candidates=0: stage-1 plan
+    i_ref = _run_hmpc("ref", refine=3)   # candidate span should move targets
+    assert i_base.setpoint.shape == i_ref.setpoint.shape
+    # the default path must not silently route through the refinement
+    base_again = _run_hmpc(refine=0)
+    np.testing.assert_array_equal(np.asarray(i_base.setpoint),
+                                  np.asarray(base_again.setpoint))

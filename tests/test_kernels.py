@@ -75,6 +75,9 @@ def test_ssm_update_matches_model_decode_path():
 
 @pytest.mark.parametrize("bsz,horizon,d,block_b", [
     (8, 12, 128, 4), (16, 24, 128, 8), (5, 6, 256, 2),  # uneven batch too
+    (4, 6, 4, 2),      # D far below one lane (the H-MPC num_dcs=4 case)
+    (7, 5, 96, 4),     # uneven batch AND sub-lane D together
+    (6, 8, 130, 8),    # D just past one lane (pads to 256)
 ])
 def test_thermal_rollout_matches_ref(bsz, horizon, d, block_b):
     theta0 = jnp.asarray(RNG.uniform(20, 34, (bsz, d)), jnp.float32)

@@ -152,6 +152,32 @@ print("PIPELINE-OK", err)
 """, devices=4)
 
 
+def test_suite_shard_backend_matches_vmap():
+    """Device-sharded scenario evaluation: `batch_mode="shard"` over an
+    8-device cells mesh must reproduce the single-device vmap metrics
+    bitwise (6 cells pad to 8, exercising edge-replication padding)."""
+    _run("""
+import warnings; warnings.filterwarnings("ignore")
+import jax, numpy as np
+from repro.core import EnvDims
+from repro.scenarios import evaluate_suite
+from repro.scenarios.suite import select_batch_mode
+
+assert len(jax.devices()) == 8
+dims = EnvDims(horizon=12, max_arrivals=32, queue_cap=64, run_cap=64,
+               pending_cap=32, admit_depth=32, policy_depth=64)
+assert select_batch_mode(6, dims) == "shard"   # auto picks shard here
+kw = dict(scenarios=["nominal", "cooling_degraded"], seeds=3, dims=dims)
+rv = evaluate_suite(["greedy"], batch_mode="vmap", **kw)
+rs = evaluate_suite(["greedy"], batch_mode="shard", **kw)
+for scen in rv.scenarios:
+    for key, v in rv.cells["greedy"][scen].items():
+        np.testing.assert_array_equal(
+            v, rs.cells["greedy"][scen][key], err_msg=f"{scen}/{key}")
+print("SHARD-PARITY-OK")
+""")
+
+
 @pytest.mark.slow
 def test_dryrun_single_cell_end_to_end():
     """The real deliverable: one full dry-run cell (512 fake devices,

@@ -143,15 +143,50 @@ def test_evaluate_suite_matches_per_episode_rollout():
                 )
 
 
-def test_evaluate_suite_scan_mode_matches_vmap():
+def test_evaluate_suite_backends_identical():
+    """Backend parity on a 2-scenario x 2-seed grid. chunked is bitwise
+    equal to vmap (it IS a vmap per chunk; the chunk size of 3 forces
+    edge-replication padding, 4 cells -> 6). scan may differ by float32
+    round-off — XLA fuses the metric reductions differently inside
+    `lax.map` — so it gets a few-ulp relative tolerance (5e-7 ~ 4 ulps)
+    instead of array_equal."""
     kw = dict(scenarios=["nominal", "flash_crowd"], seeds=2, dims=DIMS)
-    res_v = evaluate_suite(["greedy"], **kw)
+    res_v = evaluate_suite(["greedy"], batch_mode="vmap", **kw)
+    res_c = evaluate_suite(["greedy"], batch_mode="chunked", chunk_size=3, **kw)
     res_s = evaluate_suite(["greedy"], batch_mode="scan", **kw)
     for scen in res_v.scenarios:
-        for key in ("cost_usd", "completed_jobs"):
+        want = res_v.cells["greedy"][scen]
+        for key in want:
+            np.testing.assert_array_equal(
+                want[key], res_c.cells["greedy"][scen][key],
+                err_msg=f"chunked/{scen}/{key}")
             np.testing.assert_allclose(
-                res_v.cells["greedy"][scen][key],
-                res_s.cells["greedy"][scen][key], rtol=1e-5)
+                want[key], res_s.cells["greedy"][scen][key],
+                rtol=5e-7, atol=0, err_msg=f"scan/{scen}/{key}")
+
+
+def test_evaluate_suite_rejects_unknown_batch_mode():
+    with pytest.raises(ValueError):
+        evaluate_suite(["greedy"], scenarios=["nominal"], seeds=1, dims=DIMS,
+                       batch_mode="pmap")
+
+
+def test_select_batch_mode_heuristic():
+    from repro.scenarios.suite import estimate_cell_bytes, select_batch_mode
+
+    cell = estimate_cell_bytes(DIMS)
+    assert cell > 0
+    # >1 device and per-device slice fits: shard
+    assert select_batch_mode(6, DIMS, n_devices=8) == "shard"
+    # >1 device but a device's slice alone would blow the budget: chunked
+    assert select_batch_mode(64, DIMS, n_devices=2,
+                             memory_budget=4 * cell) == "chunked"
+    # single device, grid fits the budget: vmap
+    assert select_batch_mode(4, DIMS, n_devices=1,
+                             memory_budget=10 * 4 * cell) == "vmap"
+    # single device, grid exceeds the budget: chunked
+    assert select_batch_mode(64, DIMS, n_devices=1,
+                             memory_budget=4 * cell) == "chunked"
 
 
 def test_suite_tables_render():
