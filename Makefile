@@ -1,16 +1,21 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test check bench docs quickstart sweep
+.PHONY: test check docs smoke bench bench-gate quickstart sweep
 
 test:            ## tier-1 test suite (slow tests deselected)
 	$(PY) -m pytest -q -m "not slow"
 
-docs:            ## docs consistency: §-citations, scenario tables, md links
+docs:            ## docs consistency: §-citations, scenario/experiment tables, artifact schema, md links
 	$(PY) -m pytest -q tests/test_docs.py
 
-check: docs      ## CI smoke: docs checks + tier-1 tests + tiny suite eval
-	$(PY) -m benchmarks.run --smoke
+smoke:           ## CI-sized paper experiment vs its golden baseline
+	$(PY) -m repro.experiments run --exp nominal --smoke
+
+bench-gate:      ## fresh steps/sec vs committed BENCH_*.json (±30%; warn-only when $$CI is set)
+	$(PY) -m benchmarks.check_regression
+
+check: docs test smoke bench-gate  ## the full CI gate: docs + tier-1 + smoke experiment + bench regression
 
 bench:           ## CI-sized benchmark pass
 	$(PY) -m benchmarks.run --fast

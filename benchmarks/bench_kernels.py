@@ -3,7 +3,9 @@ the pure-jnp oracle, plus the analytic HBM-traffic comparison that drives
 the §Perf flash-attention claim. On CPU the Pallas numbers come from
 interpret mode — wall-clock there is NOT meaningful (the derived byte
 counts are); on TPU the same entry points time the compiled kernels.
-Results land in BENCH_kernels.json at the repo root."""
+Results land in BENCH_kernels.latest.json at the repo root (the committed
+BENCH_kernels.json baseline is updated via benchmarks.check_regression
+--update)."""
 from __future__ import annotations
 
 import json
@@ -17,7 +19,11 @@ import numpy as np
 from repro.kernels import ops, ref
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: Committed bench-regression baseline — written only by
+#: `benchmarks.check_regression --update` (best-of-N).
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+#: Default output of interactive runs (scratch, not the gate baseline).
+BENCH_LATEST = os.path.join(REPO_ROOT, "BENCH_kernels.latest.json")
 
 
 def flash_attention_traffic(b=1, s=4096, h=8, dh=128, block=128):
@@ -39,7 +45,10 @@ def time_fn(f, *args, reps=3):
     return (time.time() - t0) / reps
 
 
-def main(fast: bool = False):
+def main(fast: bool = False, out_path: str = BENCH_LATEST):
+    """Writes to `BENCH_kernels.latest.json` by default; the committed
+    `BENCH_kernels.json` baseline is only (re)written when the
+    bench-regression gate passes it explicitly (`--update`)."""
     rng = np.random.default_rng(0)
     s = 512 if fast else 1024
     q = jnp.asarray(rng.standard_normal((1, s, 4, 128)), jnp.float32)
@@ -108,9 +117,9 @@ def main(fast: bool = False):
             "hbm_bytes_flash_32k": flash,
         },
     }
-    with open(BENCH_JSON, "w") as f:
+    with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"wrote {BENCH_JSON}")
+    print(f"wrote {out_path}")
     return payload
 
 

@@ -1,50 +1,31 @@
 """RQ1 (paper Table III): policy comparison in the nominal operating regime.
 
-Monte-Carlo over seeds; workload arrivals and ambient trajectories are held
-fixed across policies per seed (the paper's protocol).
+Thin wrapper over the declarative experiment pipeline: the grid definition,
+rollout plumbing, and aggregation all live in `repro.experiments`
+(`nominal` spec); this module keeps the historical benchmark entry point
+and table format. `fast=True` runs the CI smoke tier (greedy + h_mpc on a
+short horizon), `fast=False` the paper-faithful full tier.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List
+from typing import Dict
 
-import jax
-import numpy as np
+from repro.experiments import registry, run_experiment
 
-from repro.core import (
-    DataCenterGym, EnvDims, make_params, metrics, rollout, synthesize_trace,
-)
-from repro.core.policies import ALL_POLICIES, make_policy
+SCENARIO = "nominal"
 
 
-def run(
-    policies=ALL_POLICIES,
-    seeds: int = 5,
-    horizon: int = 288,
-    lam: float = 1.0,
-    dims: EnvDims | None = None,
-) -> Dict[str, Dict[str, tuple]]:
-    dims = dims or EnvDims(horizon=horizon)
-    params = make_params()
-    env = DataCenterGym(dims, params)
-    results: Dict[str, Dict[str, tuple]] = {}
-    for name in policies:
-        pol = make_policy(name, dims)
-        run_fn = jax.jit(lambda rng, t: rollout(env, pol, t, rng)[1])
-        per_seed: List[Dict[str, float]] = []
-        for seed in range(seeds):
-            trace = synthesize_trace(seed, dims, params, lam=lam)
-            t0 = time.time()
-            infos = run_fn(jax.random.PRNGKey(seed), trace)
-            m = {k: float(v) for k, v in metrics.summarize(infos).items()}
-            m["wall_s"] = time.time() - t0
-            per_seed.append(m)
-        results[name] = {
-            k: (float(np.mean([d[k] for d in per_seed])),
-                float(np.std([d[k] for d in per_seed])))
-            for k in per_seed[0]
+def run(smoke: bool = False, batch_mode: str = "auto") -> Dict[str, Dict[str, tuple]]:
+    """Returns {policy: {metric: (mean, std)}} on the nominal scenario."""
+    result = run_experiment(registry.get("nominal"), smoke=smoke,
+                            batch_mode=batch_mode)
+    return {
+        pol: {
+            m: (cell["mean"], cell["std"])
+            for m, cell in result.table[pol][SCENARIO].items()
         }
-    return results
+        for pol in result.policies
+    }
 
 
 def format_results(results) -> str:
@@ -67,8 +48,7 @@ def format_results(results) -> str:
 
 
 def main(fast: bool = False):
-    kw = dict(seeds=2, horizon=96) if fast else {}
-    res = run(**kw)
+    res = run(smoke=fast)
     print(format_results(res))
     return res
 

@@ -1,40 +1,27 @@
 """RQ2 (paper Figs. 2-3): workload-intensity sensitivity sweep.
 
-Sweeps arrival-rate multipliers lambda in {0.5 .. 3.0} for Greedy,
-Power-Cool and H-MPC, tracing the utilization-congestion transition and the
-thermal response (saturation knee near lambda ~ 1.6x for Greedy; H-MPC
-tracks the nominal band and preserves thermal headroom).
+Thin wrapper over the `sensitivity` experiment spec (`repro.experiments`):
+the lambda grid runs as inline scenarios through the batched suite
+backends; this module keeps the historical row format and the
+saturation-knee diagnostic. `fast=True` runs the CI smoke tier.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-import jax
-import numpy as np
-
-from repro.core import DataCenterGym, EnvDims, make_params, metrics, rollout, synthesize_trace
-from repro.core.policies import make_policy
-
-LAMBDAS = (0.5, 1.0, 1.5, 2.0, 2.5, 3.0)
-POLICIES = ("greedy", "power_cool", "h_mpc")
+from repro.experiments import registry, run_experiment
 
 
-def run(lambdas=LAMBDAS, policies=POLICIES, horizon: int = 288, seeds: int = 2,
-        max_arrivals: int = 640):
-    dims = EnvDims(horizon=horizon, max_arrivals=max_arrivals)
-    params = make_params()
-    env = DataCenterGym(dims, params)
+def run(smoke: bool = False, batch_mode: str = "auto") -> List[Dict]:
+    """Rows [{policy, lam, **metric_means}] over the lambda grid."""
+    result = run_experiment(registry.get("sensitivity"), smoke=smoke,
+                            batch_mode=batch_mode)
     rows: List[Dict] = []
-    for name in policies:
-        pol = make_policy(name, dims)
-        run_fn = jax.jit(lambda rng, t: rollout(env, pol, t, rng)[1])
-        for lam in lambdas:
-            per = []
-            for seed in range(seeds):
-                trace = synthesize_trace(seed, dims, params, lam=lam)
-                infos = run_fn(jax.random.PRNGKey(seed), trace)
-                per.append({k: float(v) for k, v in metrics.summarize(infos).items()})
-            agg = {k: float(np.mean([d[k] for d in per])) for k in per[0]}
+    for name in result.policies:
+        for scen in result.scenarios:
+            lam = float(scen.split("_", 1)[1])
+            agg = {m: result.table[name][scen][m]["mean"]
+                   for m in result.table[name][scen]}
             rows.append({"policy": name, "lam": lam, **agg})
             print(
                 f"{name:11s} lam={lam:.1f} util={agg['gpu_util_pct']:5.1f}% "
@@ -56,8 +43,7 @@ def knee_lambda(rows, policy="greedy", queue_key="gpu_queue") -> float:
 
 
 def main(fast: bool = False):
-    kw = dict(horizon=96, seeds=1, lambdas=(0.5, 1.0, 2.0, 3.0)) if fast else {}
-    rows = run(**kw)
+    rows = run(smoke=fast)
     print(f"\ngreedy saturation knee ~ lambda = {knee_lambda(rows):.1f}x")
     return rows
 

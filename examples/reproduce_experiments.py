@@ -1,0 +1,44 @@
+"""Reproduce the paper's experiments programmatically (DESIGN.md §13).
+
+The CLI equivalent is `python -m repro.experiments run --exp all --smoke`;
+this example shows the library API: run a spec's tier, render the table,
+and apply the margin + golden gates yourself.
+
+  PYTHONPATH=src python examples/reproduce_experiments.py [--full]
+
+`--full` runs the paper-faithful tiers (288-step days, all policies) —
+minutes to hours on CPU; the default smoke tiers finish in CI minutes.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.experiments import (
+    check_margins, compare_to_golden, golden_path, load_golden,
+    registry, run_experiment,
+)
+
+
+def main(smoke: bool = True) -> int:
+    failures = 0
+    for spec in registry.all_experiments():
+        tier = spec.tier_name(smoke)
+        print(f"\n=== {spec.name} ({tier}): reproduces paper {spec.paper_ref} ===")
+        result = run_experiment(spec, smoke=smoke)
+        print(result.format_markdown())
+
+        violations = check_margins(result, spec)
+        gold = load_golden(golden_path(spec.name, tier))
+        if gold is not None:
+            violations += compare_to_golden(result, gold)
+        for v in violations:
+            print(f"FAIL: {v}")
+        failures += len(violations)
+        if not violations:
+            print(f"{spec.name}: margins hold"
+                  + ("" if gold is None else " and golden matches"))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(smoke="--full" not in sys.argv[1:]))

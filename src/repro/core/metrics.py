@@ -1,9 +1,23 @@
-"""Table-II metric aggregation over an episode's stacked StepInfo."""
+"""Table-II metric aggregation over an episode's stacked StepInfo.
+
+Two equivalent aggregations live here: `summarize` (jnp, float32, runs
+inside the jitted rollout — what the suite/benchmarks report) and
+`summarize_np` (numpy, float64, runs on the host — what the experiment
+artifacts under `results/` are built from). The numpy path exists because
+XLA fuses the float32 time reductions differently under vmap / lax.map /
+shard_map, so `summarize` outputs can differ by a few ulps between
+backends while the underlying per-step StepInfo is bitwise identical;
+aggregating that StepInfo on the host in float64 with a fixed reduction
+order makes golden artifacts reproducible across every backend
+(DESIGN.md §13). A tier-1 test pins the two paths together within
+float32 round-off.
+"""
 from __future__ import annotations
 
 from typing import Dict
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
@@ -30,6 +44,36 @@ def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
         "completed_jobs": completed,
         "dropped_jobs": infos.dropped[sl].sum(),
     }
+
+
+def summarize_np(infos, warmup: int = 0) -> Dict[str, float]:
+    """Host-side float64 mirror of `summarize` for one episode's StepInfo
+    (leaves of shape (T, ...), numpy or device arrays).
+
+    Metric definitions must stay in lockstep with `summarize`; the
+    `test_summarize_np_matches_jnp` tier-1 test enforces that. Results are
+    plain Python floats with a deterministic reduction order — the
+    artifact-grade path for `repro.experiments`.
+    """
+    f8 = lambda x: np.asarray(x, dtype=np.float64)[warmup:]
+    theta = f8(infos.theta)                       # (T, D)
+    total_energy = f8(infos.energy_kwh).sum()
+    completed = f8(infos.completed).sum()
+    out = {
+        "cpu_util_pct": 100.0 * f8(infos.cpu_util).mean(),
+        "gpu_util_pct": 100.0 * f8(infos.gpu_util).mean(),
+        "cpu_queue": f8(infos.cpu_queue).mean(),
+        "gpu_queue": f8(infos.gpu_queue).mean(),
+        "theta_mean": theta.mean(),
+        "theta_max": theta.max(),
+        "throttle_pct": 100.0 * np.asarray(infos.throttled)[warmup:].any(axis=-1).mean(),
+        "total_energy_kwh": total_energy,
+        "kwh_per_job": total_energy / max(completed, 1.0),
+        "cost_usd": f8(infos.cost_usd).sum(),
+        "completed_jobs": completed,
+        "dropped_jobs": f8(infos.dropped).sum(),
+    }
+    return {k: float(v) for k, v in out.items()}
 
 
 def format_table(rows: Dict[str, Dict[str, float]], metrics=None) -> str:

@@ -20,7 +20,13 @@ def make_policy(name: str, dims, **kw) -> Policy:
         "sc_mpc": sc_mpc_policy,
         "h_mpc": h_mpc_policy,
     }
-    return table[name](dims, **kw)
+    try:
+        factory = table[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; available: {sorted(table)}"
+        ) from None
+    return factory(dims, **kw)
 
 
 ALL_POLICIES = ("random", "greedy", "thermal", "power_cool", "sc_mpc", "h_mpc")

@@ -1,0 +1,22 @@
+"""Paper-experiment reproduction pipeline (DESIGN.md §13).
+
+Declarative `ExperimentSpec`s reproduce the paper's result tables
+end-to-end through the batched scenario-suite backends, emit deterministic
+artifacts under `results/`, and gate regressions against checked-in golden
+baselines:
+
+    python -m repro.experiments list
+    python -m repro.experiments run --exp nominal --smoke
+"""
+from repro.experiments.spec import (
+    ExperimentSpec, ExperimentTier, Margin, resolve_scenarios,
+)
+from repro.experiments.registry import (
+    all_experiments, get, names, register,
+)
+from repro.experiments.runner import (
+    ARTIFACT_METRICS, SCHEMA, ExperimentResult, run_experiment, write_artifacts,
+)
+from repro.experiments.golden import (
+    check_margins, compare_to_golden, golden_path, load_golden, write_golden,
+)

@@ -1,0 +1,100 @@
+"""CLI for the experiment pipeline.
+
+    python -m repro.experiments list
+    python -m repro.experiments run --exp nominal --smoke
+    python -m repro.experiments run --exp all --smoke --update-golden
+
+`run` executes the named experiment tier, writes `results/<exp>.json` +
+`results/<exp>.md`, then checks the spec's margins and (when a golden
+exists for the tier) the golden tolerance bands. Any violation exits
+non-zero, which is what makes `make check` and CI real gates.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro.experiments import golden, registry, runner
+from repro.scenarios.suite import BATCH_MODES
+
+
+def _cmd_list() -> int:
+    for spec in registry.all_experiments():
+        print(f"{spec.name:12s} {spec.paper_ref:18s} {spec.description}")
+        for tier_name in ("full", "smoke"):
+            t = getattr(spec, tier_name)
+            print(
+                f"  {tier_name:5s}: {len(t.policies)} policies x "
+                f"{len(t.scenarios)} scenarios x {t.seeds} seeds, "
+                f"horizon {t.dims.horizon}"
+            )
+    return 0
+
+
+def _cmd_run(args) -> int:
+    exps = registry.names() if "all" in args.exp else tuple(args.exp)
+    failures: List[str] = []
+    for name in exps:
+        spec = registry.get(name)
+        tier = spec.tier_name(args.smoke)
+        print(f"=== experiment {name} ({tier} tier, batch_mode={args.batch_mode}) ===")
+        result = runner.run_experiment(
+            spec, smoke=args.smoke, batch_mode=args.batch_mode
+        )
+        json_path, md_path = runner.write_artifacts(result, args.out)
+        print(f"wrote {json_path} + {md_path} "
+              f"[{result.runtime['wall_s']}s, {result.runtime['batch_mode']}]")
+        print(result.format_markdown())
+
+        violations = golden.check_margins(result, spec)
+        gpath = golden.golden_path(name, tier, args.out)
+        if args.update_golden:
+            if violations:
+                # never freeze a result that violates the spec's own
+                # invariants — a degraded golden must not reach disk
+                print(f"golden NOT updated ({gpath}): margin violations below",
+                      file=sys.stderr)
+            else:
+                print(f"golden updated: {golden.write_golden(result, gpath)}")
+        elif args.no_golden:
+            pass
+        else:
+            gold = golden.load_golden(gpath)
+            if gold is None:
+                print(f"note: no golden at {gpath}; run with --update-golden "
+                      "to freeze this result as the baseline")
+            else:
+                violations += golden.compare_to_golden(result, gold)
+                if not violations:
+                    print(f"golden check OK ({gpath})")
+        for v in violations:
+            print(f"FAIL [{name}/{tier}]: {v}", file=sys.stderr)
+        failures += violations
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.experiments")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("list", help="registered experiments and their tiers")
+    run_p = sub.add_parser("run", help="run experiment(s), write artifacts, gate")
+    run_p.add_argument("--exp", action="append", required=True,
+                       help="experiment name (repeatable), or 'all'")
+    run_p.add_argument("--smoke", action="store_true",
+                       help="CI-sized tier (short horizon, policy/scenario subset)")
+    run_p.add_argument("--batch-mode", default="auto", choices=BATCH_MODES)
+    run_p.add_argument("--out", default="results",
+                       help="artifact directory (default: results)")
+    run_p.add_argument("--update-golden", action="store_true",
+                       help="freeze this run as the golden baseline instead of checking")
+    run_p.add_argument("--no-golden", action="store_true",
+                       help="skip the golden comparison (margins still checked)")
+    args = ap.parse_args(argv)
+    if args.cmd == "list":
+        return _cmd_list()
+    return _cmd_run(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""Golden-baseline comparison and margin checks (DESIGN.md §13).
+
+A golden file is a frozen experiment artifact plus a ``tolerances`` block:
+
+    {"schema": "dcgym-experiment-v1", ..., "table": {...},
+     "tolerances": {"default_rtol": 0.02, "per_metric": {"throttle_pct": ...}}}
+
+`compare_to_golden` diffs a fresh `ExperimentResult` against it cell by
+cell: every (policy, scenario, metric) mean must sit within the relative
+band, and every policy/scenario the golden knows about must be present in
+the fresh run. `check_margins` enforces the spec's ordering invariants
+(H-MPC beating the baselines) independently of the golden, so the gate
+fails loudly even if someone regenerates a degraded golden.
+
+Goldens live in `results/golden/<exp>_<tier>.json` and are regenerated
+explicitly with `python -m repro.experiments run --exp <exp> [--smoke]
+--update-golden`. The artifacts are backend-independent (see
+`runner.run_experiment`), so a golden produced under vmap gates runs under
+any backend.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.experiments.runner import ARTIFACT_METRICS, ExperimentResult
+from repro.experiments.spec import ExperimentSpec
+
+#: Relative band on per-metric means. 2% is far above cross-platform
+#: float drift (same-machine reruns are bitwise identical) and far below
+#: any real behavior change.
+DEFAULT_RTOL = 0.02
+#: Absolute floor so metrics whose golden mean is ~0 (throttle_pct on an
+#: unthrottled plant, dropped_jobs) are not held to a 0-width band.
+DEFAULT_ATOL = {"throttle_pct": 0.5, "dropped_jobs": 1.0, "cost_usd": 1.0}
+
+
+def golden_dir(out_dir: str = "results") -> str:
+    return os.path.join(out_dir, "golden")
+
+
+def golden_path(experiment: str, tier: str, out_dir: str = "results") -> str:
+    return os.path.join(golden_dir(out_dir), f"{experiment}_{tier}.json")
+
+
+def write_golden(
+    result: ExperimentResult,
+    path: str,
+    default_rtol: float = DEFAULT_RTOL,
+) -> str:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = result.to_dict()
+    payload.pop("runtime", None)  # machine-dependent; never part of the contract
+    payload["tolerances"] = {
+        "default_rtol": default_rtol,
+        "atol": dict(DEFAULT_ATOL),
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_golden(path: str) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def compare_to_golden(result: ExperimentResult, golden: Dict) -> List[str]:
+    """Violation strings (empty list = within tolerance)."""
+    out: List[str] = []
+    if golden.get("schema") != "dcgym-experiment-v1":
+        return [f"golden schema mismatch: {golden.get('schema')!r}"]
+    if golden.get("experiment") != result.experiment or golden.get("tier") != result.tier:
+        out.append(
+            f"golden is for {golden.get('experiment')}/{golden.get('tier')}, "
+            f"result is {result.experiment}/{result.tier}"
+        )
+        return out
+    tol = golden.get("tolerances", {})
+    rtol = float(tol.get("default_rtol", DEFAULT_RTOL))
+    atol = {**DEFAULT_ATOL, **tol.get("atol", {})}
+
+    for pol in golden["policies"]:
+        if pol not in result.table:
+            out.append(f"policy {pol!r} missing from fresh run")
+            continue
+        for scen in golden["scenarios"]:
+            if scen not in result.table[pol]:
+                out.append(f"scenario {scen!r} missing from fresh run ({pol})")
+                continue
+            for m in ARTIFACT_METRICS:
+                want_cell = golden["table"].get(pol, {}).get(scen, {}).get(m)
+                if want_cell is None:
+                    # golden predates this metric/cell (e.g. ARTIFACT_METRICS
+                    # grew) — report it, don't traceback
+                    out.append(f"golden cell missing {pol}/{scen}/{m}; "
+                               "regenerate with --update-golden")
+                    continue
+                want = want_cell["mean"]
+                got = result.table[pol][scen][m]["mean"]
+                band = rtol * abs(want) + atol.get(m, 0.0)
+                if abs(got - want) > band:
+                    out.append(
+                        f"{pol}/{scen}/{m}: {got:.6g} vs golden {want:.6g} "
+                        f"(band ±{band:.3g})"
+                    )
+    return out
+
+
+def check_margins(result: ExperimentResult, spec: ExperimentSpec) -> List[str]:
+    """Evaluate the spec's ordering invariants on whatever subset ran."""
+    out: List[str] = []
+    for mg in spec.margins:
+        if (mg.better not in result.table or mg.worse not in result.table
+                or mg.scenario not in result.scenarios):
+            continue
+        better = result.mean(mg.better, mg.scenario, mg.metric)
+        worse = result.mean(mg.worse, mg.scenario, mg.metric)
+        limit = mg.max_ratio * worse + mg.slack
+        if better > limit:
+            out.append(
+                f"margin violated: {mg.metric}[{mg.better}] = {better:.6g} > "
+                f"{mg.max_ratio:g} * {mg.metric}[{mg.worse}] = {limit:.6g} "
+                f"on scenario {mg.scenario!r}"
+            )
+    return out

@@ -1,0 +1,194 @@
+"""Experiment runner: spec -> batched grid -> deterministic artifacts.
+
+`run_experiment` drives an `ExperimentSpec` tier through the scenario
+suite's execution backends (`repro.scenarios.suite.evaluate_infos`), pulls
+the raw per-step `StepInfo` back to the host, and aggregates it with
+`metrics.summarize_np` in float64 — so the emitted artifact is bitwise
+identical across `batch_mode=vmap|chunked|shard|scan` and across repeated
+runs with the same seeds (DESIGN.md §13).
+
+Artifacts (`write_artifacts`): `results/<exp>.json` — the machine-readable
+result under the ``dcgym-experiment-v1`` schema — plus a rendered
+`results/<exp>.md` table. The `runtime` block (wall-clock, backend, device
+count) is informational and excluded from golden comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core import metrics
+from repro.experiments.spec import ExperimentSpec, ExperimentTier, resolve_scenarios
+from repro.scenarios.suite import evaluate_infos
+
+SCHEMA = "dcgym-experiment-v1"
+
+#: Metric keys every artifact cell must carry — the output contract
+#: (`tests/test_docs.py` validates all `results/**.json` against it).
+ARTIFACT_METRICS = (
+    "cpu_util_pct", "gpu_util_pct", "cpu_queue", "gpu_queue",
+    "theta_mean", "theta_max", "throttle_pct", "total_energy_kwh",
+    "kwh_per_job", "cost_usd", "completed_jobs", "dropped_jobs",
+)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """One executed tier. `table[policy][scenario][metric]` holds
+    {"mean", "std", "per_seed"} computed in float64 over the seed grid."""
+
+    experiment: str
+    tier: str
+    paper_ref: str
+    policies: Tuple[str, ...]
+    scenarios: Tuple[str, ...]
+    seeds: int
+    dims: Dict[str, int]
+    table: Dict[str, Dict[str, Dict[str, Dict[str, object]]]]
+    runtime: Dict[str, object]
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> Dict:
+        return {
+            "schema": SCHEMA,
+            "experiment": self.experiment,
+            "tier": self.tier,
+            "paper_ref": self.paper_ref,
+            "policies": list(self.policies),
+            "scenarios": list(self.scenarios),
+            "seeds": self.seeds,
+            "dims": dict(self.dims),
+            "metrics": list(ARTIFACT_METRICS),
+            "table": self.table,
+            "runtime": dict(self.runtime),
+        }
+
+    def mean(self, policy: str, scenario: str, metric: str) -> float:
+        return self.table[policy][scenario][metric]["mean"]
+
+    # -- rendering ---------------------------------------------------------
+
+    def format_markdown(self) -> str:
+        """Per-scenario Table-II blocks (policies as columns, mean ± std)
+        plus a cross-scenario cost summary."""
+        lines = [
+            f"# Experiment `{self.experiment}` ({self.tier} tier)",
+            "",
+            f"Reproduces: paper {self.paper_ref}. "
+            f"{self.seeds} seeds per cell; horizon {self.dims['horizon']} steps.",
+            "",
+        ]
+        for scen in self.scenarios:
+            lines.append(f"## scenario: {scen}")
+            lines.append("")
+            lines.append("| Metric | " + " | ".join(self.policies) + " |")
+            lines.append("|---" * (len(self.policies) + 1) + "|")
+            for m in ARTIFACT_METRICS:
+                cells = []
+                for pol in self.policies:
+                    c = self.table[pol][scen][m]
+                    cells.append(f"{c['mean']:,.2f} ± {c['std']:,.2f}")
+                lines.append(f"| {m} | " + " | ".join(cells) + " |")
+            lines.append("")
+        lines.append("## cost_usd across scenarios")
+        lines.append("")
+        lines.append("| scenario | " + " | ".join(self.policies) + " |")
+        lines.append("|---" * (len(self.policies) + 1) + "|")
+        for scen in self.scenarios:
+            cells = [f"{self.table[p][scen]['cost_usd']['mean']:,.2f}"
+                     for p in self.policies]
+            lines.append(f"| {scen} | " + " | ".join(cells) + " |")
+        lines.append("")
+        return "\n".join(lines)
+
+
+def _episode_slice(infos, idx: int):
+    """Cell `idx` of a stacked (N, T, ...) StepInfo as a (T, ...) StepInfo."""
+    return jax.tree_util.tree_map(lambda leaf: leaf[idx], infos)
+
+
+def run_experiment(
+    spec: ExperimentSpec,
+    smoke: bool = False,
+    batch_mode: str = "auto",
+    chunk_size: Optional[int] = None,
+) -> ExperimentResult:
+    """Execute one tier of `spec` and aggregate into an `ExperimentResult`.
+
+    One jitted grid call per policy; aggregation happens on the host in
+    float64 so the result does not depend on `batch_mode`.
+    """
+    tier = spec.tier(smoke)
+    scens = resolve_scenarios(tier)
+    t0 = time.time()
+    infos_by_policy, scen_names, resolved_mode = evaluate_infos(
+        tier.policies,
+        scenarios=scens,
+        seeds=tier.seeds,
+        dims=tier.dims,
+        batch_mode=batch_mode,
+        chunk_size=chunk_size,
+    )
+    wall = time.time() - t0
+
+    table: Dict[str, Dict[str, Dict[str, Dict[str, object]]]] = {}
+    for pol, infos in infos_by_policy.items():
+        table[pol] = {}
+        for si, scen in enumerate(scen_names):
+            per_seed: List[Dict[str, float]] = [
+                metrics.summarize_np(
+                    _episode_slice(infos, si * tier.seeds + k), warmup=tier.warmup
+                )
+                for k in range(tier.seeds)
+            ]
+            table[pol][scen] = {
+                m: {
+                    "mean": float(sum(d[m] for d in per_seed) / tier.seeds),
+                    "std": _std([d[m] for d in per_seed]),
+                    "per_seed": [d[m] for d in per_seed],
+                }
+                for m in ARTIFACT_METRICS
+            }
+
+    return ExperimentResult(
+        experiment=spec.name,
+        tier=spec.tier_name(smoke),
+        paper_ref=spec.paper_ref,
+        policies=tuple(tier.policies),
+        scenarios=scen_names,
+        seeds=tier.seeds,
+        dims=dataclasses.asdict(tier.dims),
+        table=table,
+        runtime={
+            "wall_s": round(wall, 2),
+            "batch_mode": resolved_mode,
+            "jax_backend": jax.default_backend(),
+            "device_count": len(jax.devices()),
+        },
+    )
+
+
+def _std(xs: List[float]) -> float:
+    """Population std in float64 with a fixed reduction order."""
+    n = len(xs)
+    mean = sum(xs) / n
+    return float((sum((x - mean) ** 2 for x in xs) / n) ** 0.5)
+
+
+def write_artifacts(result: ExperimentResult, out_dir: str) -> Tuple[str, str]:
+    """Write `<out_dir>/<exp>.json` + `<exp>.md`; returns both paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    json_path = os.path.join(out_dir, f"{result.experiment}.json")
+    md_path = os.path.join(out_dir, f"{result.experiment}.md")
+    with open(json_path, "w", encoding="utf-8") as f:
+        json.dump(result.to_dict(), f, indent=2, sort_keys=True)
+        f.write("\n")
+    with open(md_path, "w", encoding="utf-8") as f:
+        f.write(result.format_markdown())
+    return json_path, md_path

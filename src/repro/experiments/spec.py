@@ -1,0 +1,100 @@
+"""Declarative experiment specs (DESIGN.md §13).
+
+An `ExperimentSpec` is the reproduction contract for one of the paper's
+experiment families: it names the policy set, the scenario subset (registry
+names or inline `Scenario` objects), the seed grid, and the episode shape —
+once for the paper-faithful `full` tier and once for a CI-sized `smoke`
+tier — plus the ordering invariants (`Margin`s) the paper's claims rest on,
+e.g. "H-MPC's cost stays below 90% of Greedy's in the nominal regime".
+
+Specs are pure data; `repro.experiments.runner.run_experiment` executes
+them through the batched scenario-suite backends and
+`repro.experiments.golden` diffs the resulting artifact against the
+checked-in baseline under `results/golden/`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Tuple
+
+from repro.core.params import EnvDims
+from repro.scenarios.spec import Scenario
+
+
+@dataclasses.dataclass(frozen=True)
+class Margin:
+    """Ordering invariant between two policies on one scenario.
+
+    All Table-II metrics used in margins are lower-is-better (cost, queue
+    depth, peak temperature, throttle fraction), so the check is
+
+        mean(metric | better) <= max_ratio * mean(metric | worse) + slack
+
+    `slack` absorbs metrics whose mean can sit at 0 (e.g. throttle_pct),
+    where a pure ratio would be vacuous or ill-conditioned. Margins are
+    evaluated only when both policies and the scenario are present in the
+    result, so a smoke tier checks the subset it actually ran.
+    """
+
+    metric: str
+    better: str
+    worse: str
+    scenario: str
+    max_ratio: float = 1.0
+    slack: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentTier:
+    """One sizing of an experiment: the grid axes plus the episode shape."""
+
+    policies: Tuple[str, ...]
+    scenarios: Tuple[Any, ...]          # registry names or Scenario objects
+    seeds: int
+    dims: EnvDims
+    # Defaults merged *under* each scenario's own trace_overrides — the
+    # smoke tiers shrink cap_per_step so the tiny max_arrivals dims are not
+    # slot-saturated and the scenario contrast survives the downsizing.
+    trace_overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    warmup: int = 0
+
+    def scenario_names(self) -> Tuple[str, ...]:
+        return tuple(s if isinstance(s, str) else s.name for s in self.scenarios)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One paper experiment family, reproducible at two sizes."""
+
+    name: str
+    description: str
+    paper_ref: str                      # table/figure this reproduces
+    full: ExperimentTier
+    smoke: ExperimentTier
+    margins: Tuple[Margin, ...] = ()
+
+    def tier(self, smoke: bool) -> ExperimentTier:
+        return self.smoke if smoke else self.full
+
+    def tier_name(self, smoke: bool) -> str:
+        return "smoke" if smoke else "full"
+
+
+def resolve_scenarios(tier: ExperimentTier) -> Tuple[Scenario, ...]:
+    """Tier scenarios as concrete `Scenario`s with tier trace defaults
+    merged under each scenario's own overrides."""
+    from repro.scenarios import registry
+
+    scens = tuple(
+        registry.get(s) if isinstance(s, str) else s for s in tier.scenarios
+    )
+    if not tier.trace_overrides:
+        return scens
+    return tuple(
+        dataclasses.replace(
+            s,
+            trace_overrides={**dict(tier.trace_overrides),
+                             **dict(s.trace_overrides)},
+        )
+        for s in scens
+    )

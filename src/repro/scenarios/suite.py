@@ -266,6 +266,57 @@ def make_runner(
     raise ValueError(f"batch_mode must be one of {BATCH_MODES}, got {batch_mode!r}")
 
 
+def _prepare_grid(policies, scenarios, seeds, dims, base_params,
+                  batch_mode, memory_budget):
+    """Shared grid setup: resolve policies/scenarios, stack the cells, and
+    make `batch_mode` concrete. Used by `evaluate_suite` and
+    `evaluate_infos` so both paths run the exact same cells."""
+    if batch_mode not in BATCH_MODES:
+        raise ValueError(f"batch_mode must be one of {BATCH_MODES}, got {batch_mode!r}")
+    dims = dims or EnvDims()
+    pols = _resolve_policies(policies, dims)
+    scens = _resolve_scenarios(scenarios)
+    stacked = build_cells(scens, seeds, dims, base_params)
+    n_cells = len(scens) * seeds
+    if batch_mode == "auto":
+        batch_mode = select_batch_mode(n_cells, dims, memory_budget=memory_budget)
+    return dims, pols, scens, stacked, n_cells, batch_mode
+
+
+def evaluate_infos(
+    policies: Iterable,
+    scenarios: Optional[Iterable] = None,
+    seeds: int = 4,
+    dims: Optional[EnvDims] = None,
+    base_params: Optional[EnvParams] = None,
+    batch_mode: str = "auto",
+    chunk_size: Optional[int] = None,
+    memory_budget: int = DEFAULT_MEMORY_BUDGET,
+):
+    """Run the grid but return raw stacked per-step `StepInfo` per policy.
+
+    Returns `(infos_by_policy, scenario_names, resolved_batch_mode)` where
+    each pytree leaf has shape (S*K, T, ...) ordered scenario-major
+    (cell i = scenario i//K, seed i%K). The per-step StepInfo is bitwise
+    identical across all backends (the divergence between backends lives
+    only in how XLA fuses the *metric reductions* of `metrics.summarize`),
+    so callers that aggregate host-side — `repro.experiments.runner` does,
+    in float64 — get artifacts independent of the execution backend.
+    """
+    dims, pols, scens, stacked, n_cells, batch_mode = _prepare_grid(
+        policies, scenarios, seeds, dims, base_params, batch_mode, memory_budget
+    )
+    out: Dict[str, object] = {}
+    for name, pol in pols.items():
+        def cell(p, t, r, pol=pol):
+            _, infos = rollout_params(dims, pol, p, t, r)
+            return infos
+
+        run = make_runner(cell, n_cells, batch_mode, chunk_size=chunk_size, dims=dims)
+        out[name] = jax.tree_util.tree_map(np.asarray, run(*stacked))
+    return out, tuple(s.name for s in scens), batch_mode
+
+
 def evaluate_suite(
     policies: Iterable,
     scenarios: Optional[Iterable] = None,
@@ -285,15 +336,9 @@ def evaluate_suite(
     via `select_batch_mode`. Returns per-cell Table-II metrics as
     (seeds,)-arrays per (policy, scenario).
     """
-    if batch_mode not in BATCH_MODES:
-        raise ValueError(f"batch_mode must be one of {BATCH_MODES}, got {batch_mode!r}")
-    dims = dims or EnvDims()
-    pols = _resolve_policies(policies, dims)
-    scens = _resolve_scenarios(scenarios)
-    stacked = build_cells(scens, seeds, dims, base_params)
-    n_cells = len(scens) * seeds
-    if batch_mode == "auto":
-        batch_mode = select_batch_mode(n_cells, dims, memory_budget=memory_budget)
+    dims, pols, scens, stacked, n_cells, batch_mode = _prepare_grid(
+        policies, scenarios, seeds, dims, base_params, batch_mode, memory_budget
+    )
 
     cells: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
     for name, pol in pols.items():

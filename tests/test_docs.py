@@ -1,8 +1,12 @@
 """Docs-consistency checks (tier-1, also `make docs`): DESIGN.md section
 citations in source docstrings must resolve, every registered scenario
-must appear in the README and SIMULATOR_GUIDE tables, and relative
-markdown links must point at real files — so the docs cannot silently rot
-as the code moves."""
+and experiment must appear in the README and SIMULATOR_GUIDE tables,
+relative markdown links must point at real files, and every artifact
+under `results/` must satisfy the dcgym-experiment-v1 schema with goldens
+current against their specs — so neither the docs nor the checked-in
+baselines can silently rot as the code moves."""
+import glob
+import json
 import os
 import re
 
@@ -102,3 +106,115 @@ def test_guide_documents_stepinfo_and_metrics():
     )
     missing = [k for k in dummy if f"`{k}`" not in text]
     assert not missing, f"SIMULATOR_GUIDE is missing metrics: {missing}"
+
+
+# ------------------------------------------------------------- experiments
+
+
+@pytest.mark.parametrize("doc", ["README.md", "SIMULATOR_GUIDE.md"])
+def test_every_registered_experiment_is_documented(doc):
+    """Each `ExperimentSpec` must appear (backticked) in the README's
+    reproduction section and the SIMULATOR_GUIDE's experiment chapter."""
+    from repro.experiments import registry
+
+    text = _read(doc)
+    undocumented = [n for n in registry.names() if f"`{n}`" not in text]
+    assert not undocumented, (
+        f"{doc} is missing experiments: {undocumented} — every experiment in "
+        "repro.experiments.registry must be documented"
+    )
+
+
+def test_guide_maps_experiments_to_paper_artifacts():
+    """The SIMULATOR_GUIDE's experiment chapter must name the paper
+    table/figure each spec reproduces."""
+    from repro.experiments import registry
+
+    text = _read("SIMULATOR_GUIDE.md")
+    for spec in registry.all_experiments():
+        assert spec.paper_ref.split(" (")[0] in text, (
+            f"SIMULATOR_GUIDE.md must name the paper ref {spec.paper_ref!r} "
+            f"for experiment {spec.name!r}"
+        )
+
+
+# ------------------------------------------------- results/ artifact schema
+
+#: The dcgym-experiment-v1 output contract every artifact under results/
+#: (fresh runs and goldens alike) must satisfy.
+RESULTS_SCHEMA_KEYS = {
+    "schema", "experiment", "tier", "paper_ref", "policies", "scenarios",
+    "seeds", "dims", "metrics", "table",
+}
+
+
+def _result_files():
+    return sorted(
+        glob.glob(os.path.join(REPO, "results", "*.json"))
+        + glob.glob(os.path.join(REPO, "results", "golden", "*.json"))
+    )
+
+
+def test_results_artifacts_exist():
+    """Guard the guard: the repo ships smoke goldens, so an empty scan
+    means the glob broke, not that there is nothing to check."""
+    assert _result_files(), "no artifacts found under results/"
+
+
+@pytest.mark.parametrize("path", _result_files(),
+                         ids=lambda p: os.path.relpath(p, REPO))
+def test_results_artifact_schema(path):
+    from repro.experiments import ARTIFACT_METRICS
+
+    with open(path, encoding="utf-8") as f:
+        art = json.load(f)
+    rel = os.path.relpath(path, REPO)
+    assert art.get("schema") == "dcgym-experiment-v1", rel
+    missing = RESULTS_SCHEMA_KEYS - set(art)
+    assert not missing, f"{rel} missing keys: {sorted(missing)}"
+    for pol in art["policies"]:
+        assert pol in art["table"], f"{rel}: table missing policy {pol!r}"
+        for scen in art["scenarios"]:
+            cell = art["table"][pol].get(scen)
+            assert cell is not None, f"{rel}: table missing {pol}/{scen}"
+            for m in ARTIFACT_METRICS:
+                assert m in cell, f"{rel}: {pol}/{scen} missing metric {m!r}"
+                assert {"mean", "std", "per_seed"} <= set(cell[m]), \
+                    f"{rel}: {pol}/{scen}/{m} missing mean/std/per_seed"
+                assert len(cell[m]["per_seed"]) == art["seeds"], \
+                    f"{rel}: {pol}/{scen}/{m} per_seed != seeds"
+
+
+def test_goldens_are_current_against_their_specs():
+    """A golden whose policy/scenario axes no longer match its spec's tier
+    (someone renamed a scenario or added a policy without regenerating)
+    fails the docs gate. Smoke goldens are mandatory for every registered
+    experiment; full goldens optional but validated when present."""
+    from repro.experiments import registry
+    from repro.experiments.golden import golden_path, load_golden
+
+    for spec in registry.all_experiments():
+        for tier_name in ("smoke", "full"):
+            gold = load_golden(
+                golden_path(spec.name, tier_name, os.path.join(REPO, "results")))
+            if gold is None:
+                assert tier_name == "full", (
+                    f"missing mandatory smoke golden for {spec.name!r}; run "
+                    f"python -m repro.experiments run --exp {spec.name} "
+                    "--smoke --update-golden"
+                )
+                continue
+            tier = getattr(spec, tier_name)
+            assert set(gold["policies"]) == set(tier.policies), (
+                f"{spec.name}/{tier_name} golden is stale: policies "
+                f"{sorted(gold['policies'])} != spec {sorted(tier.policies)}"
+            )
+            assert set(gold["scenarios"]) == set(tier.scenario_names()), (
+                f"{spec.name}/{tier_name} golden is stale: scenarios "
+                f"{sorted(gold['scenarios'])} != spec "
+                f"{sorted(tier.scenario_names())}"
+            )
+            assert gold["seeds"] == tier.seeds, (
+                f"{spec.name}/{tier_name} golden seeds {gold['seeds']} != "
+                f"spec {tier.seeds}"
+            )

@@ -1,0 +1,278 @@
+"""Experiment-pipeline tests: registry integrity, float64 host aggregation
+vs the jnp metric path, golden-determinism of the smoke experiment across
+execution backends, golden/margin gating, and the CLI artifact contract."""
+import copy
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnvDims, make_params, metrics
+from repro.core.env import rollout_params
+from repro.core.policies import make_policy
+from repro.experiments import (
+    ARTIFACT_METRICS, ExperimentSpec, ExperimentTier, Margin,
+    check_margins, compare_to_golden, registry, resolve_scenarios,
+    run_experiment, write_artifacts,
+)
+from repro.experiments import golden as golden_mod
+from repro.experiments.__main__ import main as cli_main
+
+TINY_DIMS = EnvDims(
+    horizon=12, max_arrivals=32, queue_cap=64, run_cap=64,
+    pending_cap=32, admit_depth=32, policy_depth=64,
+)
+
+
+def tiny_spec(name="tiny", policies=("greedy",), margins=()) -> ExperimentSpec:
+    tier = ExperimentTier(
+        policies=policies, scenarios=("nominal",), seeds=2, dims=TINY_DIMS,
+        trace_overrides={"cap_per_step": 24},
+    )
+    return ExperimentSpec(
+        name=name, description="test-only", paper_ref="none",
+        full=tier, smoke=tier, margins=tuple(margins),
+    )
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_registered_experiments_cover_the_paper():
+    assert {"nominal", "sensitivity"} <= set(registry.names())
+    nominal = registry.get("nominal")
+    # the full tier is the paper protocol: every policy on the Table-I plant
+    assert set(nominal.full.policies) == {
+        "random", "greedy", "thermal", "power_cool", "sc_mpc", "h_mpc"}
+    # the smoke tier is CI-sized per the spec'd contract
+    assert len(nominal.smoke.policies) == 2
+    assert len(nominal.smoke.scenarios) == 3
+    assert nominal.smoke.seeds == 2
+    assert nominal.smoke.dims.horizon <= 48
+
+
+def test_margins_reference_existing_axes():
+    """Every margin must name policies/scenarios that exist in at least one
+    tier, so a renamed scenario cannot silently disable a margin."""
+    for spec in registry.all_experiments():
+        axes = set()
+        pols = set()
+        for tier in (spec.full, spec.smoke):
+            axes |= set(tier.scenario_names())
+            pols |= set(tier.policies)
+        for mg in spec.margins:
+            assert mg.scenario in axes, (spec.name, mg)
+            assert {mg.better, mg.worse} <= pols, (spec.name, mg)
+
+
+def test_tier_trace_overrides_merge_under_scenario_overrides():
+    spec = registry.get("sensitivity")
+    scens = resolve_scenarios(spec.smoke)
+    for s in scens:
+        # tier default applies...
+        assert s.trace_overrides["cap_per_step"] == 16
+        # ...but never clobbers the scenario's own lambda
+        assert s.trace_overrides["lam"] != 1.0 or s.name == "lam_1"
+
+
+def test_experiment_registry_rejects_duplicates():
+    with pytest.raises(ValueError):
+        registry.register(registry.get("nominal"))
+    with pytest.raises(KeyError):
+        registry.get("no_such_experiment")
+
+
+# ------------------------------------------------- host-side aggregation
+
+
+def test_summarize_np_matches_jnp():
+    """The float64 host path and the jitted float32 path must agree within
+    float32 round-off — they are the same Table-II definitions."""
+    dims = TINY_DIMS
+    pol = make_policy("greedy", dims)
+    scen = resolve_scenarios(tiny_spec().smoke)[0]
+    p = scen.build_params(make_params())
+    t = scen.build_trace(0, dims, p)
+    _, infos = jax.jit(lambda r: rollout_params(dims, pol, p, t, r))(
+        jax.random.PRNGKey(0))
+    want = {k: float(v) for k, v in metrics.summarize(infos).items()}
+    got = metrics.summarize_np(jax.tree_util.tree_map(np.asarray, infos))
+    assert set(got) == set(want) == set(ARTIFACT_METRICS)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=2e-5, atol=1e-6,
+                                   err_msg=k)
+
+
+def test_summarize_np_respects_warmup():
+    dims = TINY_DIMS
+    pol = make_policy("greedy", dims)
+    scen = resolve_scenarios(tiny_spec().smoke)[0]
+    p = scen.build_params(make_params())
+    t = scen.build_trace(0, dims, p)
+    _, infos = jax.jit(lambda r: rollout_params(dims, pol, p, t, r))(
+        jax.random.PRNGKey(0))
+    infos = jax.tree_util.tree_map(np.asarray, infos)
+    full = metrics.summarize_np(infos)
+    warm = metrics.summarize_np(infos, warmup=6)
+    assert warm["completed_jobs"] <= full["completed_jobs"]
+    assert warm["cost_usd"] < full["cost_usd"]
+
+
+# ------------------------------------------------------ golden determinism
+
+
+def test_smoke_experiment_bitwise_identical_across_backends_and_runs():
+    """The CI contract: the smoke experiment's aggregate metrics are
+    bitwise identical under vmap / chunked / scan and across two runs with
+    the same seeds. Works because the runner aggregates the raw per-step
+    StepInfo (itself backend-invariant) on the host in float64."""
+    spec = registry.get("nominal")
+    r_vmap = run_experiment(spec, smoke=True, batch_mode="vmap")
+    r_chun = run_experiment(spec, smoke=True, batch_mode="chunked",
+                            chunk_size=4)
+    r_scan = run_experiment(spec, smoke=True, batch_mode="scan")
+    r_rerun = run_experiment(spec, smoke=True, batch_mode="vmap")
+    assert r_vmap.table == r_chun.table, "chunked diverged from vmap"
+    assert r_vmap.table == r_scan.table, "scan diverged from vmap"
+    assert r_vmap.table == r_rerun.table, "same-seed rerun diverged"
+    # and the artifact (minus the runtime block) is byte-identical too
+    d1, d2 = r_vmap.to_dict(), r_scan.to_dict()
+    d1.pop("runtime"), d2.pop("runtime")
+    assert json.dumps(d1, sort_keys=True) == json.dumps(d2, sort_keys=True)
+
+
+# --------------------------------------------------------- golden + margins
+
+
+def _result(spec, **kw):
+    return run_experiment(spec, smoke=True, **kw)
+
+
+def test_golden_roundtrip_and_drift_detection(tmp_path):
+    spec = tiny_spec()
+    res = _result(spec)
+    gpath = str(tmp_path / "tiny_smoke.json")
+    golden_mod.write_golden(res, gpath)
+    gold = golden_mod.load_golden(gpath)
+    assert compare_to_golden(res, gold) == []
+
+    drifted = copy.deepcopy(gold)
+    cell = drifted["table"]["greedy"]["nominal"]["cost_usd"]
+    cell["mean"] *= 1.10  # way outside the 2% band
+    violations = compare_to_golden(res, drifted)
+    assert violations and "cost_usd" in violations[0]
+
+    missing = copy.deepcopy(gold)
+    missing["policies"].append("h_mpc")  # golden knows a policy the run lacks
+    assert any("missing" in v for v in compare_to_golden(res, missing))
+
+    truncated = copy.deepcopy(gold)
+    del truncated["table"]["greedy"]["nominal"]["cost_usd"]  # stale golden
+    assert any("golden cell missing" in v
+               for v in compare_to_golden(res, truncated))
+
+
+def test_near_zero_metrics_use_absolute_floor(tmp_path):
+    """throttle_pct golden of 0.0 must not make any nonzero reading fail."""
+    spec = tiny_spec()
+    res = _result(spec)
+    gpath = str(tmp_path / "tiny_smoke.json")
+    golden_mod.write_golden(res, gpath)
+    gold = golden_mod.load_golden(gpath)
+    gold["table"]["greedy"]["nominal"]["throttle_pct"]["mean"] = 0.0
+    res.table["greedy"]["nominal"]["throttle_pct"]["mean"] = 0.4  # < atol 0.5
+    assert compare_to_golden(res, gold) == []
+
+
+def test_margin_violation_fails_loudly():
+    spec = tiny_spec(margins=[
+        Margin("cost_usd", better="greedy", worse="greedy",
+               scenario="nominal", max_ratio=0.5),  # impossible: x <= x/2
+    ])
+    res = _result(spec)
+    violations = check_margins(res, spec)
+    assert violations and "margin violated" in violations[0]
+    # margins naming absent policies/scenarios are skipped, not crashed
+    spec2 = tiny_spec(margins=[
+        Margin("cost_usd", better="h_mpc", worse="greedy",
+               scenario="nominal", max_ratio=0.1),
+    ])
+    assert check_margins(res, spec2) == []
+
+
+def test_registered_margins_hold_on_smoke_goldens():
+    """The checked-in smoke goldens must themselves satisfy their spec's
+    margins — a degraded golden cannot be snuck in."""
+    results_dir = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results")
+    for spec in registry.all_experiments():
+        gold = golden_mod.load_golden(
+            golden_mod.golden_path(spec.name, "smoke", results_dir))
+        assert gold is not None, f"missing smoke golden for {spec.name}"
+        for mg in spec.margins:
+            if (mg.better not in gold["table"] or mg.worse not in gold["table"]
+                    or mg.scenario not in gold["scenarios"]):
+                continue
+            better = gold["table"][mg.better][mg.scenario][mg.metric]["mean"]
+            worse = gold["table"][mg.worse][mg.scenario][mg.metric]["mean"]
+            assert better <= mg.max_ratio * worse + mg.slack, (spec.name, mg)
+
+
+# ----------------------------------------------------------------- CLI
+
+
+def test_cli_run_writes_artifacts_and_gates(tmp_path, monkeypatch):
+    spec = tiny_spec(name="clitest")
+    monkeypatch.setattr(registry, "_REGISTRY", {"clitest": spec})
+    out = str(tmp_path)
+
+    # first run: no golden yet -> informational, exit 0
+    assert cli_main(["run", "--exp", "clitest", "--smoke", "--out", out]) == 0
+    art = json.load(open(os.path.join(out, "clitest.json")))
+    assert art["schema"] == "dcgym-experiment-v1"
+    assert art["tier"] == "smoke"
+    assert os.path.exists(os.path.join(out, "clitest.md"))
+    for pol in art["policies"]:
+        for scen in art["scenarios"]:
+            assert set(ARTIFACT_METRICS) <= set(art["table"][pol][scen])
+
+    # freeze golden, then a clean re-run passes the gate
+    assert cli_main(["run", "--exp", "clitest", "--smoke", "--out", out,
+                     "--update-golden"]) == 0
+    assert cli_main(["run", "--exp", "clitest", "--smoke", "--out", out]) == 0
+
+    # corrupt the golden -> the same command exits non-zero
+    gpath = golden_mod.golden_path("clitest", "smoke", out)
+    gold = json.load(open(gpath))
+    gold["table"]["greedy"]["nominal"]["cost_usd"]["mean"] *= 1.5
+    with open(gpath, "w") as f:
+        json.dump(gold, f)
+    assert cli_main(["run", "--exp", "clitest", "--smoke", "--out", out]) == 1
+
+
+def test_cli_update_golden_refuses_margin_violations(tmp_path, monkeypatch):
+    """A degraded run must never be frozen as the baseline."""
+    spec = tiny_spec(name="clibad", margins=[
+        Margin("cost_usd", better="greedy", worse="greedy",
+               scenario="nominal", max_ratio=0.5),  # unsatisfiable
+    ])
+    monkeypatch.setattr(registry, "_REGISTRY", {"clibad": spec})
+    out = str(tmp_path)
+    rc = cli_main(["run", "--exp", "clibad", "--smoke", "--out", out,
+                   "--update-golden"])
+    assert rc == 1
+    assert not os.path.exists(golden_mod.golden_path("clibad", "smoke", out))
+
+
+def test_write_artifacts_is_deterministic(tmp_path):
+    spec = tiny_spec()
+    r1 = _result(spec)
+    r2 = _result(spec)
+    p1, _ = write_artifacts(r1, str(tmp_path / "a"))
+    p2, _ = write_artifacts(r2, str(tmp_path / "b"))
+    a, b = json.load(open(p1)), json.load(open(p2))
+    a.pop("runtime"), b.pop("runtime")
+    assert a == b
