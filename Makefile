@@ -9,8 +9,8 @@ test:            ## tier-1 test suite (slow tests deselected)
 docs:            ## docs consistency: §-citations, scenario/experiment tables, artifact schema, md links
 	$(PY) -m pytest -q tests/test_docs.py
 
-smoke:           ## CI-sized paper experiment vs its golden baseline
-	$(PY) -m repro.experiments run --exp nominal --smoke
+smoke:           ## CI-sized experiments (nominal+sensitivity+carbon) vs their golden baselines
+	$(PY) -m repro.experiments run --exp all --smoke
 
 bench-gate:      ## fresh steps/sec vs committed BENCH_*.json (±30%; warn-only when $$CI is set)
 	$(PY) -m benchmarks.check_regression

@@ -1,0 +1,134 @@
+"""Grid-signal benchmarks: trace-generation throughput per generator and
+carbon-rollout steps/sec on the trace-driven scenarios (DESIGN.md §14).
+
+  PYTHONPATH=src python -m benchmarks.bench_grid
+  PYTHONPATH=src python -m benchmarks.run --only grid
+
+Writes BENCH_grid.latest.json at the repo root; the committed
+BENCH_grid.json baseline is updated via `benchmarks.check_regression
+--update` and gated within ±30% like the scenario/kernel baselines.
+Trace builds are timed on a jitted builder after a warmup call, so
+compilation is excluded; rollouts reuse the prebuilt vmap runner
+(second call) exactly like bench_scenarios.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+
+from benchmarks.bench_scenarios import _bench_dims
+from repro.core import metrics
+from repro.core.env import rollout_params
+from repro.core.params import GRID_STEPS, make_params
+from repro.core.policies import make_policy
+from repro.grid import build_traces
+from repro.scenarios import build_cells, registry
+from repro.scenarios.suite import make_runner
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: Committed bench-regression baseline — written only by
+#: `benchmarks.check_regression --update` (best-of-N).
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_grid.json")
+#: Default output of interactive runs (scratch, not the gate baseline).
+BENCH_LATEST = os.path.join(REPO_ROOT, "BENCH_grid.latest.json")
+
+
+def _grid_scenarios():
+    """Every registered scenario with a grid config — derived from the
+    registry so a newly registered grid scenario is benchmarked (and thus
+    baseline-gated) automatically."""
+    return tuple(n for n in registry.names() if registry.get(n).grid is not None)
+
+
+def trace_generation(reps: int = 30) -> Dict[str, Dict[str, float]]:
+    """Seeded (GRID_STEPS, D) trace builds per second, per grid scenario.
+
+    The builder is jitted over the seed-derived key path by re-invoking
+    `build_traces` with distinct seeds (each call retraces nothing: the
+    config is static, only the seed changes), so this measures the real
+    per-cell cost `suite.build_cells` pays."""
+    params = make_params()
+    out: Dict[str, Dict[str, float]] = {}
+    for name in _grid_scenarios():
+        gp = registry.get(name).grid
+        jax.block_until_ready(build_traces(gp, 0, params))  # warmup/compile
+        t0 = time.time()
+        for seed in range(reps):
+            jax.block_until_ready(build_traces(gp, seed + 1, params))
+        wall = time.time() - t0
+        out[name] = {
+            "wall_s": wall,
+            "traces_per_s": reps / wall,
+            "steps_per_s": reps * GRID_STEPS / wall,
+        }
+    print("# trace generation")
+    print("scenario,wall_s,traces_per_s")
+    for name, r in out.items():
+        print(f"{name},{r['wall_s']:.3f},{r['traces_per_s']:.0f}")
+    return out
+
+
+def carbon_rollout(
+    policy: str = "greedy", seeds: int = 4, fast: bool = False
+) -> Dict[str, Dict[str, float]]:
+    """Whole-grid carbon-rollout throughput over the grid scenarios."""
+    dims = _bench_dims(fast)
+    if fast:
+        seeds = min(seeds, 2)
+    scens = _grid_scenarios()
+    n_cells = len(scens) * seeds
+    pol = make_policy(policy, dims)
+    stacked = build_cells([registry.get(s) for s in scens], seeds, dims)
+
+    def cell(p, t, r):
+        _, infos = rollout_params(dims, pol, p, t, r)
+        return metrics.summarize(infos)
+
+    runner = make_runner(cell, n_cells, "vmap", dims=dims)
+    t0 = time.time()
+    out = jax.block_until_ready(runner(*stacked))
+    compile_s = time.time() - t0
+    t0 = time.time()
+    out = jax.block_until_ready(runner(*stacked))
+    wall = time.time() - t0
+    result = {
+        "grid_vmap": {
+            "wall_s": wall,
+            "steps_per_s": n_cells * dims.horizon / wall,
+            "first_call_s": compile_s,
+            "carbon_kg_mean": float(out["carbon_kg"].mean()),
+        }
+    }
+    print(f"\n# carbon rollout: {n_cells} cells "
+          f"({len(scens)} scenarios x {seeds} seeds), "
+          f"horizon={dims.horizon}, policy={policy}")
+    print("name,wall_s,steps_per_s,first_call_s")
+    for name, r in result.items():
+        print(f"{name},{r['wall_s']:.3f},{r['steps_per_s']:.0f},"
+              f"{r['first_call_s']:.1f}")
+    return result
+
+
+def main(fast: bool = False, out_path: str = BENCH_LATEST):
+    gen = trace_generation()
+    roll = carbon_rollout(fast=fast)
+    payload = {
+        "bench": "grid",
+        "fast": fast,
+        "jax_backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "per_generator": gen,
+        "carbon_rollout": roll,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {out_path}")
+    return gen, roll
+
+
+if __name__ == "__main__":
+    main()

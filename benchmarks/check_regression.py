@@ -2,14 +2,17 @@
 
     PYTHONPATH=src python -m benchmarks.check_regression [--update] [--warn-only]
 
-Re-runs the `scenarios` and `kernels` benchmarks with the same `fast` flag
-each committed baseline (`BENCH_scenarios.json` / `BENCH_kernels.json`)
-was recorded with and compares throughput within a ±30% band:
+Re-runs the `scenarios`, `kernels`, and `grid` benchmarks with the same
+`fast` flag each committed baseline (`BENCH_scenarios.json` /
+`BENCH_kernels.json` / `BENCH_grid.json`) was recorded with and compares
+throughput within a ±30% band:
 
 - scenarios: `per_scenario_vmap[*].steps_per_s` and
   `per_backend[*].steps_per_s`, on the backends both runs measured
   (the committed baseline may include `shard` from a forced-host-device
   run that a plain runner won't reproduce);
+- grid: `per_generator[*].traces_per_s` (grid-signal trace builds) and
+  `carbon_rollout[*].steps_per_s` (trace-driven scenario rollouts);
 - kernels: wall-clock per kernel (as 1/ms throughput), skipped when the
   Pallas numbers come from interpret mode on either side or the shapes
   differ.
@@ -36,6 +39,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINES = {
     "scenarios": os.path.join(REPO_ROOT, "BENCH_scenarios.json"),
     "kernels": os.path.join(REPO_ROOT, "BENCH_kernels.json"),
+    "grid": os.path.join(REPO_ROOT, "BENCH_grid.json"),
 }
 BAND = 0.30  # fresh/baseline throughput ratio must stay within [0.7, 1.3]
 
@@ -58,6 +62,19 @@ def scenario_pairs(baseline: Dict, fresh: Dict) -> Pairs:
         f = fresh.get("per_backend", {}).get(mode)
         if f:
             pairs.append((f"scenarios/backend/{mode}", b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
+def grid_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for name, b in baseline.get("per_generator", {}).items():
+        f = fresh.get("per_generator", {}).get(name)
+        if f:
+            pairs.append((f"grid/gen/{name}", b["traces_per_s"], f["traces_per_s"]))
+    for name, b in baseline.get("carbon_rollout", {}).items():
+        f = fresh.get("carbon_rollout", {}).get(name)
+        if f:
+            pairs.append((f"grid/rollout/{name}", b["steps_per_s"], f["steps_per_s"]))
     return pairs
 
 
@@ -110,10 +127,13 @@ def _merge_payload_best(a: Dict, b: Dict) -> Dict:
     the same measurement; kernel timings are independent scalars and are
     min'd per key."""
     out = json.loads(json.dumps(b))  # deep copy; non-timing fields from b
-    for sect in ("per_scenario_vmap", "per_backend"):
+    # per-section throughput key: the same one the pair functions compare
+    sections = {"per_scenario_vmap": "steps_per_s", "per_backend": "steps_per_s",
+                "per_generator": "traces_per_s", "carbon_rollout": "steps_per_s"}
+    for sect, tkey in sections.items():
         for key, cell in a.get(sect, {}).items():
             tgt = out.get(sect, {}).get(key)
-            if tgt and cell["steps_per_s"] > tgt["steps_per_s"]:
+            if tgt and cell[tkey] > tgt[tkey]:
                 out[sect][key] = dict(cell)
     for sect in ("thermal_rollout", "ssm_update", "flash_attention"):
         for key, val in a.get(sect, {}).items():
@@ -160,11 +180,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     warn_only = args.warn_only or bool(os.environ.get("CI"))
 
-    from benchmarks import bench_kernels, bench_scenarios
+    from benchmarks import bench_grid, bench_kernels, bench_scenarios
 
     suites = (
         ("scenarios", bench_scenarios, scenario_pairs),
         ("kernels", bench_kernels, kernel_pairs),
+        ("grid", bench_grid, grid_pairs),
     )
 
     runs = 1 + max(0, args.retries)
@@ -174,7 +195,7 @@ def main(argv=None) -> int:
             for name, mod, _ in suites:
                 base_path = BASELINES[name]
                 fast = bool(_load(base_path).get("fast")) if os.path.exists(base_path) \
-                    else (name == "scenarios")
+                    else (name in ("scenarios", "grid"))
                 merged = _measure_best(name, mod, fast, runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
@@ -192,7 +213,8 @@ def main(argv=None) -> int:
                 # shot must never become the committed reference
                 print(f"note: no committed baseline at {base_path}; "
                       f"emitting one (best of {runs} runs)")
-                merged = _measure_best(name, mod, name == "scenarios", runs, tmp)
+                merged = _measure_best(
+                    name, mod, name in ("scenarios", "grid"), runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
                 continue

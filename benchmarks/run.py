@@ -51,7 +51,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny scenario suite + nominal smoke experiment, then exit")
     ap.add_argument("--only", default="",
-                    help="comma list: rq1,rq2,complexity,throughput,kernels,scenarios")
+                    help="comma list: rq1,rq2,complexity,throughput,kernels,"
+                         "scenarios,grid")
     args, _ = ap.parse_known_args()
     if args.smoke:
         sys.exit(smoke())
@@ -108,6 +109,17 @@ def main() -> None:
         )
         rows.append(("scenarios", time.time() - t0,
                      f"peak_sps={sps:.0f} backend_sps: {per_backend}"))
+
+    if want("grid"):
+        from benchmarks import bench_grid
+
+        print("\n=== Grid signals: trace generation + carbon rollout ===")
+        t0 = time.time()
+        gen, roll = bench_grid.main(fast=args.fast)
+        tps = min(r["traces_per_s"] for r in gen.values())
+        rows.append(("grid", time.time() - t0,
+                     f"min_traces_ps={tps:.0f} "
+                     f"rollout_sps={roll['grid_vmap']['steps_per_s']:.0f}"))
 
     if want("kernels"):
         from benchmarks import bench_kernels

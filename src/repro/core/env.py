@@ -35,10 +35,13 @@ class StepInfo(NamedTuple):
     throttled: Any         # (D,) bool: theta > theta_soft
     energy_kwh: Any        # total electrical energy this step
     cost_usd: Any          # Eq. 9 cost this step
+    cool_cost_usd: Any     # cooling share of cost_usd this step
+    carbon_kg: Any         # operational CO2 this step (kg)
     completed: Any         # jobs completed this step
     dropped: Any           # jobs dropped (overflow) this step
     admitted_util: Any     # (C,) utilization after admission
     price: Any             # (D,)
+    carbon_intensity: Any  # (D,) grid carbon intensity (gCO2/kWh)
     setpoint: Any          # (D,)
 
 
@@ -102,10 +105,13 @@ class DataCenterGym:
             (state.t + 1).astype(jnp.float32), noise, params, dims.horizon
         )
 
-        # 4. power budget, tariffs, accounting (Eqs. 8-9).
+        # 4. power budget, grid signals, accounting (Eqs. 8-9 + carbon).
         price = power_mod.electricity_price(state.t, params)
+        carbon = power_mod.carbon_intensity(state.t, params)
         energy, _ = power_mod.step_energy_kwh(util, phi_cool, params)
         cost = power_mod.step_cost_usd(util, phi_cool, price, params)
+        cool_cost = power_mod.step_cool_cost_usd(phi_cool, price, params)
+        carbon_kg = power_mod.step_carbon_kg(util, phi_cool, carbon, params)
         power = power_mod.power_step(state.power, util, phi_cool, params)
 
         is_gpu_cl = params.is_gpu
@@ -127,10 +133,13 @@ class DataCenterGym:
             throttled=theta > params.theta_soft,
             energy_kwh=energy,
             cost_usd=cost,
+            cool_cost_usd=cool_cost,
+            carbon_kg=carbon_kg,
             completed=n_done,
             dropped=dropped,
             admitted_util=util,
             price=price,
+            carbon_intensity=carbon,
             setpoint=setpoint,
         )
 
@@ -154,6 +163,7 @@ class DataCenterGym:
             dropped=state.dropped + dropped,
             energy_kwh=state.energy_kwh + energy,
             cost_usd=state.cost_usd + cost,
+            carbon_kg=state.carbon_kg + carbon_kg,
         )
         return new_state, info
 

@@ -30,6 +30,8 @@ def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
     theta = infos.theta[sl]           # (T, D)
     total_energy = infos.energy_kwh[sl].sum()
     completed = infos.completed[sl].sum()
+    cost = infos.cost_usd[sl].sum()
+    cool_cost = infos.cool_cost_usd[sl].sum()
     return {
         "cpu_util_pct": 100.0 * infos.cpu_util[sl].mean(),
         "gpu_util_pct": 100.0 * infos.gpu_util[sl].mean(),
@@ -40,7 +42,10 @@ def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
         "throttle_pct": 100.0 * infos.throttled[sl].any(axis=-1).mean(),
         "total_energy_kwh": total_energy,
         "kwh_per_job": total_energy / jnp.maximum(completed, 1),
-        "cost_usd": infos.cost_usd[sl].sum(),
+        "cost_usd": cost,
+        "cost_cool_usd": cool_cost,
+        "cost_compute_usd": cost - cool_cost,
+        "carbon_kg": infos.carbon_kg[sl].sum(),
         "completed_jobs": completed,
         "dropped_jobs": infos.dropped[sl].sum(),
     }
@@ -59,6 +64,8 @@ def summarize_np(infos, warmup: int = 0) -> Dict[str, float]:
     theta = f8(infos.theta)                       # (T, D)
     total_energy = f8(infos.energy_kwh).sum()
     completed = f8(infos.completed).sum()
+    cost = f8(infos.cost_usd).sum()
+    cool_cost = f8(infos.cool_cost_usd).sum()
     out = {
         "cpu_util_pct": 100.0 * f8(infos.cpu_util).mean(),
         "gpu_util_pct": 100.0 * f8(infos.gpu_util).mean(),
@@ -69,7 +76,10 @@ def summarize_np(infos, warmup: int = 0) -> Dict[str, float]:
         "throttle_pct": 100.0 * np.asarray(infos.throttled)[warmup:].any(axis=-1).mean(),
         "total_energy_kwh": total_energy,
         "kwh_per_job": total_energy / max(completed, 1.0),
-        "cost_usd": f8(infos.cost_usd).sum(),
+        "cost_usd": cost,
+        "cost_cool_usd": cool_cost,
+        "cost_compute_usd": cost - cool_cost,
+        "carbon_kg": f8(infos.carbon_kg).sum(),
         "completed_jobs": completed,
         "dropped_jobs": f8(infos.dropped).sum(),
     }
@@ -77,7 +87,12 @@ def summarize_np(infos, warmup: int = 0) -> Dict[str, float]:
 
 
 def format_table(rows: Dict[str, Dict[str, float]], metrics=None) -> str:
-    """rows: {policy_name: metric_dict}. Returns a Table-III-style string."""
+    """rows: {policy_name: metric_dict}. Returns a Table-III-style string.
+
+    When every row carries the cost split (`cost_compute_usd` /
+    `cost_cool_usd`), a `cost compute/cool` breakdown row is appended so
+    the table shows where each policy's dollars go; same for `carbon_kg`.
+    """
     metrics = metrics or [
         "cpu_util_pct", "gpu_util_pct", "cpu_queue", "gpu_queue",
         "theta_mean", "theta_max", "throttle_pct",
@@ -89,4 +104,14 @@ def format_table(rows: Dict[str, Dict[str, float]], metrics=None) -> str:
     for m in metrics:
         vals = " | ".join(f"{float(rows[n][m]):,.2f}" for n in names)
         out.append(f"| {m} | {vals} |")
+    if all({"cost_compute_usd", "cost_cool_usd"} <= set(rows[n]) for n in names):
+        vals = " | ".join(
+            f"{float(rows[n]['cost_compute_usd']):,.2f} / "
+            f"{float(rows[n]['cost_cool_usd']):,.2f}"
+            for n in names
+        )
+        out.append(f"| cost compute/cool | {vals} |")
+    if all("carbon_kg" in rows[n] for n in names):
+        vals = " | ".join(f"{float(rows[n]['carbon_kg']):,.2f}" for n in names)
+        out.append(f"| carbon_kg | {vals} |")
     return "\n".join(out)

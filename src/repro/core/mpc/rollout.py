@@ -188,10 +188,48 @@ def ambient_forecast(t0, horizon: int, params: EnvParams, steps_per_day: int = 2
 
 
 def price_forecast(t0, horizon: int, params: EnvParams):
+    """(H, D) $/kWh forecast; trace-driven when params.grid_mode = 1, so
+    the planner and the plant consume the same market signal."""
     from repro.core import power as power_mod
 
     ts = t0 + jnp.arange(1, horizon + 1)
     return jax.vmap(lambda t: power_mod.electricity_price(t, params))(ts)
+
+
+def carbon_forecast(t0, horizon: int, params: EnvParams):
+    """(H, D) gCO2/kWh forecast from the same grid signals as the plant."""
+    from repro.core import power as power_mod
+
+    ts = t0 + jnp.arange(1, horizon + 1)
+    return jax.vmap(lambda t: power_mod.carbon_intensity(t, params))(ts)
+
+
+def carbon_adjusted(price, carbon, w_carbon: float):
+    """Carbon-adjusted price: tariff + lambda_c * intensity, elementwise.
+
+    `w_carbon` is an internal carbon price in $/kgCO2; the gCO2/kWh
+    intensity converts to kg/kWh (1e-3) so the sum stays in $/kWh. The
+    single definition every MPC cost term goes through — forecasts via
+    `effective_price`, current-step signals directly.
+    """
+    return price + w_carbon * 1e-3 * carbon
+
+
+def effective_price(t0, horizon: int, params: EnvParams, w_carbon: float):
+    """(H, D) carbon-adjusted price forecast (`carbon_adjusted` over the
+    grid-signal forecasts).
+
+    With w_carbon = 0 the plain tariff forecast is returned unchanged (the
+    carbon branch is skipped at trace time — bitwise-identical plans).
+    The Pallas and ref candidate-rollout paths both score against this
+    one forecast, so they consume identical carbon-adjusted traces.
+    """
+    price = price_forecast(t0, horizon, params)
+    if w_carbon:
+        price = carbon_adjusted(
+            price, carbon_forecast(t0, horizon, params), w_carbon
+        )
+    return price
 
 
 def plant_state_from_env(env_state, params: EnvParams, num_dcs: int) -> PlantState:

@@ -14,12 +14,18 @@ Phoenix is 2 CPU / 3 GPU clusters; Seattle capacity split is 157K CPU +
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
 HEAT_FRACTION = 0.95  # fraction of electrical power converted to heat
+
+#: Length of the per-DC grid-signal traces carried on EnvParams. One diurnal
+#: period at dt = 300 s; lookups wrap with ``t % GRID_STEPS``, so episodes
+#: longer than a day see a periodic market (DESIGN.md §14). The length is
+#: fixed repo-wide so params from any scenario stack into one batched grid.
+GRID_STEPS = 288
 
 # ---------------------------------------------------------------------------
 # Static (python-level) sizing of the job tables. These are shapes, not data.
@@ -43,6 +49,47 @@ class EnvDims:
     @property
     def obs_dim(self) -> int:
         return 3 * self.num_clusters + 3 * self.num_dcs
+
+
+# ---------------------------------------------------------------------------
+# Grid-signal generator configuration (static, hashable; DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GridParams:
+    """Configuration of the grid-signal generators (`repro.grid`).
+
+    Pure static data: `price_gen` / `carbon_gen` name registered generators
+    (optionally piped through modulators, e.g. ``"tou|market"``), the rest
+    parameterize them. `repro.grid.build_traces` turns one `GridParams` +
+    a seed into per-DC `(GRID_STEPS, D)` price/carbon traces, which
+    `Scenario.attach_grid` stores on `EnvParams` (grid_mode=1). The default
+    `EnvParams` keeps grid_mode=0: the legacy TOU tariff formula and the
+    constant per-DC `carbon_base`, evaluated at lookup time so `perturb` on
+    price/carbon fields keeps working and every pre-grid golden stays
+    bitwise valid.
+    """
+
+    price_gen: str = "tou"         # price-channel generator (pipe modulators with '|')
+    carbon_gen: str = "constant"   # carbon-channel generator
+    # geo diversity: per-DC solar-noon phase shift in hours (positive = later)
+    phase_h: Tuple[float, ...] = (0.0, -1.0, 2.0, 1.0)
+    # duck curve (midday renewable dip + evening net-load ramp)
+    duck_depth: float = 0.6        # fractional midday price dip
+    duck_ramp: float = 0.9         # evening ramp peak multiplier on the base
+    solar_width_h: float = 3.5     # Gaussian width of the solar bump (hours)
+    carbon_amp: float = 0.6        # fractional midday carbon dip (duck carbon)
+    # AR(1) wholesale-market modulation with Poisson spike events
+    ar1_rho: float = 0.95          # hourly-scale persistence at dt = 5 min
+    ar1_sigma: float = 0.05        # per-step log-price innovation std
+    spike_rate: float = 0.01       # Poisson spike probability per step
+    spike_mag: float = 3.0         # spike jump height (multiplier - 1)
+    spike_decay: float = 0.6       # per-step geometric decay of a spike
+    # green window (scheduled low-carbon interval, e.g. overnight wind)
+    green_lo_h: float = 1.0        # local-hour window start
+    green_hi_h: float = 6.0        # local-hour window end
+    green_depth: float = 0.9       # fractional carbon reduction inside it
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +125,16 @@ class EnvParams:
     amb_base: Any       # degC diurnal mean
     amb_amp: Any        # degC diurnal amplitude
     amb_sigma: Any      # degC noise std
+    carbon_base: Any    # gCO2/kWh grid carbon intensity (grid_mode=0 value)
+
+    # --- grid-signal traces (DESIGN.md §14) ---
+    # grid_mode 0: prices from the TOU formula, carbon = carbon_base (the
+    # legacy bitwise path). grid_mode 1: both signals looked up from the
+    # (GRID_STEPS, D) traces below at t % GRID_STEPS. Traces are built by
+    # repro.grid generators via Scenario.attach_grid; zeros when unused.
+    grid_mode: Any      # int32 scalar
+    price_trace: Any    # (GRID_STEPS, D) $/kWh
+    carbon_trace: Any   # (GRID_STEPS, D) gCO2/kWh
 
     # --- scalars ---
     dt: Any             # s per step
@@ -117,6 +174,9 @@ _DC_PHYS = {
     "amb_base": (10.0, 38.0, 16.0, 30.0),
     "amb_amp": (5.0, 12.0, 10.0, 11.0),
     "amb_sigma": (0.5, 0.5, 0.5, 0.5),
+    # annual-average grid carbon intensity, gCO2/kWh: hydro-heavy Seattle,
+    # gas+solar Phoenix, coal-leaning Chicago, ERCOT gas/wind Dallas
+    "carbon_base": (90.0, 450.0, 520.0, 470.0),
 }
 
 
@@ -180,6 +240,10 @@ def make_params(
         amb_base=f32("amb_base"),
         amb_amp=f32("amb_amp"),
         amb_sigma=f32("amb_sigma"),
+        carbon_base=f32("carbon_base"),
+        grid_mode=jnp.int32(0),
+        price_trace=jnp.zeros((GRID_STEPS, len(_DC_CLUSTERS)), jnp.float32),
+        carbon_trace=jnp.zeros((GRID_STEPS, len(_DC_CLUSTERS)), jnp.float32),
         dt=jnp.float32(dt),
         theta_soft=jnp.float32(theta_soft),
         theta_max=jnp.float32(theta_max),
@@ -195,7 +259,9 @@ def make_params(
 # ---------------------------------------------------------------------------
 
 # Structural fields define the plant topology; scenarios may not touch them.
-_STRUCTURAL_FIELDS = ("dc_id", "is_gpu")
+# The grid-mode flag and signal traces are structural too: they are set by
+# `Scenario.attach_grid` through the repro.grid generators, never perturbed.
+_STRUCTURAL_FIELDS = ("dc_id", "is_gpu", "grid_mode", "price_trace", "carbon_trace")
 # Fields that must stay strictly positive (a zero tariff degenerates Eq. 9).
 _PRICE_FLOOR = 1e-4
 _PRICE_FIELDS = ("price_peak", "price_off")
@@ -203,7 +269,7 @@ _PRICE_FIELDS = ("price_peak", "price_off")
 _NONNEG_FIELDS = (
     "c_max", "alpha", "phi", "kappa", "p_max", "w_in",
     "r_th", "c_th", "kp", "ki", "kd", "cool_max",
-    "amb_amp", "amb_sigma", "dt",
+    "amb_amp", "amb_sigma", "dt", "carbon_base",
 )
 
 
@@ -218,8 +284,9 @@ def perturb(
     `scale` multiplies a field, `offset` adds to it (scale applies first when
     a field appears in both), `replace` substitutes it outright. Physical
     bounds are enforced afterwards: prices stay >= 1e-4 $/kWh, non-negative
-    quantities (cool_max, capacities, gains, ...) are clamped at 0, and
-    g_min stays in [0, 1]. Structural fields (dc_id, is_gpu) are rejected.
+    quantities (cool_max, capacities, gains, carbon_base, ...) are clamped
+    at 0, and g_min stays in [0, 1]. Structural fields (dc_id, is_gpu, and
+    the grid-trace fields owned by `Scenario.attach_grid`) are rejected.
     """
     scale, offset, replace = scale or {}, offset or {}, replace or {}
     valid = {f.name for f in dataclasses.fields(EnvParams)}

@@ -7,11 +7,16 @@ from repro.core.policies.heuristics import (
     thermal_policy,
 )
 from repro.core.policies.sc_mpc import SCMPCConfig, sc_mpc_policy
-from repro.core.policies.h_mpc import HMPCConfig, h_mpc_policy
+from repro.core.policies.h_mpc import (
+    HMPCConfig,
+    h_mpc_carbon_policy,
+    h_mpc_policy,
+)
 
 
 def make_policy(name: str, dims, **kw) -> Policy:
-    """Factory: random | greedy | thermal | power_cool | sc_mpc | h_mpc."""
+    """Factory: random | greedy | thermal | power_cool | sc_mpc | h_mpc |
+    h_mpc_carbon."""
     table = {
         "random": random_policy,
         "greedy": greedy_policy,
@@ -19,6 +24,7 @@ def make_policy(name: str, dims, **kw) -> Policy:
         "power_cool": power_cool_policy,
         "sc_mpc": sc_mpc_policy,
         "h_mpc": h_mpc_policy,
+        "h_mpc_carbon": h_mpc_carbon_policy,
     }
     try:
         factory = table[name]

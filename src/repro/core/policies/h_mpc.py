@@ -23,7 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import thermal
+from repro.core import power, thermal
 from repro.core.mpc import rollout as plant
 from repro.core.mpc.solvers import projected_adam
 from repro.core.params import EnvDims, EnvParams
@@ -53,6 +53,11 @@ class HMPCConfig:
     w_reject: float = 10.0
     w_head: float = 5.0
     w_bal: float = 2.0
+    # internal carbon price lambda_c ($/kgCO2, DESIGN.md §14): folded into
+    # every energy-cost term as price + lambda_c * intensity via
+    # `mpc.rollout.effective_price`. 0.0 (default) skips the carbon branch
+    # at trace time, keeping the classic H-MPC program bitwise unchanged.
+    w_carbon: float = 0.0
     # stage-1.5 candidate setpoint refinement (DESIGN.md §12): evaluate
     # `refine_candidates` shifted copies of the Adam plan's setpoint
     # sequence through the batched thermal recurrence and keep the best.
@@ -106,7 +111,7 @@ def _stage1(state, params, agg, cfg: HMPCConfig, pol: HMPCState, num_dcs: int):
     H = cfg.h1
     st0 = plant.plant_state_from_env(state, params, num_dcs)
     amb = plant.ambient_forecast(state.t, H, params)
-    price = plant.price_forecast(state.t, H, params)
+    price = plant.effective_price(state.t, H, params, cfg.w_carbon)
     offered_load = pol.ema_count * pol.ema_rbar            # (2,) CU/step
     cap_type = agg.c_max.sum(0)                            # (2,)
     cap_total = cap_type.sum()
@@ -178,7 +183,7 @@ def _refine_targets(
     H, B = cfg.h1, cfg.refine_candidates
     st0 = plant.plant_state_from_env(state, params, num_dcs)
     amb = plant.ambient_forecast(state.t, H, params)
-    price = plant.price_forecast(state.t, H, params)
+    price = plant.effective_price(state.t, H, params, cfg.w_carbon)
     offered_load = pol.ema_count * pol.ema_rbar
     traj, _ = plant.plant_rollout(
         st0, rho, defer, target, jnp.broadcast_to(offered_load, (H, 2)), amb,
@@ -225,7 +230,19 @@ def _stage2(state, params, agg, cfg: HMPCConfig, pol: HMPCState, rho0, num_dcs: 
     dc_load = rho0 * (pol.ema_count * pol.ema_rbar)[None, :]    # (D,2) CU/step
     load_c = dc_load.reshape(-1)[group]                         # (C,) group load
     mu_c = pol.ema_mu[params.is_gpu.astype(jnp.int32)]
-    price_c = state.price[params.dc_id]
+    price_d = state.price
+    if cfg.w_carbon:
+        # carbon-adjusted local price (same lambda_c as stage 1). Sample
+        # BOTH signals at state.t: state.price lags one step (env.step
+        # stores the price it billed at t-1), and mixing a lagged price
+        # with current carbon mis-ranks DCs exactly at trace transitions
+        # (green-window edges, duck ramps).
+        price_d = plant.carbon_adjusted(
+            power.electricity_price(state.t, params),
+            power.carbon_intensity(state.t, params),
+            cfg.w_carbon,
+        )
+    price_c = price_d[params.dc_id]
     qcap = state.queues.r.shape[1]
     qvalid = jnp.arange(qcap)[None, :] < state.queues.count[:, None]
     queued = jnp.where(qvalid, state.queues.r, 0.0).sum(1)
@@ -292,7 +309,32 @@ def _counts_to_assign(offered, rho0, weights, pol, params, num_clusters: int):
     return assign
 
 
-def h_mpc_policy(dims: EnvDims, cfg: HMPCConfig = HMPCConfig()) -> Policy:
+#: Default internal carbon price ($/kgCO2) of the `h_mpc_carbon` policy.
+#: At Table-I intensities (0.09-0.52 kg/kWh) this adds 0.05-0.3 $/kWh to
+#: the effective tariff — comparable to the tariff itself, so low-carbon
+#: sites and hours genuinely dominate the site-selection objective.
+DEFAULT_CARBON_PRICE = 0.6
+
+
+def h_mpc_carbon_policy(dims: EnvDims, cfg: HMPCConfig | None = None) -> Policy:
+    """Carbon-aware H-MPC: the same hierarchical program planning against
+    the carbon-adjusted effective price (DESIGN.md §14).
+
+    A cfg without a carbon price gets the default one — a policy named
+    `h_mpc_carbon` must never silently plan carbon-blind (e.g. when a
+    caller passes `cfg=HMPCConfig(refine_candidates=8)` to tune an
+    unrelated knob).
+    """
+    if cfg is None:
+        cfg = HMPCConfig(w_carbon=DEFAULT_CARBON_PRICE)
+    elif not cfg.w_carbon:
+        cfg = dataclasses.replace(cfg, w_carbon=DEFAULT_CARBON_PRICE)
+    return h_mpc_policy(dims, cfg, name="h_mpc_carbon")
+
+
+def h_mpc_policy(
+    dims: EnvDims, cfg: HMPCConfig = HMPCConfig(), name: str = "h_mpc"
+) -> Policy:
     D, C = dims.num_dcs, dims.num_clusters
 
     def init(dims_, params):
@@ -334,4 +376,4 @@ def h_mpc_policy(dims: EnvDims, cfg: HMPCConfig = HMPCConfig()) -> Policy:
         )
         return assign, target[0], pol_state
 
-    return Policy(name="h_mpc", init=init, act=act)
+    return Policy(name=name, init=init, act=act)

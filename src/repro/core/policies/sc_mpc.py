@@ -36,6 +36,8 @@ class SCMPCConfig:
     w_soft: float = 10.0       # slack penalty (Eq. 20)
     w_hard: float = 1e3        # hard-limit penalty (Eq. 22)
     w_energy: float = 0.02     # $ per episode-step scale
+    w_carbon: float = 0.0      # internal carbon price lambda_c ($/kgCO2);
+                               # 0.0 keeps the classic program bitwise intact
 
 
 jax.tree_util.register_dataclass(SCMPCConfig, data_fields=[], meta_fields=[
@@ -48,7 +50,7 @@ def _setpoint_program(state, params: EnvParams, agg, cfg: SCMPCConfig, warm):
     H = cfg.horizon
     heat = thermal.compute_heat(state.util, params)      # frozen compute heat
     amb = plant.ambient_forecast(state.t, H, params)     # (H, D) nominal
-    price = plant.price_forecast(state.t, H, params)     # (H, D)
+    price = plant.effective_price(state.t, H, params, cfg.w_carbon)  # (H, D)
 
     def loss_fn(z):
         target = params.setpoint_lo + jax.nn.sigmoid(z["t"]) * (

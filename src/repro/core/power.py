@@ -1,4 +1,20 @@
-"""Power-budget dynamics (Eq. 8), TOU pricing and cost/energy accounting (Eq. 9)."""
+"""Power-budget dynamics (Eq. 8), grid signals (tariff Eq. 9 + carbon),
+and cost/energy/carbon accounting.
+
+Price and carbon are per-DC exogenous signals with two sources selected by
+`params.grid_mode` (DESIGN.md §14):
+
+  - mode 0 (default): the paper's two-level TOU tariff evaluated from
+    `price_peak`/`price_off` at lookup time, and the constant per-DC
+    `carbon_base` intensity. This is the legacy bitwise path — every
+    pre-grid scenario and golden runs through exactly these formulas.
+  - mode 1: lookups into the precomputed `(GRID_STEPS, D)` traces built by
+    the `repro.grid` generators (duck curves, AR(1)+spike markets, green
+    windows, ...), wrapping periodically via ``t % GRID_STEPS``.
+
+Both branches are evaluated under `jnp.where`, so a batched grid can mix
+modes across cells under one vmap.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,11 +25,23 @@ def hour_of_day(t, params):
     return (t.astype(jnp.float32) * params.dt / 3600.0) % 24.0
 
 
-def electricity_price(t, params):
-    """(D,) $/kWh: peak tariff inside [peak_start_h, peak_end_h)."""
+def tou_price(t, params):
+    """(D,) $/kWh two-level TOU formula: peak inside [peak_start_h, peak_end_h)."""
     h = hour_of_day(t, params)
     peak = (h >= params.peak_start_h) & (h < params.peak_end_h)
     return jnp.where(peak, params.price_peak, params.price_off)
+
+
+def electricity_price(t, params):
+    """(D,) $/kWh: TOU formula (grid_mode 0) or trace lookup (grid_mode 1)."""
+    traced = params.price_trace[t % params.price_trace.shape[0]]
+    return jnp.where(params.grid_mode > 0, traced, tou_price(t, params))
+
+
+def carbon_intensity(t, params):
+    """(D,) gCO2/kWh: constant carbon_base (grid_mode 0) or trace lookup."""
+    traced = params.carbon_trace[t % params.carbon_trace.shape[0]]
+    return jnp.where(params.grid_mode > 0, traced, params.carbon_base)
 
 
 def compute_power(util, params):
@@ -24,25 +52,41 @@ def compute_power(util, params):
 def power_step(power, util, phi_cool, params):
     """Available power budget update (Eq. 8), clipped to [0, p_max]."""
     draw = compute_power(util, params) + params.kappa * phi_cool[params.dc_id]
-    p = power - params.dt * 0.0 - draw + params.w_in  # W-equivalent budget / step
-    return jnp.clip(p, 0.0, params.p_max)
+    return jnp.clip(power - draw + params.w_in, 0.0, params.p_max)
+
+
+def _dc_compute_w(util, params):
+    """(D,) compute electrical draw per DC (segment sum over clusters)."""
+    num_dcs = params.r_th.shape[0]
+    return jax.ops.segment_sum(
+        compute_power(util, params), params.dc_id, num_segments=num_dcs
+    )
+
+
+def _dc_kwh(util, phi_cool, params):
+    """(D,) electrical energy this step per DC: (compute + cooling) * dt."""
+    comp_w = _dc_compute_w(util, params)
+    return (comp_w + phi_cool) * params.dt / 3.6e6
 
 
 def step_energy_kwh(util, phi_cool, params):
     """Total electrical energy this step (kWh): (compute + cooling) * dt."""
-    num_dcs = params.r_th.shape[0]
-    comp_w = jax.ops.segment_sum(
-        compute_power(util, params), params.dc_id, num_segments=num_dcs
-    )
-    total_w = comp_w + phi_cool
-    return jnp.sum(total_w) * params.dt / 3.6e6, comp_w
+    comp_w = _dc_compute_w(util, params)
+    return jnp.sum(comp_w + phi_cool) * params.dt / 3.6e6, comp_w
 
 
 def step_cost_usd(util, phi_cool, price, params):
     """Operational cost this step (Eq. 9): price * (compute + cooling) * dt."""
-    num_dcs = params.r_th.shape[0]
-    comp_w = jax.ops.segment_sum(
-        compute_power(util, params), params.dc_id, num_segments=num_dcs
-    )
-    kwh_d = (comp_w + phi_cool) * params.dt / 3.6e6
+    kwh_d = _dc_kwh(util, phi_cool, params)
     return jnp.sum(price * kwh_d)
+
+
+def step_cool_cost_usd(phi_cool, price, params):
+    """Cooling share of this step's cost: price * cooling energy only."""
+    return jnp.sum(price * phi_cool) * params.dt / 3.6e6
+
+
+def step_carbon_kg(util, phi_cool, carbon, params):
+    """Operational CO2 this step (kg): intensity (gCO2/kWh) x energy (kWh)."""
+    kwh_d = _dc_kwh(util, phi_cool, params)
+    return jnp.sum(carbon * kwh_d) * 1e-3

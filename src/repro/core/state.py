@@ -77,6 +77,7 @@ class EnvState:
     dropped: Any          # i32 jobs dropped on queue/pending overflow
     energy_kwh: Any       # f32 cumulative energy
     cost_usd: Any         # f32 cumulative cost
+    carbon_kg: Any        # f32 cumulative operational CO2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +122,7 @@ def init_state(dims: EnvDims, params, rng) -> EnvState:
         dropped=jnp.int32(0),
         energy_kwh=jnp.float32(0.0),
         cost_usd=jnp.float32(0.0),
+        carbon_kg=jnp.float32(0.0),
     )
 
 

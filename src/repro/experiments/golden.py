@@ -33,7 +33,10 @@ from repro.experiments.spec import ExperimentSpec
 DEFAULT_RTOL = 0.02
 #: Absolute floor so metrics whose golden mean is ~0 (throttle_pct on an
 #: unthrottled plant, dropped_jobs) are not held to a 0-width band.
-DEFAULT_ATOL = {"throttle_pct": 0.5, "dropped_jobs": 1.0, "cost_usd": 1.0}
+DEFAULT_ATOL = {
+    "throttle_pct": 0.5, "dropped_jobs": 1.0, "cost_usd": 1.0,
+    "cost_compute_usd": 1.0, "cost_cool_usd": 1.0, "carbon_kg": 1.0,
+}
 
 
 def golden_dir(out_dir: str = "results") -> str:
@@ -83,6 +86,9 @@ def compare_to_golden(result: ExperimentResult, golden: Dict) -> List[str]:
     tol = golden.get("tolerances", {})
     rtol = float(tol.get("default_rtol", DEFAULT_RTOL))
     atol = {**DEFAULT_ATOL, **tol.get("atol", {})}
+    # gate on the metrics the golden was frozen with: a golden predating a
+    # newly added ARTIFACT_METRICS entry stays valid for what it pinned
+    gate_metrics = tuple(golden.get("metrics") or ARTIFACT_METRICS)
 
     for pol in golden["policies"]:
         if pol not in result.table:
@@ -92,11 +98,11 @@ def compare_to_golden(result: ExperimentResult, golden: Dict) -> List[str]:
             if scen not in result.table[pol]:
                 out.append(f"scenario {scen!r} missing from fresh run ({pol})")
                 continue
-            for m in ARTIFACT_METRICS:
+            for m in gate_metrics:
                 want_cell = golden["table"].get(pol, {}).get(scen, {}).get(m)
                 if want_cell is None:
-                    # golden predates this metric/cell (e.g. ARTIFACT_METRICS
-                    # grew) — report it, don't traceback
+                    # golden's declared metrics and its table disagree —
+                    # report it, don't traceback
                     out.append(f"golden cell missing {pol}/{scen}/{m}; "
                                "regenerate with --update-golden")
                     continue

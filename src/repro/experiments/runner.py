@@ -29,11 +29,14 @@ from repro.scenarios.suite import evaluate_infos
 SCHEMA = "dcgym-experiment-v1"
 
 #: Metric keys every artifact cell must carry — the output contract
-#: (`tests/test_docs.py` validates all `results/**.json` against it).
+#: (`tests/test_docs.py` validates all `results/**.json` against the
+#: artifact's own declared `metrics`, which must be a subset of this
+#: list, so goldens frozen before a metric existed stay valid).
 ARTIFACT_METRICS = (
     "cpu_util_pct", "gpu_util_pct", "cpu_queue", "gpu_queue",
     "theta_mean", "theta_max", "throttle_pct", "total_energy_kwh",
-    "kwh_per_job", "cost_usd", "completed_jobs", "dropped_jobs",
+    "kwh_per_job", "cost_usd", "cost_compute_usd", "cost_cool_usd",
+    "carbon_kg", "completed_jobs", "dropped_jobs",
 )
 
 

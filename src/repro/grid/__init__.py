@@ -1,0 +1,46 @@
+"""Grid-signal subsystem: trace-driven electricity markets and carbon
+accounting (DESIGN.md §14).
+
+Public API:
+  - `GridParams` (re-exported from core.params): static generator config
+  - `build_traces(gp, seed, params)`: (GRID_STEPS, D) price/carbon traces
+  - `attach(params, gp, seed)`: EnvParams with grid_mode=1 and the traces
+  - `register_generator` / `generator_names` / `modulator_names`
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.params import EnvParams, GridParams
+from repro.grid.generators import (
+    build_traces,
+    generator_names,
+    get_generator,
+    modulator_names,
+    register_generator,
+)
+
+
+def attach(params: EnvParams, gp: GridParams, seed: int) -> EnvParams:
+    """Return `params` switched to trace-driven grid signals.
+
+    Builds the (GRID_STEPS, D) price/carbon traces for `(gp, seed)` from
+    the (possibly scenario-perturbed) `params` and stores them with
+    grid_mode=1, so `power.electricity_price` / `power.carbon_intensity`
+    read the traces instead of the legacy formulas.
+    """
+    price, carbon = build_traces(gp, seed, params)
+    return dataclasses.replace(
+        params,
+        grid_mode=jnp.int32(1),
+        price_trace=price,
+        carbon_trace=carbon,
+    )
+
+
+__all__ = [
+    "GridParams", "attach", "build_traces", "generator_names",
+    "get_generator", "modulator_names", "register_generator",
+]

@@ -1,0 +1,248 @@
+"""Grid-signal generators: trace-driven electricity prices and carbon
+intensity (DESIGN.md §14).
+
+Every generator is a jit/vmap-safe pure function
+
+    gen(ts, key, gp: GridParams, params: EnvParams, channel) -> (T, D)
+
+where ``ts`` is an int32 step grid, ``key`` a PRNG key, and ``channel`` one
+of ``"price"`` ($/kWh) or ``"carbon"`` (gCO2/kWh). Modulators share the
+signature with a leading ``signal`` argument and rescale an existing trace
+(wholesale-market noise, spike events). `build_traces` composes them from a
+pipe expression (``"tou|market"`` = TOU base through the AR(1)+spike
+market) and is what `Scenario.attach_grid` calls per (scenario, seed) cell.
+
+Two generators exist for backward compatibility and are pinned by tests:
+``tou`` reproduces `core.power.tou_price` bitwise on the step grid, and
+``constant`` broadcasts the off-peak tariff / `carbon_base`, so a
+grid_mode=1 plant with those generators is indistinguishable from the
+legacy grid_mode=0 formulas.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import EnvParams, GridParams
+
+_GENERATORS: Dict[str, Callable] = {}
+_MODULATORS: Dict[str, Callable] = {}
+
+CHANNELS = ("price", "carbon")
+
+
+def register_generator(name: str, fn: Callable = None, *, modulator: bool = False):
+    """Register a base generator (or, with ``modulator=True``, a modulator).
+
+    Usable as a decorator: ``@register_generator("duck")``.
+    """
+    table = _MODULATORS if modulator else _GENERATORS
+
+    def add(f):
+        if name in _GENERATORS or name in _MODULATORS:
+            raise ValueError(f"grid generator {name!r} already registered")
+        table[name] = f
+        return f
+
+    return add(fn) if fn is not None else add
+
+
+def generator_names() -> Tuple[str, ...]:
+    return tuple(_GENERATORS)
+
+
+def modulator_names() -> Tuple[str, ...]:
+    return tuple(_MODULATORS)
+
+
+def get_generator(name: str) -> Callable:
+    try:
+        return _GENERATORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown grid generator {name!r}; registered: {sorted(_GENERATORS)}"
+        ) from None
+
+
+def _local_hour(ts, gp: GridParams, params: EnvParams):
+    """(T, D) local hour of day: UTC hour + per-DC solar phase shift."""
+    from repro.core import power
+
+    h = power.hour_of_day(ts, params)                                 # (T,)
+    phase = jnp.asarray(gp.phase_h, jnp.float32)                      # (D,)
+    return (h[:, None] + phase[None, :]) % 24.0
+
+
+def _base(channel: str, params: EnvParams):
+    """Per-DC magnitude scale of a channel: mid tariff or carbon_base."""
+    if channel == "price":
+        return 0.5 * (params.price_peak + params.price_off)           # (D,)
+    return params.carbon_base
+
+
+def _solar_bump(h_local, width_h: float):
+    """Gaussian solar-output bump peaking at 13:00 local, in [0, 1]."""
+    d = jnp.minimum(jnp.abs(h_local - 13.0), 24.0 - jnp.abs(h_local - 13.0))
+    return jnp.exp(-0.5 * (d / width_h) ** 2)
+
+
+def _evening_ramp(h_local):
+    """Net-load evening ramp bump peaking at 19:00 local, in [0, 1]."""
+    d = jnp.minimum(jnp.abs(h_local - 19.0), 24.0 - jnp.abs(h_local - 19.0))
+    return jnp.exp(-0.5 * (d / 1.5) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Base generators
+# ---------------------------------------------------------------------------
+
+
+@register_generator("tou")
+def gen_tou(ts, key, gp: GridParams, params: EnvParams, channel: str):
+    """The paper's two-level TOU tariff, bitwise equal to `power.tou_price`
+    on the step grid (phase shifts deliberately NOT applied — this is the
+    compatibility generator). On the carbon channel: `carbon_base`."""
+    from repro.core import power
+
+    if channel == "carbon":
+        return jnp.broadcast_to(params.carbon_base, (ts.shape[0],) + params.carbon_base.shape)
+    return jax.vmap(lambda t: power.tou_price(t, params))(ts)
+
+
+@register_generator("constant")
+def gen_constant(ts, key, gp: GridParams, params: EnvParams, channel: str):
+    """Flat signals: off-peak tariff / `carbon_base` at every step."""
+    sig = params.price_off if channel == "price" else params.carbon_base
+    return jnp.broadcast_to(sig, (ts.shape[0],) + sig.shape)
+
+
+@register_generator("duck")
+def gen_duck(ts, key, gp: GridParams, params: EnvParams, channel: str):
+    """Duck curve: midday renewable dip + evening net-load ramp, phase-
+    shifted per DC. Price dips by `duck_depth` under the solar bump and
+    ramps up by `duck_ramp` in the evening; carbon dips by `carbon_amp`
+    (solar displaces marginal fossil generation) and rises on the ramp as
+    peaker plants come online."""
+    h = _local_hour(ts, gp, params)
+    s, ramp = _solar_bump(h, gp.solar_width_h), _evening_ramp(h)
+    base = _base(channel, params)[None, :]
+    if channel == "price":
+        return base * (1.0 - gp.duck_depth * s + gp.duck_ramp * ramp)
+    return base * (1.0 - gp.carbon_amp * s + 0.5 * gp.carbon_amp * ramp)
+
+
+@register_generator("green_window")
+def gen_green_window(ts, key, gp: GridParams, params: EnvParams, channel: str):
+    """Scheduled low-carbon interval (overnight wind surplus): carbon drops
+    by `green_depth` inside the local-hour window [green_lo_h, green_hi_h).
+    The price channel gets a milder dip (surplus depresses prices)."""
+    h = _local_hour(ts, gp, params)
+    inside = ((h >= gp.green_lo_h) & (h < gp.green_hi_h)).astype(jnp.float32)
+    base = _base(channel, params)[None, :]
+    if channel == "price":
+        return base * (1.0 - 0.5 * gp.green_depth * inside)
+    return base * (1.0 - gp.green_depth * inside)
+
+
+# ---------------------------------------------------------------------------
+# Modulators
+# ---------------------------------------------------------------------------
+
+
+@register_generator("market", modulator=True)
+def mod_market(signal, ts, key, gp: GridParams, params: EnvParams, channel: str):
+    """Wholesale-market modulation: mean-one log-AR(1) noise times Poisson
+    spike events with geometric decay, independent per DC.
+
+        x_{t+1} = rho x_t + sigma eps_t          (log price factor)
+        y_{t+1} = decay y_t + mag 1[spike_t]     (spike excess)
+        m_t     = exp(x_t - var/2) (1 + y_t),  var = sigma^2 / (1 - rho^2)
+    """
+    T, D = signal.shape
+    k_eps, k_spk, k_init = jax.random.split(key, 3)
+    eps = jax.random.normal(k_eps, (T, D))
+    spikes = (jax.random.uniform(k_spk, (T, D)) < gp.spike_rate).astype(jnp.float32)
+    var = gp.ar1_sigma**2 / jnp.maximum(1.0 - gp.ar1_rho**2, 1e-6)
+    # start the AR(1) at its stationary law, from its own key so the first
+    # scan innovation is independent of the init draw
+    x0 = jnp.sqrt(var) * jax.random.normal(k_init, (D,))
+
+    def body(carry, inp):
+        x, y = carry
+        e, s = inp
+        x = gp.ar1_rho * x + gp.ar1_sigma * e
+        y = gp.spike_decay * y + gp.spike_mag * s
+        return (x, y), jnp.exp(x - 0.5 * var) * (1.0 + y)
+
+    _, mult = jax.lax.scan(body, (x0, jnp.zeros(D)), (eps, spikes))
+    return signal * mult
+
+
+# ---------------------------------------------------------------------------
+# Composition
+# ---------------------------------------------------------------------------
+
+
+def _run_pipe(expr: str, ts, key, gp, params, channel):
+    names = [n.strip() for n in expr.split("|") if n.strip()]
+    if not names:
+        raise ValueError(f"empty generator expression for channel {channel!r}")
+    if names[0] not in _GENERATORS:
+        raise KeyError(
+            f"unknown grid generator {names[0]!r}; registered: "
+            f"{sorted(_GENERATORS)}"
+        )
+    keys = jax.random.split(key, len(names))
+    signal = _GENERATORS[names[0]](ts, keys[0], gp, params, channel)
+    for name, k in zip(names[1:], keys[1:]):
+        if name not in _MODULATORS:
+            raise KeyError(
+                f"unknown grid modulator {name!r}; registered: "
+                f"{sorted(_MODULATORS)}"
+            )
+        signal = _MODULATORS[name](signal, ts, k, gp, params, channel)
+    return signal
+
+
+#: Salt folded into the grid PRNG stream so grid noise is independent of
+#: the rollout keys (which are PRNGKey(seed) as well).
+_GRID_SEED_SALT = 0x67726964  # "grid"
+
+# Physical floors applied after composition: a zero tariff degenerates
+# Eq. 9 (mirrors params._PRICE_FLOOR); carbon is merely non-negative.
+_PRICE_FLOOR = 1e-4
+
+
+@functools.partial(jax.jit, static_argnames=("gp", "steps"))
+def _build_traces_jit(key, params: EnvParams, gp: GridParams, steps: int):
+    ts = jnp.arange(steps, dtype=jnp.int32)
+    k_price, k_carbon = jax.random.split(key)
+    price = _run_pipe(gp.price_gen, ts, k_price, gp, params, "price")
+    carbon = _run_pipe(gp.carbon_gen, ts, k_carbon, gp, params, "carbon")
+    price = jnp.maximum(price.astype(jnp.float32), _PRICE_FLOOR)
+    carbon = jnp.maximum(carbon.astype(jnp.float32), 0.0)
+    return price, carbon
+
+
+def build_traces(
+    gp: GridParams,
+    seed: int,
+    params: EnvParams,
+    steps: int | None = None,
+):
+    """Materialize (steps, D) price + carbon traces for one (config, seed).
+
+    Deterministic per (gp, seed, params). Jitted with the (hashable)
+    `GridParams` and trace length as static arguments, so seed sweeps in
+    `suite.build_cells` pay one compile per generator config and then
+    ~ms per cell even for the scan-based market modulator.
+    Returns ``(price_trace, carbon_trace)`` float32 arrays.
+    """
+    from repro.core.params import GRID_STEPS
+
+    steps = GRID_STEPS if steps is None else steps
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), _GRID_SEED_SALT)
+    return _build_traces_jit(key, params, gp, steps)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, Tuple
 
+from repro.core.params import GridParams
 from repro.scenarios.spec import Scenario
 
 _REGISTRY: Dict[str, Scenario] = {}
@@ -103,4 +104,46 @@ register(Scenario(
                 "temperature peak (overnight batch surge); decorrelates "
                 "load from heat and from peak tariffs.",
     trace_overrides={"diurnal_shift": 0.5},
+))
+
+# ---------------------------------------------------------------------------
+# Grid-signal scenarios (DESIGN.md §14): trace-driven electricity markets
+# and carbon intensity from the repro.grid generators. Phase shifts give
+# each DC its own local market hour, so geo-arbitrage is real.
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    name="duck_curve",
+    description="Renewable duck curve on both channels: midday solar dips "
+                "prices and carbon, the 19:00 net-load ramp spikes both; "
+                "phase-shifted per DC. Stresses time-of-day placement.",
+    grid=GridParams(price_gen="duck", carbon_gen="duck"),
+))
+
+register(Scenario(
+    name="price_volatility",
+    description="Wholesale market: TOU base tariff through mean-one AR(1) "
+                "noise with Poisson spike events (4x jumps: 1 + spike_mag, "
+                "geometric decay), independent per DC. Stresses robustness of "
+                "cost-aware placement to non-diurnal price risk.",
+    grid=GridParams(price_gen="tou|market", carbon_gen="constant"),
+))
+
+register(Scenario(
+    name="carbon_arbitrage",
+    description="Large per-DC carbon divergence: duck-curve intensity with "
+                "a 9 h phase spread over the Table-I base (hydro Seattle "
+                "vs coal-leaning Chicago) under a flat tariff — cost gives "
+                "no signal; only carbon-aware routing lowers emissions.",
+    grid=GridParams(price_gen="constant", carbon_gen="duck",
+                    phase_h=(0.0, -3.0, 6.0, 9.0), carbon_amp=0.8),
+))
+
+register(Scenario(
+    name="green_window",
+    description="Scheduled overnight wind surplus: carbon drops 90% inside "
+                "a per-DC 01:00-06:00 local window (prices sag too); "
+                "rewards policies that shift deferrable load into the "
+                "green hours.",
+    grid=GridParams(price_gen="green_window", carbon_gen="green_window"),
 ))

@@ -12,9 +12,9 @@ across policies and machines.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping
+from typing import Any, Mapping, Optional
 
-from repro.core.params import EnvDims, EnvParams, make_params, perturb
+from repro.core.params import EnvDims, EnvParams, GridParams, make_params, perturb
 from repro.core.workload import Trace, synthesize_trace
 
 
@@ -27,6 +27,11 @@ class Scenario:
     `param_offset` / `param_replace` feed `perturb` (scale applies before
     offset). Fields not mentioned keep their Table-I values — in particular
     cluster capacities stay untouched unless a scenario names them.
+
+    `grid` optionally names a grid-signal configuration (DESIGN.md §14):
+    when set, `attach_grid` switches the perturbed plant to trace-driven
+    price/carbon signals generated per seed by `repro.grid`; when None the
+    plant keeps the legacy TOU + constant-carbon formulas (grid_mode 0).
     """
 
     name: str
@@ -35,6 +40,7 @@ class Scenario:
     param_scale: Mapping[str, float] = dataclasses.field(default_factory=dict)
     param_offset: Mapping[str, float] = dataclasses.field(default_factory=dict)
     param_replace: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    grid: Optional[GridParams] = None
 
     def build_params(self, base: EnvParams | None = None) -> EnvParams:
         """Perturbed plant parameters (bounds enforced by `perturb`)."""
@@ -45,6 +51,21 @@ class Scenario:
             offset=dict(self.param_offset),
             replace=dict(self.param_replace),
         )
+
+    def attach_grid(self, params: EnvParams, seed: int) -> EnvParams:
+        """Seeded grid-signal traces on top of the perturbed plant.
+
+        Identity when the scenario declares no `grid`; otherwise returns
+        `params` with grid_mode=1 and the (GRID_STEPS, D) price/carbon
+        traces built by the registered generators. Called per (scenario,
+        seed) cell by `suite.build_cells`, after `build_params`, so the
+        generators see the scenario-perturbed tariffs/intensities.
+        """
+        if self.grid is None:
+            return params
+        from repro import grid as grid_mod
+
+        return grid_mod.attach(params, self.grid, seed)
 
     def build_trace(self, seed: int, dims: EnvDims, params: EnvParams) -> Trace:
         """Seeded workload trace under this scenario's arrival process."""

@@ -114,8 +114,11 @@ def build_cells(
     for scen in scenarios:
         scen_params = scen.build_params(base)
         for k in range(seeds):
-            params_cells.append(scen_params)
-            trace_cells.append(scen.build_trace(k, dims, scen_params))
+            # grid-signal traces are seeded per cell (market noise is part
+            # of the Monte-Carlo draw); a no-op for grid-less scenarios
+            cell_params = scen.attach_grid(scen_params, k)
+            params_cells.append(cell_params)
+            trace_cells.append(scen.build_trace(k, dims, cell_params))
             rng_cells.append(jax.random.PRNGKey(k))
     return (
         stack_params(params_cells),

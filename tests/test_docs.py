@@ -125,6 +125,23 @@ def test_every_registered_experiment_is_documented(doc):
     )
 
 
+def test_every_grid_generator_is_documented():
+    """The SIMULATOR_GUIDE's grid-signal chapter must catalogue every
+    registered generator and modulator (backticked), like the scenario
+    and experiment tables."""
+    from repro.grid import generator_names, modulator_names
+
+    text = _read("SIMULATOR_GUIDE.md")
+    undocumented = [
+        n for n in (*generator_names(), *modulator_names())
+        if f"`{n}`" not in text
+    ]
+    assert not undocumented, (
+        f"SIMULATOR_GUIDE.md grid-generator catalogue is missing: "
+        f"{undocumented}"
+    )
+
+
 def test_guide_maps_experiments_to_paper_artifacts():
     """The SIMULATOR_GUIDE's experiment chapter must name the paper
     table/figure each spec reproduces."""
@@ -164,6 +181,10 @@ def test_results_artifacts_exist():
 @pytest.mark.parametrize("path", _result_files(),
                          ids=lambda p: os.path.relpath(p, REPO))
 def test_results_artifact_schema(path):
+    """Cells must carry the metrics the artifact itself declares, and that
+    declaration must be a subset of the current ARTIFACT_METRICS — so a
+    golden frozen before a metric existed stays valid, but an artifact
+    cannot invent metrics the contract does not know."""
     from repro.experiments import ARTIFACT_METRICS
 
     with open(path, encoding="utf-8") as f:
@@ -172,12 +193,15 @@ def test_results_artifact_schema(path):
     assert art.get("schema") == "dcgym-experiment-v1", rel
     missing = RESULTS_SCHEMA_KEYS - set(art)
     assert not missing, f"{rel} missing keys: {sorted(missing)}"
+    declared = art["metrics"]
+    unknown = set(declared) - set(ARTIFACT_METRICS)
+    assert not unknown, f"{rel} declares unknown metrics: {sorted(unknown)}"
     for pol in art["policies"]:
         assert pol in art["table"], f"{rel}: table missing policy {pol!r}"
         for scen in art["scenarios"]:
             cell = art["table"][pol].get(scen)
             assert cell is not None, f"{rel}: table missing {pol}/{scen}"
-            for m in ARTIFACT_METRICS:
+            for m in declared:
                 assert m in cell, f"{rel}: {pol}/{scen} missing metric {m!r}"
                 assert {"mean", "std", "per_seed"} <= set(cell[m]), \
                     f"{rel}: {pol}/{scen}/{m} missing mean/std/per_seed"

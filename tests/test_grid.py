@@ -1,0 +1,267 @@
+"""Grid-signal subsystem tests (DESIGN.md §14): generator registry, the
+bitwise tou/constant compatibility contract, trace physics, carbon
+accounting, and the carbon-aware MPC wiring."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import grid
+from repro.core import EnvDims, make_params, metrics, perturb, rollout_params, synthesize_trace
+from repro.core import power as P
+from repro.core.mpc import rollout as plant
+from repro.core.params import GRID_STEPS, GridParams
+from repro.core.policies import make_policy
+from repro.scenarios import get, names
+
+DIMS = EnvDims(
+    horizon=12, max_arrivals=32, queue_cap=64, run_cap=64,
+    pending_cap=32, admit_depth=32, policy_depth=64,
+)
+PARAMS = make_params()
+GRID_SCENARIOS = ("duck_curve", "price_volatility", "carbon_arbitrage",
+                  "green_window")
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_generator_registry():
+    gens = grid.generator_names()
+    assert {"tou", "constant", "duck", "green_window"} <= set(gens)
+    assert "market" in grid.modulator_names()
+    with pytest.raises(KeyError):
+        grid.get_generator("no_such_generator")
+    with pytest.raises(ValueError):
+        grid.register_generator("tou", lambda *a: None)
+    with pytest.raises(KeyError):
+        grid.build_traces(GridParams(price_gen="bogus"), 0, PARAMS)
+    with pytest.raises(KeyError):
+        grid.build_traces(GridParams(price_gen="tou|bogus"), 0, PARAMS)
+
+
+def test_grid_scenarios_registered():
+    assert set(GRID_SCENARIOS) <= set(names())
+    for name in GRID_SCENARIOS:
+        assert get(name).grid is not None, name
+
+
+# ------------------------------------------- bitwise compatibility contract
+
+
+def test_tou_generator_bitwise_matches_formula():
+    """The `tou` generator must reproduce `power.tou_price` bitwise on the
+    step grid — this is what keeps every pre-grid golden valid."""
+    price, carbon = grid.build_traces(
+        GridParams(price_gen="tou", carbon_gen="constant"), 0, PARAMS)
+    want = jax.vmap(lambda t: P.tou_price(t, PARAMS))(
+        jnp.arange(GRID_STEPS, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(price), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(carbon),
+        np.broadcast_to(np.asarray(PARAMS.carbon_base), (GRID_STEPS, 4)))
+
+
+def test_trace_lookup_wraps_periodically():
+    """t % GRID_STEPS wrapping: lookups at t and t + GRID_STEPS agree, and
+    mode-0 formula == mode-1 tou trace at arbitrary large t."""
+    p1 = grid.attach(
+        PARAMS, GridParams(price_gen="tou", carbon_gen="constant"), 0)
+    for t in (0, 96, 240, 287, 288, 1000, 12345):
+        a = np.asarray(P.electricity_price(jnp.int32(t), PARAMS))
+        b = np.asarray(P.electricity_price(jnp.int32(t), p1))
+        np.testing.assert_array_equal(a, b, err_msg=f"t={t}")
+        np.testing.assert_array_equal(
+            np.asarray(P.carbon_intensity(jnp.int32(t), p1)),
+            np.asarray(P.carbon_intensity(jnp.int32(t + GRID_STEPS), p1)))
+
+
+def test_tou_mode_rollout_parity_with_legacy():
+    """Full greedy episode under the tou/constant trace grid: the price and
+    carbon *signals* are bitwise equal to the legacy grid_mode=0 formulas;
+    derived per-step reductions may differ only by XLA fusion round-off."""
+    trace = synthesize_trace(0, DIMS, PARAMS)
+    pol = make_policy("greedy", DIMS)
+    p1 = grid.attach(
+        PARAMS, GridParams(price_gen="tou", carbon_gen="constant"), 0)
+    _, i0 = jax.jit(lambda r: rollout_params(DIMS, pol, PARAMS, trace, r))(
+        jax.random.PRNGKey(0))
+    _, i1 = jax.jit(lambda r: rollout_params(DIMS, pol, p1, trace, r))(
+        jax.random.PRNGKey(0))
+    for f in ("price", "carbon_intensity", "setpoint", "theta", "theta_amb",
+              "cool_power", "admitted_util"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(i0, f)), np.asarray(getattr(i1, f)),
+            err_msg=f)
+    for f in i0._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(i0, f)), np.asarray(getattr(i1, f)),
+            rtol=2e-6, atol=0, err_msg=f)
+
+
+def test_perturb_rejects_grid_trace_fields():
+    """The trace fields are owned by attach_grid, not perturb."""
+    for field in ("grid_mode", "price_trace", "carbon_trace"):
+        with pytest.raises(ValueError):
+            perturb(PARAMS, scale={field: 2.0})
+    # carbon_base IS perturbable (scenario knob), and clamps at 0
+    p = perturb(PARAMS, offset={"carbon_base": -1e9})
+    assert bool((p.carbon_base >= 0).all())
+
+
+# ----------------------------------------------------------- trace physics
+
+
+@pytest.mark.parametrize("scen_name", GRID_SCENARIOS)
+def test_grid_scenario_traces_are_physical(scen_name):
+    scen = get(scen_name)
+    params = scen.attach_grid(scen.build_params(PARAMS), seed=0)
+    assert int(params.grid_mode) == 1
+    for tr in (params.price_trace, params.carbon_trace):
+        assert tr.shape == (GRID_STEPS, 4)
+        assert bool(jnp.isfinite(tr).all()), scen_name
+    assert bool((params.price_trace >= 1e-4).all()), scen_name
+    assert bool((params.carbon_trace >= 0).all()), scen_name
+
+
+def test_traces_deterministic_per_seed():
+    gp = get("price_volatility").grid
+    p0a, _ = grid.build_traces(gp, 0, PARAMS)
+    p0b, _ = grid.build_traces(gp, 0, PARAMS)
+    p1, _ = grid.build_traces(gp, 1, PARAMS)
+    np.testing.assert_array_equal(np.asarray(p0a), np.asarray(p0b))
+    assert not np.array_equal(np.asarray(p0a), np.asarray(p1))
+
+
+def test_duck_curve_dips_at_local_noon_per_dc():
+    """Phase shifts move each DC's midday price dip: the argmin hour must
+    track phase_h, so geo-diverse profiles are genuinely out of phase."""
+    gp = GridParams(price_gen="duck", carbon_gen="duck",
+                    phase_h=(0.0, -6.0, 6.0, 12.0), duck_ramp=0.0)
+    price, carbon = grid.build_traces(gp, 0, PARAMS)
+    steps_per_h = GRID_STEPS / 24.0
+    for d, phase in enumerate(gp.phase_h):
+        t_min = int(np.argmin(np.asarray(price[:, d])))
+        # local hour 13 == UTC hour 13 - phase
+        want = ((13.0 - phase) % 24.0) * steps_per_h
+        delta = abs(t_min - want) % GRID_STEPS
+        assert min(delta, GRID_STEPS - delta) <= steps_per_h, (d, t_min, want)
+    # carbon dips along with the solar bump
+    assert float(carbon.min()) < 0.5 * float(carbon.max())
+
+
+def test_market_modulator_mean_one_and_spikes():
+    base = GridParams(price_gen="constant", carbon_gen="constant")
+    spiky = GridParams(price_gen="constant|market", carbon_gen="constant",
+                       ar1_sigma=0.05, spike_rate=0.02, spike_mag=3.0)
+    flat, _ = grid.build_traces(base, 0, PARAMS)
+    noisy, _ = grid.build_traces(spiky, 0, PARAMS)
+    ratio = np.asarray(noisy) / np.asarray(flat)
+    # mean-one modulation (spikes push it slightly above 1)
+    assert 0.9 < float(ratio.mean()) < 1.4, float(ratio.mean())
+    # spikes exist: some steps far above the AR(1) band
+    assert float(ratio.max()) > 2.0, float(ratio.max())
+
+
+def test_green_window_cuts_carbon_inside_window():
+    gp = GridParams(price_gen="green_window", carbon_gen="green_window",
+                    phase_h=(0.0, 0.0, 0.0, 0.0))
+    _, carbon = grid.build_traces(gp, 0, PARAMS)
+    h = np.arange(GRID_STEPS) * float(PARAMS.dt) / 3600.0 % 24.0
+    inside = (h >= gp.green_lo_h) & (h < gp.green_hi_h)
+    base = np.asarray(PARAMS.carbon_base)
+    np.testing.assert_allclose(
+        np.asarray(carbon[inside]),
+        (1 - gp.green_depth) * np.broadcast_to(base, (int(inside.sum()), 4)),
+        rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(carbon[~inside]),
+        np.broadcast_to(base, (int((~inside).sum()), 4)), rtol=1e-5)
+
+
+# ------------------------------------------------------- carbon accounting
+
+
+def test_step_carbon_kg_definition():
+    util = jnp.ones(20) * 100.0
+    cool = jnp.asarray([1e5, 2e5, 0.0, 5e4])
+    carbon = PARAMS.carbon_base
+    kg = float(P.step_carbon_kg(util, cool, carbon, PARAMS))
+    kwh, _ = P.step_energy_kwh(util, cool, PARAMS)
+    # per-DC energy x intensity, in float64 on the host
+    comp = np.zeros(4)
+    np.add.at(comp, np.asarray(PARAMS.dc_id),
+              np.asarray(PARAMS.phi, np.float64) * np.asarray(util))
+    kwh_d = (comp + np.asarray(cool)) * float(PARAMS.dt) / 3.6e6
+    want = float((np.asarray(carbon, np.float64) * kwh_d).sum() * 1e-3)
+    np.testing.assert_allclose(kg, want, rtol=1e-5)
+    assert abs(float(kwh) - float(kwh_d.sum())) < 1e-3 * kwh_d.sum()
+
+
+def test_rollout_carbon_metrics_consistent():
+    """summarize's carbon_kg == sum of per-step carbon, cost split sums to
+    cost_usd, and the EnvState cumulative counter agrees."""
+    trace = synthesize_trace(0, DIMS, PARAMS)
+    pol = make_policy("greedy", DIMS)
+    state, infos = jax.jit(
+        lambda r: rollout_params(DIMS, pol, PARAMS, trace, r)
+    )(jax.random.PRNGKey(0))
+    m = metrics.summarize(infos)
+    np.testing.assert_allclose(
+        float(m["carbon_kg"]), float(np.asarray(infos.carbon_kg).sum()),
+        rtol=1e-6)
+    np.testing.assert_allclose(
+        float(m["cost_compute_usd"]) + float(m["cost_cool_usd"]),
+        float(m["cost_usd"]), rtol=1e-5)
+    assert float(m["cost_cool_usd"]) > 0
+    np.testing.assert_allclose(
+        float(state.carbon_kg), float(m["carbon_kg"]), rtol=1e-5)
+    # numpy mirror carries the same keys (lockstep contract)
+    mnp = metrics.summarize_np(jax.tree_util.tree_map(np.asarray, infos))
+    assert set(mnp) == set(m)
+
+
+# ------------------------------------------------------- carbon-aware MPC
+
+
+def test_effective_price_folds_carbon():
+    p1 = grid.attach(PARAMS, get("carbon_arbitrage").grid, 0)
+    t0 = jnp.int32(0)
+    plain = plant.effective_price(t0, 6, p1, 0.0)
+    priced = plant.effective_price(t0, 6, p1, 0.5)
+    want = plain + 0.5 * 1e-3 * plant.carbon_forecast(t0, 6, p1)
+    np.testing.assert_array_equal(np.asarray(plain),
+                                  np.asarray(plant.price_forecast(t0, 6, p1)))
+    np.testing.assert_allclose(np.asarray(priced), np.asarray(want), rtol=1e-6)
+
+
+def test_carbon_aware_hmpc_reduces_carbon_on_arbitrage_grid():
+    """The tentpole behavior: pricing carbon into H-MPC cuts CO2 vs the
+    carbon-blind program on a grid with per-DC carbon divergence."""
+    scen = get("carbon_arbitrage")
+    params = scen.attach_grid(scen.build_params(PARAMS), seed=0)
+    trace = scen.build_trace(0, DIMS, params)
+    out = {}
+    for name in ("h_mpc", "h_mpc_carbon"):
+        pol = make_policy(name, DIMS)
+        _, infos = jax.jit(
+            lambda r, pol=pol: rollout_params(DIMS, pol, params, trace, r)
+        )(jax.random.PRNGKey(0))
+        out[name] = metrics.summarize(infos)
+    assert float(out["h_mpc_carbon"]["carbon_kg"]) < \
+        float(out["h_mpc"]["carbon_kg"])
+
+
+def test_grid_scenarios_stack_with_legacy_scenarios():
+    """Mixed grid-mode cells (mode 0 nominal + mode 1 duck) must stack and
+    vmap in one batched grid — the whole-suite benchmarks rely on it."""
+    from repro.scenarios import evaluate_suite
+
+    res = evaluate_suite(["greedy"], scenarios=["nominal", "duck_curve"],
+                         seeds=2, dims=DIMS)
+    nom = res.mean("greedy", "nominal")
+    duck = res.mean("greedy", "duck_curve")
+    assert nom["carbon_kg"] > 0 and duck["carbon_kg"] > 0
+    assert nom["carbon_kg"] != duck["carbon_kg"]

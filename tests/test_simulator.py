@@ -78,6 +78,33 @@ def test_ambient_diurnal_period():
     )
 
 
+# ---------------------------------------------------------------- power
+
+
+def test_power_step_recurrence_hand_computed():
+    """Pin the Eq. 8 budget recurrence p' = clip(p - draw + w_in, 0, p_max)
+    on a single-cluster plant against a hand-computed 3-step trace."""
+    import dataclasses
+
+    one = lambda v: jnp.asarray([v], jnp.float32)
+    params = dataclasses.replace(
+        PARAMS,
+        dc_id=jnp.asarray([0], jnp.int32),
+        phi=one(2.0), kappa=one(1.0), p_max=one(100.0), w_in=one(10.0),
+    )
+    util, cool = one(5.0), one(4.0)   # draw = 2*5 + 1*4 = 14 per step
+    p = one(50.0)
+    for want in (46.0, 42.0, 38.0):   # p - 14 + 10 each step
+        p = P.power_step(p, util, cool, params)
+        assert float(p[0]) == want
+    # clip at 0: a huge draw cannot push the budget negative
+    p = P.power_step(one(1.0), one(1000.0), cool, params)
+    assert float(p[0]) == 0.0
+    # clip at p_max: inflow cannot overfill the budget
+    p = P.power_step(one(100.0), one(0.0), one(0.0), params)
+    assert float(p[0]) == 100.0
+
+
 # ---------------------------------------------------------------- pricing
 
 
@@ -193,6 +220,25 @@ def test_workload_calibration_scales_with_lambda():
     d25 = float((lambda t: (t.r * t.dur).sum())(synth(0, dims, PARAMS, lam=2.5))) / 96 / cap
     assert 0.55 < d1 < 0.75, d1
     assert d25 > 1.4, d25
+
+
+def test_format_table_cost_breakdown_column():
+    """format_table appends the compute-vs-cooling cost breakdown (and the
+    carbon row) when every policy's metric dict carries the split."""
+    rows = {
+        "greedy": {"cost_usd": 100.0, "cost_compute_usd": 80.0,
+                   "cost_cool_usd": 20.0, "carbon_kg": 300.0},
+        "h_mpc": {"cost_usd": 70.0, "cost_compute_usd": 60.0,
+                  "cost_cool_usd": 10.0, "carbon_kg": 150.0},
+    }
+    table = metrics.format_table(rows, metrics=["cost_usd"])
+    assert "| cost compute/cool | 80.00 / 20.00 | 60.00 / 10.00 |" in table
+    assert "| carbon_kg | 300.00 | 150.00 |" in table
+    # without the split keys the breakdown row is omitted
+    plain = metrics.format_table(
+        {p: {"cost_usd": r["cost_usd"]} for p, r in rows.items()},
+        metrics=["cost_usd"])
+    assert "compute/cool" not in plain
 
 
 def test_monte_carlo_vmap_over_seeds():
