@@ -1,0 +1,147 @@
+"""Job-engine micro-benchmark: admission + tick throughput across
+service-class mixes (DESIGN.md §15).
+
+  PYTHONPATH=src python -m benchmarks.bench_jobs
+  PYTHONPATH=src python -m benchmarks.run --only jobs
+
+Times the full per-step engine pipeline — merge offered, insert
+arrivals, the fused tick+preempt (`tick_and_preempt`, exactly what
+`env.step` runs), interactive promotion, FIFO+backfill admission — as
+one jitted `lax.scan` over a synthetic episode, reporting jobs/sec and
+steps/sec per class mix. The untagged mix exercises the legacy identity
+path; the tagged mixes exercise promotion and preemption for real.
+
+Writes BENCH_jobs.latest.json at the repo root; the committed
+BENCH_jobs.json baseline is updated via `benchmarks.check_regression
+--update` and gated within ±30% like the other baselines. The scan is
+timed on its second call, so compilation is excluded.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jobs as jobs_mod
+from repro.core.params import EnvDims, make_params
+from repro.core.state import JobTable, PendingBuffer
+from repro.core.workload import synthesize_trace
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: Committed bench-regression baseline — written only by
+#: `benchmarks.check_regression --update` (best-of-N).
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_jobs.json")
+#: Default output of interactive runs (scratch, not the gate baseline).
+BENCH_LATEST = os.path.join(REPO_ROOT, "BENCH_jobs.latest.json")
+
+#: Class mixes exercised (interactive, batch, best_effort). `untagged`
+#: runs class_mode=0 — the bitwise legacy path every golden rides on.
+MIXES = {
+    "untagged": None,
+    "mixed": (0.3, 0.5, 0.2),
+    "interactive_heavy": (0.7, 0.2, 0.1),
+    "best_effort_heavy": (0.1, 0.2, 0.7),
+}
+
+
+def _bench_dims(fast: bool) -> EnvDims:
+    if fast:
+        return EnvDims(horizon=48, max_arrivals=128, queue_cap=512,
+                       run_cap=512, pending_cap=256, admit_depth=128,
+                       policy_depth=256)
+    return EnvDims(horizon=96, max_arrivals=256, queue_cap=1024,
+                   run_cap=1024, pending_cap=512, admit_depth=256,
+                   policy_depth=512)
+
+
+def _engine_scan(dims: EnvDims, params):
+    """One jitted scan of the bare job-engine pipeline over the trace.
+
+    Round-robin placement stands in for a policy so the measurement is
+    the engine, not a scheduler; capacity is derated to 80% so the
+    preemption path sees genuine pressure once utilization builds.
+    """
+    C = dims.num_clusters
+    c_eff = 0.8 * params.c_max
+    power_ok = jnp.ones((C,), jnp.float32)
+
+    def step(carry, arrivals):
+        queues, running, pending, t = carry
+        offered = jobs_mod.merge_offered(pending, arrivals)
+        assign = jnp.where(
+            offered.valid,
+            (jnp.arange(offered.r.shape[0]) % C).astype(jnp.int32),
+            -1,
+        )
+        queues, _ = jobs_mod.insert_arrivals(queues, offered, assign, C)
+        pending, _ = jobs_mod.refill_pending(offered, assign, dims.pending_cap)
+        queues, running, tick, n_pre, _ = jobs_mod.tick_and_preempt(
+            queues, running, c_eff, t
+        )
+        queues = jobs_mod.promote_interactive(queues, window=dims.admit_depth)
+        queues, running = jobs_mod.admit_backfill(
+            queues, running, c_eff, power_ok, dims.admit_depth
+        )
+        return (queues, running, pending, t + 1), (tick.n_done, n_pre)
+
+    def run(trace_arrs):
+        carry = (
+            JobTable.zeros(C, dims.queue_cap),
+            JobTable.zeros(C, dims.run_cap),
+            PendingBuffer.zeros(dims.pending_cap),
+            jnp.int32(0),
+        )
+        (_, _, _, _), (done, pre) = jax.lax.scan(step, carry, trace_arrs)
+        return done.sum(), pre.sum()
+
+    return jax.jit(run)
+
+
+def main(fast: bool = False, out_path: str = BENCH_LATEST):
+    dims = _bench_dims(fast)
+    params = make_params()
+    out: Dict[str, Dict[str, float]] = {}
+    run = _engine_scan(dims, params)  # one compile serves every mix
+    for name, mix in MIXES.items():
+        kw = {} if mix is None else {"class_mode": 1, "class_mix": mix}
+        trace = synthesize_trace(0, dims, params, **kw)
+        arrs = trace.arrivals_at(jnp.arange(dims.horizon))
+        n_jobs = int(jnp.asarray(trace.valid).sum())
+        jax.block_until_ready(run(arrs))              # warmup (compiles once)
+        t0 = time.time()
+        done, pre = jax.block_until_ready(run(arrs))
+        wall = time.time() - t0
+        out[name] = {
+            "wall_s": wall,
+            "jobs_per_s": n_jobs / wall,
+            "steps_per_s": dims.horizon / wall,
+            "offered_jobs": n_jobs,
+            "completed": int(done),
+            "preempted": int(pre),
+        }
+    print("# job-engine throughput "
+          f"(horizon={dims.horizon}, arrivals<={dims.max_arrivals}/step)")
+    print("mix,wall_s,jobs_per_s,steps_per_s,preempted")
+    for name, r in out.items():
+        print(f"{name},{r['wall_s']:.3f},{r['jobs_per_s']:.0f},"
+              f"{r['steps_per_s']:.0f},{r['preempted']}")
+    payload = {
+        "bench": "jobs",
+        "fast": fast,
+        "jax_backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "per_mix": out,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

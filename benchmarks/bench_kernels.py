@@ -38,7 +38,8 @@ def flash_attention_traffic(b=1, s=4096, h=8, dh=128, block=128):
 
 
 def time_fn(f, *args, reps=3):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    out = f(*args)
+    out[0].block_until_ready() if isinstance(out, tuple) else jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(reps):
         jax.block_until_ready(f(*args))

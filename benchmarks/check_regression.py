@@ -2,10 +2,10 @@
 
     PYTHONPATH=src python -m benchmarks.check_regression [--update] [--warn-only]
 
-Re-runs the `scenarios`, `kernels`, and `grid` benchmarks with the same
+Re-runs the `scenarios`, `kernels`, `grid`, and `jobs` benchmarks with the same
 `fast` flag each committed baseline (`BENCH_scenarios.json` /
-`BENCH_kernels.json` / `BENCH_grid.json`) was recorded with and compares
-throughput within a ±30% band:
+`BENCH_kernels.json` / `BENCH_grid.json` / `BENCH_jobs.json`) was
+recorded with and compares throughput within a ±30% band:
 
 - scenarios: `per_scenario_vmap[*].steps_per_s` and
   `per_backend[*].steps_per_s`, on the backends both runs measured
@@ -13,6 +13,8 @@ throughput within a ±30% band:
   run that a plain runner won't reproduce);
 - grid: `per_generator[*].traces_per_s` (grid-signal trace builds) and
   `carbon_rollout[*].steps_per_s` (trace-driven scenario rollouts);
+- jobs: `per_mix[*].jobs_per_s` (job-engine admission+tick throughput
+  per service-class mix);
 - kernels: wall-clock per kernel (as 1/ms throughput), skipped when the
   Pallas numbers come from interpret mode on either side or the shapes
   differ.
@@ -40,6 +42,7 @@ BASELINES = {
     "scenarios": os.path.join(REPO_ROOT, "BENCH_scenarios.json"),
     "kernels": os.path.join(REPO_ROOT, "BENCH_kernels.json"),
     "grid": os.path.join(REPO_ROOT, "BENCH_grid.json"),
+    "jobs": os.path.join(REPO_ROOT, "BENCH_jobs.json"),
 }
 BAND = 0.30  # fresh/baseline throughput ratio must stay within [0.7, 1.3]
 
@@ -75,6 +78,15 @@ def grid_pairs(baseline: Dict, fresh: Dict) -> Pairs:
         f = fresh.get("carbon_rollout", {}).get(name)
         if f:
             pairs.append((f"grid/rollout/{name}", b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
+def jobs_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for mix, b in baseline.get("per_mix", {}).items():
+        f = fresh.get("per_mix", {}).get(mix)
+        if f:
+            pairs.append((f"jobs/{mix}", b["jobs_per_s"], f["jobs_per_s"]))
     return pairs
 
 
@@ -129,7 +141,8 @@ def _merge_payload_best(a: Dict, b: Dict) -> Dict:
     out = json.loads(json.dumps(b))  # deep copy; non-timing fields from b
     # per-section throughput key: the same one the pair functions compare
     sections = {"per_scenario_vmap": "steps_per_s", "per_backend": "steps_per_s",
-                "per_generator": "traces_per_s", "carbon_rollout": "steps_per_s"}
+                "per_generator": "traces_per_s", "carbon_rollout": "steps_per_s",
+                "per_mix": "jobs_per_s"}
     for sect, tkey in sections.items():
         for key, cell in a.get(sect, {}).items():
             tgt = out.get(sect, {}).get(key)
@@ -180,12 +193,13 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     warn_only = args.warn_only or bool(os.environ.get("CI"))
 
-    from benchmarks import bench_grid, bench_kernels, bench_scenarios
+    from benchmarks import bench_grid, bench_jobs, bench_kernels, bench_scenarios
 
     suites = (
         ("scenarios", bench_scenarios, scenario_pairs),
         ("kernels", bench_kernels, kernel_pairs),
         ("grid", bench_grid, grid_pairs),
+        ("jobs", bench_jobs, jobs_pairs),
     )
 
     runs = 1 + max(0, args.retries)
@@ -195,7 +209,7 @@ def main(argv=None) -> int:
             for name, mod, _ in suites:
                 base_path = BASELINES[name]
                 fast = bool(_load(base_path).get("fast")) if os.path.exists(base_path) \
-                    else (name in ("scenarios", "grid"))
+                    else (name in ("scenarios", "grid", "jobs"))
                 merged = _measure_best(name, mod, fast, runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
@@ -214,7 +228,7 @@ def main(argv=None) -> int:
                 print(f"note: no committed baseline at {base_path}; "
                       f"emitting one (best of {runs} runs)")
                 merged = _measure_best(
-                    name, mod, name in ("scenarios", "grid"), runs, tmp)
+                    name, mod, name in ("scenarios", "grid", "jobs"), runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
                 continue

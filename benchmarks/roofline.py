@@ -10,7 +10,7 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 NOTES = {
     ("compute_s",): "compute-bound: raise MXU utilization (larger per-chip "
@@ -93,7 +93,8 @@ def main():
     args = ap.parse_args()
     recs = load(args.dir)
     out = []
-    out.append(f"### Roofline — single-pod 16x16 (256 chips), {len([r for r in recs if r['mesh']=='16x16'])} cells\n")
+    n16 = len([r for r in recs if r["mesh"] == "16x16"])
+    out.append(f"### Roofline — single-pod 16x16 (256 chips), {n16} cells\n")
     out.append(table(recs, "16x16"))
     out.append("\n### Multi-pod 2x16x16 (512 chips) — proves the pod axis shards\n")
     out.append(table(recs, "2x16x16"))

@@ -52,7 +52,7 @@ def main() -> None:
                     help="tiny scenario suite + nominal smoke experiment, then exit")
     ap.add_argument("--only", default="",
                     help="comma list: rq1,rq2,complexity,throughput,kernels,"
-                         "scenarios,grid")
+                         "scenarios,grid,jobs")
     args, _ = ap.parse_known_args()
     if args.smoke:
         sys.exit(smoke())
@@ -120,6 +120,15 @@ def main() -> None:
         rows.append(("grid", time.time() - t0,
                      f"min_traces_ps={tps:.0f} "
                      f"rollout_sps={roll['grid_vmap']['steps_per_s']:.0f}"))
+
+    if want("jobs"):
+        from benchmarks import bench_jobs
+
+        print("\n=== Job engine: admission+tick throughput across class mixes ===")
+        t0 = time.time()
+        res = bench_jobs.main(fast=args.fast)
+        jps = min(r["jobs_per_s"] for r in res.values())
+        rows.append(("jobs", time.time() - t0, f"min_jobs_ps={jps:.0f}"))
 
     if want("kernels"):
         from benchmarks import bench_kernels

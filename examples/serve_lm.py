@@ -7,11 +7,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.serve.steps import generate, make_prefill_step
+from repro.serve.steps import generate
 
 
 def main():

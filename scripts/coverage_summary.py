@@ -1,0 +1,63 @@
+"""Render a Cobertura coverage.xml as a per-package markdown table.
+
+    python scripts/coverage_summary.py coverage.xml
+
+CI appends the output to $GITHUB_STEP_SUMMARY so every run shows a
+line-coverage baseline per top-level `repro` package (no threshold gate
+yet — the table exists to make the baseline visible before one is set).
+"""
+
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+from collections import defaultdict
+
+
+def package_of(filename: str) -> str:
+    """Map a source path to its reporting bucket: repro/<subpackage>."""
+    parts = filename.replace("\\", "/").split("/")
+    if "repro" in parts:
+        parts = parts[parts.index("repro") :]
+    if len(parts) >= 2 and not parts[1].endswith(".py"):
+        return "/".join(parts[:2])
+    return parts[0]
+
+
+def summarize(xml_path: str) -> str:
+    root = ET.parse(xml_path).getroot()
+    covered: dict[str, int] = defaultdict(int)
+    total: dict[str, int] = defaultdict(int)
+    for cls in root.iter("class"):
+        pkg = package_of(cls.get("filename", "?"))
+        for line in cls.iter("line"):
+            total[pkg] += 1
+            if int(line.get("hits", "0")) > 0:
+                covered[pkg] += 1
+
+    lines = [
+        "## Coverage by package",
+        "",
+        "| package | lines | covered | coverage |",
+        "|---|---:|---:|---:|",
+    ]
+    for pkg in sorted(total):
+        pct = 100.0 * covered[pkg] / max(total[pkg], 1)
+        lines.append(f"| `{pkg}` | {total[pkg]} | {covered[pkg]} | {pct:.1f}% |")
+    all_total = sum(total.values())
+    all_cov = sum(covered.values())
+    pct = 100.0 * all_cov / max(all_total, 1)
+    lines.append(f"| **total** | {all_total} | {all_cov} | **{pct:.1f}%** |")
+    return "\n".join(lines)
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    print(summarize(argv[1]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -8,7 +8,7 @@ position in the superblock names its sequence mixer and its MLP kind.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

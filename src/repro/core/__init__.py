@@ -8,7 +8,10 @@ program (`env.rollout`) and Monte-Carlo evaluation is one `vmap`.
 from repro.core.params import (
     EnvDims, EnvParams, make_params, perturb, stack_params, DC_NAMES,
 )
-from repro.core.state import Action, Arrivals, EnvState
+from repro.core.state import (
+    Action, Arrivals, EnvState,
+    CLS_BATCH, CLS_BEST_EFFORT, CLS_INTERACTIVE, JOB_CLASSES, NO_DEADLINE,
+)
 from repro.core.workload import (
     Trace, make_trace, rate_modulation, synthesize_trace, load_alibaba_csv,
 )

@@ -9,7 +9,7 @@ interactive / RL use.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +39,10 @@ class StepInfo(NamedTuple):
     carbon_kg: Any         # operational CO2 this step (kg)
     completed: Any         # jobs completed this step
     dropped: Any           # jobs dropped (overflow) this step
+    completed_by_cls: Any  # (3,) completions per service class this step
+    violated_by_cls: Any   # (3,) deadline violations per class this step
+    slack_by_cls: Any      # (3,) slack-at-completion sum per class (steps)
+    preempted: Any         # best-effort jobs preempted this step
     admitted_util: Any     # (C,) utilization after admission
     price: Any             # (D,)
     carbon_intensity: Any  # (D,) grid carbon intensity (gCO2/kWh)
@@ -83,10 +87,19 @@ class DataCenterGym:
             offered, action.assign, dims.pending_cap
         )
 
-        # 2. execution: progress running jobs, then FIFO+backfill admission
-        #    against thermally-throttled capacity, gated by power budget.
-        running, n_done = jobs_mod.tick_running(state.running)
+        # 2. execution: progress running jobs (per-class completion/violation
+        #    accounting) and preempt best-effort jobs under capacity
+        #    pressure in one fused compaction, promote interactive jobs to
+        #    the front of the admission window, then FIFO+backfill
+        #    admission against thermally-throttled capacity, gated by
+        #    power budget. On single-class tables the preempt/promote
+        #    stages are exact identities (DESIGN.md §15).
         c_eff = thermal_mod.effective_capacity(state.theta, params)
+        queues, running, tick, n_preempted, drop_e = jobs_mod.tick_and_preempt(
+            queues, state.running, c_eff, state.t
+        )
+        n_done = tick.n_done
+        queues = jobs_mod.promote_interactive(queues, window=dims.admit_depth)
         power_ok = (state.power > 0.0).astype(jnp.float32)
         queues, running = jobs_mod.admit_backfill(
             queues, running, c_eff, power_ok, dims.admit_depth
@@ -120,7 +133,7 @@ class DataCenterGym:
         q_counts = queues.count.astype(jnp.float32)
         pend_gpu = jnp.where(pending.valid & pending.is_gpu, 1.0, 0.0).sum()
         pend_cpu = jnp.where(pending.valid & ~pending.is_gpu, 1.0, 0.0).sum()
-        dropped = drop_q + drop_p
+        dropped = drop_q + drop_p + drop_e
 
         info = StepInfo(
             cpu_util=jnp.where(~is_gpu_cl, util, 0.0).sum() / cap_cpu,
@@ -137,6 +150,10 @@ class DataCenterGym:
             carbon_kg=carbon_kg,
             completed=n_done,
             dropped=dropped,
+            completed_by_cls=tick.done_by_cls,
+            violated_by_cls=tick.violated_by_cls,
+            slack_by_cls=tick.slack_by_cls,
+            preempted=n_preempted,
             admitted_util=util,
             price=price,
             carbon_intensity=carbon,
@@ -161,6 +178,8 @@ class DataCenterGym:
             pending=pending,
             completed=state.completed + n_done,
             dropped=state.dropped + dropped,
+            completed_by_cls=state.completed_by_cls + tick.done_by_cls,
+            violated_by_cls=state.violated_by_cls + tick.violated_by_cls,
             energy_kwh=state.energy_kwh + energy,
             cost_usd=state.cost_usd + cost,
             carbon_kg=state.carbon_kg + carbon_kg,
@@ -195,6 +214,7 @@ def rollout(
 
     arrivals_steps = Arrivals(
         r=trace.r, dur=trace.dur, prio=trace.prio,
+        cls=trace.cls, deadline=trace.deadline,
         is_gpu=trace.is_gpu, valid=trace.valid,
     )
     (state, _), infos = jax.lax.scan(body, (state0, pol0), arrivals_steps)

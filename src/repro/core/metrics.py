@@ -32,6 +32,17 @@ def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
     completed = infos.completed[sl].sum()
     cost = infos.cost_usd[sl].sum()
     cool_cost = infos.cool_cost_usd[sl].sum()
+    done_cls = infos.completed_by_cls[sl].sum(0)    # (3,) per-class completions
+    viol_cls = infos.violated_by_cls[sl].sum(0)     # (3,) deadline violations
+    slack_cls = infos.slack_by_cls[sl].sum(0)       # (3,) slack-at-completion
+    # SLO attainment: on-time share of *completed* jobs of the class;
+    # vacuously 100% when the class completed nothing (no SLO to miss).
+    att = lambda k: jnp.where(
+        done_cls[k] > 0,
+        100.0 * (done_cls[k] - viol_cls[k]) / jnp.maximum(done_cls[k], 1),
+        100.0,
+    )
+    deadlined = done_cls[0] + done_cls[1]           # classes carrying deadlines
     return {
         "cpu_util_pct": 100.0 * infos.cpu_util[sl].mean(),
         "gpu_util_pct": 100.0 * infos.gpu_util[sl].mean(),
@@ -48,6 +59,11 @@ def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
         "carbon_kg": infos.carbon_kg[sl].sum(),
         "completed_jobs": completed,
         "dropped_jobs": infos.dropped[sl].sum(),
+        "slo_interactive_pct": att(0),
+        "slo_batch_pct": att(1),
+        "slo_violations": viol_cls.sum(),
+        "slack_mean_steps": slack_cls[:2].sum() / jnp.maximum(deadlined, 1),
+        "preempted_jobs": infos.preempted[sl].sum(),
     }
 
 
@@ -66,6 +82,14 @@ def summarize_np(infos, warmup: int = 0) -> Dict[str, float]:
     completed = f8(infos.completed).sum()
     cost = f8(infos.cost_usd).sum()
     cool_cost = f8(infos.cool_cost_usd).sum()
+    done_cls = f8(infos.completed_by_cls).sum(0)  # (3,)
+    viol_cls = f8(infos.violated_by_cls).sum(0)   # (3,)
+    slack_cls = f8(infos.slack_by_cls).sum(0)     # (3,)
+    att = lambda k: (
+        100.0 * (done_cls[k] - viol_cls[k]) / max(done_cls[k], 1.0)
+        if done_cls[k] > 0 else 100.0
+    )
+    deadlined = done_cls[0] + done_cls[1]
     out = {
         "cpu_util_pct": 100.0 * f8(infos.cpu_util).mean(),
         "gpu_util_pct": 100.0 * f8(infos.gpu_util).mean(),
@@ -82,6 +106,11 @@ def summarize_np(infos, warmup: int = 0) -> Dict[str, float]:
         "carbon_kg": f8(infos.carbon_kg).sum(),
         "completed_jobs": completed,
         "dropped_jobs": f8(infos.dropped).sum(),
+        "slo_interactive_pct": att(0),
+        "slo_batch_pct": att(1),
+        "slo_violations": viol_cls.sum(),
+        "slack_mean_steps": slack_cls[:2].sum() / max(deadlined, 1.0),
+        "preempted_jobs": f8(infos.preempted).sum(),
     }
     return {k: float(v) for k, v in out.items()}
 
@@ -114,4 +143,11 @@ def format_table(rows: Dict[str, Dict[str, float]], metrics=None) -> str:
     if all("carbon_kg" in rows[n] for n in names):
         vals = " | ".join(f"{float(rows[n]['carbon_kg']):,.2f}" for n in names)
         out.append(f"| carbon_kg | {vals} |")
+    if all({"slo_interactive_pct", "slo_batch_pct"} <= set(rows[n]) for n in names):
+        vals = " | ".join(
+            f"{float(rows[n]['slo_interactive_pct']):.1f} / "
+            f"{float(rows[n]['slo_batch_pct']):.1f}"
+            for n in names
+        )
+        out.append(f"| slo int/batch pct | {vals} |")
     return "\n".join(out)

@@ -182,8 +182,9 @@ def candidate_thermal_rollout(
 def ambient_forecast(t0, horizon: int, params: EnvParams, steps_per_day: int = 288):
     """Nominal (noise-free) exogenous ambient forecast eta_hat (Eq. 21)."""
     ts = t0.astype(jnp.float32) + jnp.arange(1, horizon + 1, dtype=jnp.float32)
+    zero = jnp.zeros_like(params.amb_base)
     return jax.vmap(
-        lambda t: thermal.ambient_temperature(t, jnp.zeros_like(params.amb_base), params, steps_per_day)
+        lambda t: thermal.ambient_temperature(t, zero, params, steps_per_day)
     )(ts)
 
 
@@ -230,6 +231,63 @@ def effective_price(t0, horizon: int, params: EnvParams, w_carbon: float):
             price, carbon_forecast(t0, horizon, params), w_carbon
         )
     return price
+
+
+def temporal_defer_mask(
+    offered,
+    state,
+    params: EnvParams,
+    horizon: int,
+    w_carbon: float,
+    price_ratio: float,
+    max_pending_frac: float,
+    pending_cap: int,
+):
+    """Deadline-aware temporal-shift rule (DESIGN.md §15): hold a job iff
+
+    1. it is deferrable — valid, not interactive, and its deadline slack
+       ``deadline - t - dur`` exceeds the planning horizon (future steps
+       re-evaluate, so slack only ever has to cover one horizon);
+    2. relief is forecast — the minimum *effective* price over the horizon
+       (carbon-adjusted via `effective_price`, the same signal stage-1,
+       the stage-1.5 candidate rollouts, and SC-MPC plan against) sits
+       below ``price_ratio`` times the best current effective price;
+    3. it fits the remaining hold budget — ``max_pending_frac *
+       pending_cap`` minus the jobs already pending, counted by FIFO
+       rank over the offered batch, so the rule by itself can never
+       overflow the pending buffer into drops. Because re-offered
+       pending jobs sit at the front of the batch and consume their own
+       headroom, a full buffer releases held work back into placement
+       rather than accumulating it — deferral stays a bounded, rolling
+       window, not a sink.
+
+    Returns a (J,) bool mask; callers turn held jobs into defers
+    (``assign = -1``), which routes them through the pending buffer and
+    re-offers them next step.
+    """
+    from repro.core import power as power_mod
+    from repro.core.state import CLS_INTERACTIVE
+
+    eff_now = carbon_adjusted(
+        power_mod.electricity_price(state.t, params),
+        power_mod.carbon_intensity(state.t, params),
+        w_carbon,
+    )
+    eff_fut = effective_price(state.t, horizon, params, w_carbon)
+    relief = eff_fut.min() < price_ratio * eff_now.min()
+    slack = offered.deadline - state.t - offered.dur
+    deferable = (
+        offered.valid
+        & (offered.cls != CLS_INTERACTIVE)
+        & (slack > horizon)
+    )
+    candidate = deferable & relief
+    pending_n = state.pending.valid.sum()
+    budget = jnp.maximum(
+        jnp.int32(max_pending_frac * pending_cap) - pending_n, 0
+    )
+    hold_rank = jnp.cumsum(candidate) - candidate.astype(jnp.int32)
+    return candidate & (hold_rank < budget)
 
 
 def plant_state_from_env(env_state, params: EnvParams, num_dcs: int) -> PlantState:

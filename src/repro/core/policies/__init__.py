@@ -11,12 +11,13 @@ from repro.core.policies.h_mpc import (
     HMPCConfig,
     h_mpc_carbon_policy,
     h_mpc_policy,
+    h_mpc_slo_policy,
 )
 
 
 def make_policy(name: str, dims, **kw) -> Policy:
     """Factory: random | greedy | thermal | power_cool | sc_mpc | h_mpc |
-    h_mpc_carbon."""
+    h_mpc_carbon | h_mpc_slo."""
     table = {
         "random": random_policy,
         "greedy": greedy_policy,
@@ -25,6 +26,7 @@ def make_policy(name: str, dims, **kw) -> Policy:
         "sc_mpc": sc_mpc_policy,
         "h_mpc": h_mpc_policy,
         "h_mpc_carbon": h_mpc_carbon_policy,
+        "h_mpc_slo": h_mpc_slo_policy,
     }
     try:
         factory = table[name]

@@ -18,7 +18,7 @@ score function is the only thing that differs between heuristics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.core import power, thermal
 from repro.core.mpc import rollout as plant
 from repro.core.mpc.solvers import projected_adam
-from repro.core.params import EnvDims, EnvParams
+from repro.core.params import EnvDims
 from repro.core.policies.base import Policy
 
 
@@ -65,6 +65,15 @@ class HMPCConfig:
     refine_candidates: int = 0
     refine_span: float = 2.0       # degC: candidate offsets in ±span
     thermal_backend: str = "auto"  # 'auto' | 'pallas' | 'ref' (DESIGN.md §12)
+    # deadline-aware temporal shifting (DESIGN.md §15): hold deferrable
+    # jobs (slack > h1) while the carbon-adjusted effective price is
+    # forecast to drop below `defer_price_ratio` x the current best, with
+    # the pending buffer capped at `defer_pending_frac` full. False
+    # (default) skips the branch at trace time — the deferral-blind
+    # programs (h_mpc, h_mpc_carbon) stay bitwise unchanged.
+    temporal_shift: bool = False
+    defer_price_ratio: float = 0.97
+    defer_pending_frac: float = 0.5
 
 
 jax.tree_util.register_dataclass(
@@ -290,8 +299,20 @@ def _stage2(state, params, agg, cfg: HMPCConfig, pol: HMPCState, rho0, num_dcs: 
 
 
 def _counts_to_assign(offered, rho0, weights, pol, params, num_clusters: int):
-    """Quota counts -> per-job cluster ids by FIFO rank (vectorized)."""
+    """Quota counts -> per-job cluster ids by class-aware FIFO rank.
+
+    Interactive jobs claim the quota slots first (the policy-level face
+    of the engine's backfilling bypass, DESIGN.md §15): within each
+    hardware type, ranks run interactive-FIFO then everything-else-FIFO,
+    so when the stage-1 quotas bind it is batch/best-effort load that
+    defers, never latency-sensitive work. On a single-class batch the
+    interactive count is zero and the ranking reduces bitwise to plain
+    FIFO — the legacy contract.
+    """
+    from repro.core.state import CLS_INTERACTIVE
+
     assign = jnp.full(offered.r.shape, -1, jnp.int32)
+    is_int = offered.cls == CLS_INTERACTIVE
     for tau in (0, 1):
         mask = offered.valid & (offered.is_gpu == bool(tau))
         n_off = mask.sum()
@@ -302,7 +323,12 @@ def _counts_to_assign(offered, rho0, weights, pol, params, num_clusters: int):
         counts = jnp.floor(per_cl + 1e-6)
         # distribute floor remainders to the largest weights (stable greedy)
         cum = jnp.cumsum(counts)
-        rank = jnp.cumsum(mask) - 1
+        m_int = mask & is_int
+        n_int = m_int.sum()
+        rank = jnp.where(
+            m_int, jnp.cumsum(m_int) - 1,
+            n_int + jnp.cumsum(mask & ~is_int) - 1,
+        )
         idx = jnp.searchsorted(cum, rank.astype(cum.dtype), side="right")
         ok = mask & (rank < cum[-1])
         assign = jnp.where(ok, jnp.minimum(idx, num_clusters - 1).astype(jnp.int32), assign)
@@ -330,6 +356,36 @@ def h_mpc_carbon_policy(dims: EnvDims, cfg: HMPCConfig | None = None) -> Policy:
     elif not cfg.w_carbon:
         cfg = dataclasses.replace(cfg, w_carbon=DEFAULT_CARBON_PRICE)
     return h_mpc_policy(dims, cfg, name="h_mpc_carbon")
+
+
+#: Internal carbon price of the deadline-aware policy. Deliberately above
+#: DEFAULT_CARBON_PRICE: temporal shifting needs the carbon-adjusted
+#: effective price to *rank hours*, and at 0.6 $/kg a late-night cheap
+#: tariff cancels a green window's intensity drop almost exactly — held
+#: work then releases at the price floor where carbon has already
+#: rebounded. At 1.7 $/kg the greenest hours are the unambiguous
+#: effective-price minimum, so the relief test flips (and releases the
+#: held work) exactly when the green window arrives.
+SLO_CARBON_PRICE = 1.7
+
+
+def h_mpc_slo_policy(dims: EnvDims, cfg: HMPCConfig | None = None) -> Policy:
+    """Deadline-aware H-MPC: carbon-adjusted planning *plus* temporal load
+    shifting (DESIGN.md §15) — deferrable jobs are held for forecast
+    price/carbon relief while interactive jobs place immediately.
+
+    Like `h_mpc_carbon_policy`, a cfg without the defining knobs gets
+    them: a policy named `h_mpc_slo` must never silently run
+    deferral-blind or carbon-blind.
+    """
+    if cfg is None:
+        cfg = HMPCConfig(w_carbon=SLO_CARBON_PRICE, temporal_shift=True)
+    else:
+        if not cfg.w_carbon:
+            cfg = dataclasses.replace(cfg, w_carbon=SLO_CARBON_PRICE)
+        if not cfg.temporal_shift:
+            cfg = dataclasses.replace(cfg, temporal_shift=True)
+    return h_mpc_policy(dims, cfg, name="h_mpc_slo")
 
 
 def h_mpc_policy(
@@ -368,6 +424,13 @@ def h_mpc_policy(
             )
         weights, z_alloc = _stage2(state, params, agg, cfg, pol_state, rho0, D)
         assign = _counts_to_assign(offered, rho0, weights, pol_state, params, C)
+        if cfg.temporal_shift:
+            hold = plant.temporal_defer_mask(
+                offered, state, params, cfg.h1, cfg.w_carbon,
+                cfg.defer_price_ratio, cfg.defer_pending_frac,
+                dims.pending_cap,
+            )
+            assign = jnp.where(hold, jnp.int32(-1), assign)
         pol_state = dataclasses.replace(
             pol_state,
             z_route=jnp.roll(z_route, -1, axis=0).at[-1].set(z_route[-1]),

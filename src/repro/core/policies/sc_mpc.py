@@ -13,7 +13,6 @@ reference (theta_ref below the fixed setpoints) with a small energy weight.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +37,12 @@ class SCMPCConfig:
     w_energy: float = 0.02     # $ per episode-step scale
     w_carbon: float = 0.0      # internal carbon price lambda_c ($/kgCO2);
                                # 0.0 keeps the classic program bitwise intact
+    # deadline-aware temporal shifting (DESIGN.md §15): the same
+    # `mpc.rollout.temporal_defer_mask` slack/relief signal H-MPC uses,
+    # applied after the greedy placement pass. False = classic program.
+    temporal_shift: bool = False
+    defer_price_ratio: float = 0.97
+    defer_pending_frac: float = 0.5
 
 
 jax.tree_util.register_dataclass(SCMPCConfig, data_fields=[], meta_fields=[
@@ -92,6 +97,13 @@ def sc_mpc_policy(dims: EnvDims, cfg: SCMPCConfig = SCMPCConfig()) -> Policy:
         assign = scan_assign(
             _greedy_score, None, state, offered, params, dims, rng
         )
+        if cfg.temporal_shift:
+            hold = plant.temporal_defer_mask(
+                offered, state, params, cfg.horizon, cfg.w_carbon,
+                cfg.defer_price_ratio, cfg.defer_pending_frac,
+                dims.pending_cap,
+            )
+            assign = jnp.where(hold, jnp.int32(-1), assign)
         warm = jnp.roll(zt, -1, axis=0).at[-1].set(zt[-1])  # receding horizon
         return assign, target[0], warm
 

@@ -9,6 +9,23 @@ import jax.numpy as jnp
 
 from repro.core.params import EnvDims
 
+# --------------------------------------------------------------------------
+# Service classes & deadlines (DESIGN.md §15). Every job carries a class id
+# and an absolute completion deadline (step index). Untagged traces
+# (workload.synthesize_trace with class_mode=0, the default) are all
+# CLS_BATCH with the NO_DEADLINE sentinel, which makes every class-aware
+# code path an exact identity — the legacy bitwise contract.
+# --------------------------------------------------------------------------
+
+#: Class ids, in SLO-priority order.
+CLS_INTERACTIVE, CLS_BATCH, CLS_BEST_EFFORT = 0, 1, 2
+NUM_CLASSES = 3
+#: Class names, indexed by class id (documented in SIMULATOR_GUIDE.md).
+JOB_CLASSES = ("interactive", "batch", "best_effort")
+#: Absolute-deadline sentinel: "no deadline". Far above any reachable step
+#: index but small enough that slack arithmetic stays inside int32.
+NO_DEADLINE = 1 << 29
+
 
 @dataclasses.dataclass(frozen=True)
 class JobTable:
@@ -17,27 +34,34 @@ class JobTable:
     Rows [0, count) are valid and FIFO-ordered (compacted each step).
     """
 
-    r: Any        # (C, CAP) f32 resource demand
-    dur: Any      # (C, CAP) i32 remaining duration (steps)
-    prio: Any     # (C, CAP) i32 priority
-    count: Any    # (C,) i32 number of valid rows
+    r: Any         # (C, CAP) f32 resource demand
+    dur: Any       # (C, CAP) i32 remaining duration (steps)
+    prio: Any      # (C, CAP) i32 priority
+    cls: Any       # (C, CAP) i32 service class (CLS_*)
+    deadline: Any  # (C, CAP) i32 absolute completion deadline (step)
+    count: Any     # (C,) i32 number of valid rows
 
     @staticmethod
     def zeros(num_clusters: int, cap: int) -> "JobTable":
         z = jnp.zeros((num_clusters, cap), jnp.float32)
         zi = jnp.zeros((num_clusters, cap), jnp.int32)
-        return JobTable(r=z, dur=zi, prio=zi, count=jnp.zeros((num_clusters,), jnp.int32))
+        return JobTable(
+            r=z, dur=zi, prio=zi, cls=zi, deadline=zi,
+            count=jnp.zeros((num_clusters,), jnp.int32),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
 class PendingBuffer:
     """Globally deferred jobs (unadmitted by the policy), re-offered next step."""
 
-    r: Any        # (P,) f32
-    dur: Any      # (P,) i32
-    prio: Any     # (P,) i32
-    is_gpu: Any   # (P,) bool
-    valid: Any    # (P,) bool
+    r: Any         # (P,) f32
+    dur: Any       # (P,) i32
+    prio: Any      # (P,) i32
+    cls: Any       # (P,) i32 service class
+    deadline: Any  # (P,) i32 absolute deadline (step)
+    is_gpu: Any    # (P,) bool
+    valid: Any     # (P,) bool
 
     @staticmethod
     def zeros(cap: int) -> "PendingBuffer":
@@ -45,6 +69,8 @@ class PendingBuffer:
             r=jnp.zeros((cap,), jnp.float32),
             dur=jnp.zeros((cap,), jnp.int32),
             prio=jnp.zeros((cap,), jnp.int32),
+            cls=jnp.zeros((cap,), jnp.int32),
+            deadline=jnp.zeros((cap,), jnp.int32),
             is_gpu=jnp.zeros((cap,), bool),
             valid=jnp.zeros((cap,), bool),
         )
@@ -75,6 +101,8 @@ class EnvState:
     # cumulative counters (diagnostics; metrics proper are step outputs)
     completed: Any        # i32 total jobs completed
     dropped: Any          # i32 jobs dropped on queue/pending overflow
+    completed_by_cls: Any # (NUM_CLASSES,) i32 completions per service class
+    violated_by_cls: Any  # (NUM_CLASSES,) i32 deadline violations per class
     energy_kwh: Any       # f32 cumulative energy
     cost_usd: Any         # f32 cumulative cost
     carbon_kg: Any        # f32 cumulative operational CO2
@@ -84,11 +112,13 @@ class EnvState:
 class Arrivals:
     """One step's batch of arriving jobs (fixed max slots, mask-valid)."""
 
-    r: Any        # (J,) f32
-    dur: Any      # (J,) i32
-    prio: Any     # (J,) i32
-    is_gpu: Any   # (J,) bool
-    valid: Any    # (J,) bool
+    r: Any         # (J,) f32
+    dur: Any       # (J,) i32
+    prio: Any      # (J,) i32
+    cls: Any       # (J,) i32 service class (CLS_*)
+    deadline: Any  # (J,) i32 absolute completion deadline (step)
+    is_gpu: Any    # (J,) bool
+    valid: Any     # (J,) bool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +150,8 @@ def init_state(dims: EnvDims, params, rng) -> EnvState:
         pending=PendingBuffer.zeros(d.pending_cap),
         completed=jnp.int32(0),
         dropped=jnp.int32(0),
+        completed_by_cls=jnp.zeros((NUM_CLASSES,), jnp.int32),
+        violated_by_cls=jnp.zeros((NUM_CLASSES,), jnp.int32),
         energy_kwh=jnp.float32(0.0),
         cost_usd=jnp.float32(0.0),
         carbon_kg=jnp.float32(0.0),

@@ -25,25 +25,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.params import EnvDims, EnvParams
-from repro.core.state import Arrivals
+from repro.core.state import (
+    CLS_BATCH, CLS_BEST_EFFORT, CLS_INTERACTIVE, NO_DEADLINE, Arrivals,
+)
 
 NOMINAL_JOBS_PER_STEP = 200
 CPU_FRACTION = 0.4  # paper: 40/60 CPU/GPU affinity split
+
+#: Default service-class mix for `class_mode=1` (interactive, batch,
+#: best-effort). Calibrated to cluster-trace composition: latency-sensitive
+#: services ~30% of jobs, deadline-bound batch ~50%, scavenger ~20%.
+DEFAULT_CLASS_MIX = (0.3, 0.5, 0.2)
 
 
 @dataclasses.dataclass(frozen=True)
 class Trace:
     """Episode workload: (T, J) arrays, row t = arrivals at step t."""
 
-    r: Any        # (T, J) f32 resource demand (CU)
-    dur: Any      # (T, J) i32 duration (steps)
-    prio: Any     # (T, J) i32 priority
-    is_gpu: Any   # (T, J) bool
-    valid: Any    # (T, J) bool
+    r: Any         # (T, J) f32 resource demand (CU)
+    dur: Any       # (T, J) i32 duration (steps)
+    prio: Any      # (T, J) i32 priority
+    cls: Any       # (T, J) i32 service class (state.CLS_*)
+    deadline: Any  # (T, J) i32 absolute completion deadline (step)
+    is_gpu: Any    # (T, J) bool
+    valid: Any     # (T, J) bool
 
     def arrivals_at(self, t) -> Arrivals:
         return Arrivals(
             r=self.r[t], dur=self.dur[t], prio=self.prio[t],
+            cls=self.cls[t], deadline=self.deadline[t],
             is_gpu=self.is_gpu[t], valid=self.valid[t],
         )
 
@@ -53,8 +63,59 @@ class Trace:
 
 
 jax.tree_util.register_dataclass(
-    Trace, data_fields=["r", "dur", "prio", "is_gpu", "valid"], meta_fields=[]
+    Trace,
+    data_fields=["r", "dur", "prio", "cls", "deadline", "is_gpu", "valid"],
+    meta_fields=[],
 )
+
+
+def untagged_classes(valid):
+    """(cls, deadline) arrays for a class-blind trace: every job is batch
+    with the NO_DEADLINE sentinel (the legacy bitwise path)."""
+    cls = np.where(valid, CLS_BATCH, 0).astype(np.int32)
+    deadline = np.where(valid, NO_DEADLINE, 0).astype(np.int32)
+    return cls, deadline
+
+
+def draw_classes(
+    rng,
+    valid,
+    dur,
+    class_mix=DEFAULT_CLASS_MIX,
+    slack_interactive: float = 2.0,
+    slack_batch: float = 24.0,
+    slack_sigma: float = 0.6,
+):
+    """Draw (cls, deadline) for a class-tagged trace (class_mode=1).
+
+    Deadlines are absolute step indices: ``arrival + dur + slack`` with
+    per-class slack laws — interactive jobs get a tight uniform slack of
+    ``[1, 2*slack_interactive]`` steps, batch jobs a heavy-tailed
+    log-normal slack (median `slack_batch` steps), best-effort jobs the
+    NO_DEADLINE sentinel. Draws happen *after* every demand/duration draw
+    in the callers, so class_mode=0 consumes an identical RNG stream.
+    """
+    T, J = valid.shape
+    mix = np.asarray(class_mix, np.float64)
+    if mix.min() < 0 or mix.sum() <= 0:
+        raise ValueError(f"class_mix must be non-negative and sum > 0: {class_mix}")
+    mix = mix / mix.sum()
+    u = rng.random((T, J))
+    cls = np.select(
+        [u < mix[0], u < mix[0] + mix[1]],
+        [CLS_INTERACTIVE, CLS_BATCH],
+        default=CLS_BEST_EFFORT,
+    ).astype(np.int32)
+    hi = max(int(round(2 * slack_interactive)), 1)
+    s_int = rng.integers(1, hi + 1, (T, J))
+    s_bat = np.maximum(
+        1, np.round(rng.lognormal(np.log(max(slack_batch, 1.0)), slack_sigma, (T, J)))
+    ).astype(np.int64)
+    arrival = np.arange(T, dtype=np.int64)[:, None]
+    deadline = arrival + dur + np.where(cls == CLS_INTERACTIVE, s_int, s_bat)
+    deadline = np.where(cls == CLS_BEST_EFFORT, NO_DEADLINE, deadline)
+    deadline = np.minimum(deadline, NO_DEADLINE).astype(np.int32)
+    return np.where(valid, cls, 0), np.where(valid, deadline, 0).astype(np.int32)
 
 
 def _capacity_by_type(params: EnvParams):
@@ -120,14 +181,28 @@ def synthesize_trace(
     diurnal_amp: float = 0.25,
     diurnal_shift: float = 0.0,
     burst_windows: tuple = (),
+    class_mode: int = 0,
+    class_mix=DEFAULT_CLASS_MIX,
+    slack_interactive: float = 2.0,
+    slack_batch: float = 24.0,
+    slack_sigma: float = 0.6,
 ) -> Trace:
     """Alibaba-like synthetic trace. `lam` scales the arrival *rate* (RQ2);
     demand calibration is always done at the lambda = 1, burst-free reference
     so the sweep actually stresses the plant. `diurnal_amp` / `diurnal_shift`
     / `burst_windows` reshape *when* load arrives (scenario hooks) without
-    touching the calibration."""
+    touching the calibration.
+
+    `class_mode=0` (default) leaves the trace untagged — all batch, no
+    deadlines, bitwise identical to the pre-class traces. `class_mode=1`
+    tags jobs with the `class_mix` service-class split and per-class
+    deadline-slack laws (`draw_classes`); the class draws happen after all
+    demand draws, so modes share every demand/duration sample.
+    """
     if lam < 0:
         raise ValueError(f"lam must be >= 0, got {lam}")
+    if class_mode not in (0, 1):
+        raise ValueError(f"class_mode must be 0 or 1, got {class_mode}")
     if not 0.0 <= gpu_fraction <= 1.0:
         raise ValueError(f"gpu_fraction must be in [0, 1], got {gpu_fraction}")
     T, J = dims.horizon, dims.max_arrivals
@@ -145,7 +220,7 @@ def synthesize_trace(
         warnings.warn(
             f"arrival slots saturate: per-step cap {int(step_cap.max())} exceeds "
             f"EnvDims.max_arrivals={J}; the delivered burst/oversubscription is "
-            f"weaker than requested — raise max_arrivals to remove the ceiling",
+            "weaker than requested — raise max_arrivals to remove the ceiling",
             stacklevel=2,
         )
     counts = np.minimum(
@@ -173,10 +248,21 @@ def synthesize_trace(
     max_gpu = 0.5 * c_max[gpu_mask].min()
     scaled = np.where(is_gpu, np.minimum(scaled, max_gpu), np.minimum(scaled, max_cpu))
 
+    if class_mode:
+        cls, deadline = draw_classes(
+            rng, valid, dur, class_mix=class_mix,
+            slack_interactive=slack_interactive, slack_batch=slack_batch,
+            slack_sigma=slack_sigma,
+        )
+    else:
+        cls, deadline = untagged_classes(valid)
+
     return Trace(
         r=jnp.asarray(np.where(valid, scaled, 0.0), jnp.float32),
         dur=jnp.asarray(np.where(valid, dur, 0), jnp.int32),
         prio=jnp.asarray(np.where(valid, prio, 0), jnp.int32),
+        cls=jnp.asarray(cls),
+        deadline=jnp.asarray(deadline),
         is_gpu=jnp.asarray(valid & is_gpu),
         valid=jnp.asarray(valid),
     )
@@ -190,6 +276,11 @@ def load_alibaba_csv(
     gpu_fraction: float = 1.0 - CPU_FRACTION,
     seed: int = 0,
     start_offset_s: Optional[int] = None,
+    class_mode: int = 0,
+    class_mix=DEFAULT_CLASS_MIX,
+    slack_interactive: float = 2.0,
+    slack_batch: float = 24.0,
+    slack_sigma: float = 0.6,
 ) -> Trace:
     """Load a slice of the real Alibaba 2018 `batch_task.csv`.
 
@@ -248,10 +339,21 @@ def load_alibaba_csv(
     scaled = _calibrate_scale(r, dmat, is_gpu, valid, params, target_util, T)
     prio = rng.integers(1, 4, (T, J)).astype(np.int32) * valid
 
+    if class_mode:
+        cls, deadline = draw_classes(
+            rng, valid, dmat, class_mix=class_mix,
+            slack_interactive=slack_interactive, slack_batch=slack_batch,
+            slack_sigma=slack_sigma,
+        )
+    else:
+        cls, deadline = untagged_classes(valid)
+
     return Trace(
         r=jnp.asarray(np.where(valid, scaled, 0.0), jnp.float32),
         dur=jnp.asarray(np.where(valid, dmat, 0), jnp.int32),
         prio=jnp.asarray(prio, jnp.int32),
+        cls=jnp.asarray(cls),
+        deadline=jnp.asarray(deadline),
         is_gpu=jnp.asarray(is_gpu),
         valid=jnp.asarray(valid),
     )

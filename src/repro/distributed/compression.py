@@ -11,8 +11,7 @@ precision over ICI; only the inter-pod hop is compressed 4x.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

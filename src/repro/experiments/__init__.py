@@ -9,7 +9,7 @@ baselines:
     python -m repro.experiments run --exp nominal --smoke
 """
 from repro.experiments.spec import (
-    ExperimentSpec, ExperimentTier, Margin, resolve_scenarios,
+    Bound, ExperimentSpec, ExperimentTier, Margin, resolve_scenarios,
 )
 from repro.experiments.registry import (
     all_experiments, get, names, register,
@@ -18,5 +18,6 @@ from repro.experiments.runner import (
     ARTIFACT_METRICS, SCHEMA, ExperimentResult, run_experiment, write_artifacts,
 )
 from repro.experiments.golden import (
-    check_margins, compare_to_golden, golden_path, load_golden, write_golden,
+    check_bounds, check_margins, compare_to_golden, golden_path, load_golden,
+    write_golden,
 )

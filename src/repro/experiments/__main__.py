@@ -48,6 +48,7 @@ def _cmd_run(args) -> int:
         print(result.format_markdown())
 
         violations = golden.check_margins(result, spec)
+        violations += golden.check_bounds(result, spec)
         gpath = golden.golden_path(name, tier, args.out)
         if args.update_golden:
             if violations:

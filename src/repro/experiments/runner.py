@@ -5,7 +5,13 @@ suite's execution backends (`repro.scenarios.suite.evaluate_infos`), pulls
 the raw per-step `StepInfo` back to the host, and aggregates it with
 `metrics.summarize_np` in float64 — so the emitted artifact is bitwise
 identical across `batch_mode=vmap|chunked|shard|scan` and across repeated
-runs with the same seeds (DESIGN.md §13).
+runs with the same seeds (DESIGN.md §13) for untagged workloads. On
+class-tagged runs (DESIGN.md §15) the preemption/defer threshold tests
+compare float reductions whose fusion differs between scan/shard and
+vmap, so a handful of per-job decisions — and hence small-count metrics
+— can differ across backends; the golden tolerances carry absolute
+floors for exactly those metrics, and reruns on one backend remain
+bitwise.
 
 Artifacts (`write_artifacts`): `results/<exp>.json` — the machine-readable
 result under the ``dcgym-experiment-v1`` schema — plus a rendered
@@ -23,7 +29,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 
 from repro.core import metrics
-from repro.experiments.spec import ExperimentSpec, ExperimentTier, resolve_scenarios
+from repro.experiments.spec import ExperimentSpec, resolve_scenarios
 from repro.scenarios.suite import evaluate_infos
 
 SCHEMA = "dcgym-experiment-v1"
@@ -37,6 +43,8 @@ ARTIFACT_METRICS = (
     "theta_mean", "theta_max", "throttle_pct", "total_energy_kwh",
     "kwh_per_job", "cost_usd", "cost_compute_usd", "cost_cool_usd",
     "carbon_kg", "completed_jobs", "dropped_jobs",
+    "slo_interactive_pct", "slo_batch_pct", "slo_violations",
+    "slack_mean_steps", "preempted_jobs",
 )
 
 

@@ -15,7 +15,7 @@ checked-in baseline under `results/golden/`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Optional, Tuple
+from typing import Any, Mapping, Tuple
 
 from repro.core.params import EnvDims
 from repro.scenarios.spec import Scenario
@@ -42,6 +42,23 @@ class Margin:
     scenario: str
     max_ratio: float = 1.0
     slack: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Bound:
+    """Absolute threshold on one (policy, scenario, metric) mean.
+
+    Margins compare two policies; bounds pin a single policy to an
+    absolute contract — e.g. "deadline-aware H-MPC keeps interactive SLO
+    attainment >= 99% under deadline pressure". Evaluated only when the
+    policy and scenario are present in the result, like margins.
+    """
+
+    metric: str
+    policy: str
+    scenario: str
+    min_value: float | None = None
+    max_value: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +89,7 @@ class ExperimentSpec:
     full: ExperimentTier
     smoke: ExperimentTier
     margins: Tuple[Margin, ...] = ()
+    bounds: Tuple[Bound, ...] = ()
 
     def tier(self, smoke: bool) -> ExperimentTier:
         return self.smoke if smoke else self.full

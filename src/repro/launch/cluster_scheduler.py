@@ -12,7 +12,7 @@ geo-distributed datacenters of Table I.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import DataCenterGym, EnvDims, EnvParams, Trace, make_params
-from repro.core.workload import _calibrate_scale
+from repro.core.workload import _calibrate_scale, untagged_classes
 
 CU_PER_CHIP = 250.0  # abstract CU of one accelerator chip at full util
 PEAK_FLOPS = 197e12
@@ -79,10 +79,13 @@ def lm_job_trace(
     # Alibaba demands onto cluster capacities
     r = _calibrate_scale(r, dur, is_gpu, valid, params, target_util, T)
     prio = rng.integers(1, 4, (T, J)).astype(np.int32)
+    cls, deadline = untagged_classes(valid)
     return Trace(
         r=jnp.asarray(np.where(valid, r, 0.0), jnp.float32),
         dur=jnp.asarray(np.where(valid, dur, 0), jnp.int32),
         prio=jnp.asarray(np.where(valid, prio, 0), jnp.int32),
+        cls=jnp.asarray(cls),
+        deadline=jnp.asarray(deadline),
         is_gpu=jnp.asarray(valid & is_gpu),
         valid=jnp.asarray(valid),
     )

@@ -177,7 +177,9 @@ def run_cell(arch: str, cell: ShapeCell, multi_pod: bool, verbose=True):
             "model_flops_6nd": model_flops_6nd,
             "useful_flops": useful,
             "useful_ratio": useful / max(flops_dev * chips, 1.0),
-            "roofline_frac": min(1.0, useful / chips / PEAK_FLOPS / max(max(terms.values()), 1e-12)),
+            "roofline_frac": min(
+                1.0, useful / chips / PEAK_FLOPS / max(max(terms.values()), 1e-12)
+            ),
         },
         "trip_counts": mc.trip_counts,
         "hlo_chars": hlo_len,

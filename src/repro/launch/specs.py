@@ -2,7 +2,7 @@
 — weak-type-correct, shardable, zero device allocation."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ process that feeds the job engine. Register custom scenarios with
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Tuple
+from typing import Dict, Tuple
 
 from repro.core.params import GridParams
 from repro.scenarios.spec import Scenario
@@ -146,4 +146,52 @@ register(Scenario(
                 "rewards policies that shift deferrable load into the "
                 "green hours.",
     grid=GridParams(price_gen="green_window", carbon_gen="green_window"),
+))
+
+# ---------------------------------------------------------------------------
+# Service-class / SLO scenarios (DESIGN.md §15): class_mode=1 tags the
+# Alibaba-like trace with the (interactive, batch, best_effort) mix and
+# per-class deadline-slack laws, unlocking deadline pressure, backlog, and
+# temporal-arbitrage regimes the untagged trace cannot express.
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    name="deadline_pressure",
+    description="Interactive-heavy SLO mix (50/40/10) with tight deadline "
+                "slack (interactive <= 1 h, batch median 1 h); stresses "
+                "class-aware admission and the interactive SLO.",
+    trace_overrides={"class_mode": 1, "class_mix": (0.5, 0.4, 0.1),
+                     "slack_interactive": 6.0, "slack_batch": 12.0,
+                     "target_util": 0.45},
+))
+
+register(Scenario(
+    name="batch_backlog",
+    description="Batch-dominant mix (10/70/20) at 1.2x arrivals with "
+                "generous slack (median 48 steps): a deep deferrable "
+                "backlog only deadline-aware policies can spread in time.",
+    trace_overrides={"class_mode": 1, "class_mix": (0.1, 0.7, 0.2),
+                     "lam": 1.2, "slack_batch": 48.0},
+))
+
+register(Scenario(
+    name="temporal_arbitrage",
+    description="Duck price curve entering the evening net-load ramp "
+                "(local ~19:00 at t=0: the episode opens expensive and "
+                "cheapens) with a 21:00-24:00 local green window on the "
+                "carbon channel, over a batch-heavy long-slack mix — "
+                "holding deferrable work ~2 h for the post-ramp green "
+                "window pays in both $ and CO2.",
+    trace_overrides={"class_mode": 1, "class_mix": (0.15, 0.6, 0.25),
+                     "slack_batch": 48.0, "target_util": 0.5},
+    grid=GridParams(price_gen="duck", carbon_gen="green_window",
+                    phase_h=(19.0, 18.5, 19.5, 20.0), duck_ramp=1.2,
+                    green_lo_h=21.0, green_hi_h=24.0, green_depth=0.9),
+))
+
+register(Scenario(
+    name="mixed_slo",
+    description="Calibrated three-class mix (30/50/20) with nominal slack "
+                "laws on the Table-I plant; the SLO-accounting baseline.",
+    trace_overrides={"class_mode": 1},
 ))

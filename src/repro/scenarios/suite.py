@@ -141,10 +141,10 @@ def estimate_cell_bytes(dims: EnvDims) -> int:
     rough — it drives the auto backend choice, nothing numerical.
     """
     C, T, J = dims.num_clusters, dims.horizon, dims.max_arrivals
-    tables = C * (dims.queue_cap + dims.run_cap) * 4 * 4   # r/dur/prio (+slack)
-    pending = dims.pending_cap * 4 * 4
-    trace = T * J * (4 + 4 + 4 + 1 + 1)                    # r/dur/prio/is_gpu/valid
-    infos = T * (C + 6 * dims.num_dcs + 10) * 4            # stacked StepInfo
+    tables = C * (dims.queue_cap + dims.run_cap) * 6 * 4   # r/dur/prio/cls/deadline (+slack)
+    pending = dims.pending_cap * 6 * 4
+    trace = T * J * (4 + 4 + 4 + 4 + 4 + 1 + 1)            # r/dur/prio/cls/deadline/is_gpu/valid
+    infos = T * (C + 6 * dims.num_dcs + 20) * 4            # stacked StepInfo
     # the scan carries ~2 live copies of the state (carry + in-flight update)
     return 2 * (tables + pending) + trace + infos
 

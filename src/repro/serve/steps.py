@@ -2,7 +2,7 @@
 by the decode_32k / long_500k dry-run cells) plus greedy sampling."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

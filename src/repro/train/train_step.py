@@ -6,7 +6,7 @@ constraints inside the model, so the same step runs on 1 CPU device or a
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -101,7 +101,7 @@ def test_guide_documents_stepinfo_and_metrics():
 
     dummy = jax.eval_shape(
         lambda: metrics.summarize(
-            StepInfo(*[jnp.zeros((4, 2)) for _ in StepInfo._fields])
+            StepInfo(*[jnp.zeros((4, 3)) for _ in StepInfo._fields])
         )
     )
     missing = [k for k in dummy if f"`{k}`" not in text]
@@ -140,6 +140,21 @@ def test_every_grid_generator_is_documented():
         f"SIMULATOR_GUIDE.md grid-generator catalogue is missing: "
         f"{undocumented}"
     )
+
+
+def test_guide_documents_service_classes():
+    """The SIMULATOR_GUIDE's "Service classes & SLOs" chapter must
+    catalogue every service class by name (backticked) and the deadline
+    machinery, like the scenario and generator tables."""
+    from repro.core.state import JOB_CLASSES
+
+    text = _read("SIMULATOR_GUIDE.md")
+    undocumented = [n for n in JOB_CLASSES if f"`{n}`" not in text]
+    assert not undocumented, (
+        f"SIMULATOR_GUIDE.md class catalogue is missing: {undocumented}"
+    )
+    for anchor in ("Service classes & SLOs", "`NO_DEADLINE`", "`class_mode=1`"):
+        assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor!r}"
 
 
 def test_guide_maps_experiments_to_paper_artifacts():

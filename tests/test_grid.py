@@ -1,7 +1,6 @@
 """Grid-signal subsystem tests (DESIGN.md §14): generator registry, the
 bitwise tou/constant compatibility contract, trace physics, carbon
 accounting, and the carbon-aware MPC wiring."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

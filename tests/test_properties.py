@@ -7,7 +7,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import EnvDims, make_params
+from repro.core import make_params
 from repro.core import thermal as T
 from repro.core import jobs as J
 from repro.core.state import JobTable
@@ -61,7 +61,7 @@ def test_backfill_never_exceeds_capacity(rs, cap):
     q = JobTable(
         r=q.r.at[0, :n].set(jnp.asarray(rs, jnp.float32)),
         dur=q.dur.at[0, :n].set(2),
-        prio=q.prio,
+        prio=q.prio, cls=q.cls, deadline=q.deadline,
         count=q.count.at[0].set(n),
     )
     run = JobTable.zeros(1, 16)
@@ -69,6 +69,78 @@ def test_backfill_never_exceeds_capacity(rs, cap):
     assert float(J.job_utilization(run2)[0]) <= cap + 1e-4
     # conservation: every job is either still queued or running
     assert int(q2.count[0]) + int(run2.count[0]) == n
+
+
+@given(
+    st.lists(st.floats(1.0, 100.0), min_size=1, max_size=14),
+    st.lists(st.booleans(), min_size=14, max_size=14),
+)
+@settings(**SETTINGS)
+def test_compact_preserves_fifo_order_and_mass(rs, keep_bits):
+    """`_compact` keeps exactly the kept rows, in their original relative
+    (FIFO) order, with total demand conserved and dropped rows zeroed."""
+    n = len(rs)
+    q = JobTable.zeros(1, 16)
+    q = JobTable(
+        r=q.r.at[0, :n].set(jnp.asarray(rs, jnp.float32)),
+        dur=q.dur.at[0, :n].set(jnp.arange(1, n + 1, dtype=jnp.int32)),
+        prio=q.prio, cls=q.cls.at[0, :n].set(jnp.arange(n, dtype=jnp.int32) % 3),
+        deadline=q.deadline.at[0, :n].set(100 + jnp.arange(n, dtype=jnp.int32)),
+        count=q.count.at[0].set(n),
+    )
+    keep = jnp.zeros((1, 16), bool).at[0, :n].set(jnp.asarray(keep_bits[:n]))
+    out = J._compact(q, keep, 16)
+    kept = [i for i in range(n) if keep_bits[i]]
+    assert int(out.count[0]) == len(kept)
+    # FIFO order of every column preserved among kept rows
+    np.testing.assert_allclose(
+        np.asarray(out.r[0, :len(kept)]), [rs[i] for i in kept], rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(out.dur[0, :len(kept)]), [i + 1 for i in kept])
+    np.testing.assert_array_equal(
+        np.asarray(out.deadline[0, :len(kept)]), [100 + i for i in kept])
+    # mass conservation + zeroed tail
+    np.testing.assert_allclose(
+        float(out.r[0].sum()), sum(rs[i] for i in kept), rtol=1e-5)
+    assert float(jnp.abs(out.r[0, len(kept):]).sum()) == 0.0
+
+
+@given(
+    st.lists(st.floats(1.0, 100.0), min_size=1, max_size=12),
+    st.lists(st.integers(0, 2), min_size=12, max_size=12),
+    st.floats(10.0, 200.0),
+)
+@settings(**SETTINGS)
+def test_admission_never_exceeds_capacity_with_mixed_classes(rs, clss, cap):
+    """Interactive promotion + best-effort preemption + backfill admission
+    must never push utilization above effective capacity, and never lose
+    or duplicate a job (queued + running == offered)."""
+    n = len(rs)
+    q = JobTable.zeros(1, 32)
+    q = JobTable(
+        r=q.r.at[0, :n].set(jnp.asarray(rs, jnp.float32)),
+        dur=q.dur.at[0, :n].set(2),
+        prio=q.prio,
+        cls=q.cls.at[0, :n].set(jnp.asarray(clss[:n], jnp.int32)),
+        deadline=q.deadline.at[0, :n].set(J.NO_DEADLINE),
+        count=q.count.at[0].set(n),
+    )
+    run = JobTable.zeros(1, 32)
+    c_eff = jnp.asarray([cap])
+    q1, run1, n_pre, n_drop = J.preempt_best_effort(q, run, c_eff)
+    assert int(n_pre) == 0 and int(n_drop) == 0  # nothing running yet
+    q2 = J.promote_interactive(q1)
+    # promotion is a permutation: counts and mass unchanged
+    assert int(q2.count[0]) == n
+    np.testing.assert_allclose(float(q2.r[0].sum()), sum(rs), rtol=1e-5)
+    # interactive-first: no non-interactive row before an interactive one
+    cls_order = np.asarray(q2.cls[0, :n])
+    first_non_int = next(
+        (i for i, c in enumerate(cls_order) if c != 0), n)
+    assert (cls_order[first_non_int:] != 0).all()
+    q3, run3 = J.admit_backfill(q2, run1, c_eff, jnp.asarray([1.0]), 32)
+    assert float(J.job_utilization(run3)[0]) <= cap + 1e-4
+    assert int(q3.count[0]) + int(run3.count[0]) == n
 
 
 @given(st.lists(st.floats(1.0, 50.0), min_size=1, max_size=16))
@@ -81,7 +153,7 @@ def test_fifo_greedy_admission_is_maximal(rs):
     q = JobTable(
         r=q.r.at[0, :n].set(jnp.asarray(rs, jnp.float32)),
         dur=q.dur.at[0, :n].set(1),
-        prio=q.prio,
+        prio=q.prio, cls=q.cls, deadline=q.deadline,
         count=q.count.at[0].set(n),
     )
     run = JobTable.zeros(1, 32)

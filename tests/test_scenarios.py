@@ -2,7 +2,6 @@
 perturbed params, workload hooks, and batched-suite parity with
 per-episode rollouts."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -4,7 +4,6 @@ multi-device tests live in test_multidevice.py as subprocesses.)"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.analysis.hlo import analyze_hlo

@@ -11,7 +11,7 @@ from repro.core import (
 from repro.core import jobs as J
 from repro.core import power as P
 from repro.core import thermal as T
-from repro.core.state import Arrivals, JobTable
+from repro.core.state import CLS_BATCH, NO_DEADLINE, Arrivals, JobTable
 from repro.core.policies import make_policy
 
 DIMS = EnvDims(
@@ -119,14 +119,18 @@ def test_tou_price_switches():
 # ---------------------------------------------------------------- job engine
 
 
-def _arrivals(rs, gpus, durs=None):
+def _arrivals(rs, gpus, durs=None, clss=None, deadlines=None):
     n = len(rs)
     pad = DIMS.max_arrivals - n
     durs = durs or [3] * n
+    clss = clss or [CLS_BATCH] * n
+    deadlines = deadlines or [NO_DEADLINE] * n
     return Arrivals(
         r=jnp.asarray(rs + [0.0] * pad, jnp.float32),
         dur=jnp.asarray(durs + [0] * pad, jnp.int32),
         prio=jnp.ones(DIMS.max_arrivals, jnp.int32),
+        cls=jnp.asarray(clss + [0] * pad, jnp.int32),
+        deadline=jnp.asarray(deadlines + [0] * pad, jnp.int32),
         is_gpu=jnp.asarray(gpus + [False] * pad),
         valid=jnp.asarray([True] * n + [False] * pad),
     )
@@ -147,7 +151,7 @@ def test_backfill_skips_too_big_but_admits_smaller_behind():
     q = JobTable(
         r=q.r.at[0, :3].set(jnp.asarray([60.0, 50.0, 15.0])),
         dur=q.dur.at[0, :3].set(3),
-        prio=q.prio,
+        prio=q.prio, cls=q.cls, deadline=q.deadline,
         count=q.count.at[0].set(3),
     )
     run = JobTable.zeros(1, 16)
@@ -163,11 +167,11 @@ def test_tick_completes_jobs():
     run = JobTable(
         r=run.r.at[0, :2].set(jnp.asarray([5.0, 7.0])),
         dur=run.dur.at[0, :2].set(jnp.asarray([1, 3])),
-        prio=run.prio,
+        prio=run.prio, cls=run.cls, deadline=run.deadline,
         count=run.count.at[0].set(2),
     )
-    run2, done = J.tick_running(run)
-    assert int(done) == 1 and int(run2.count[0]) == 1
+    run2, tick = J.tick_running(run, jnp.int32(0))
+    assert int(tick.n_done) == 1 and int(run2.count[0]) == 1
     assert float(run2.r[0, 0]) == 7.0 and int(run2.dur[0, 0]) == 2
 
 
@@ -175,7 +179,8 @@ def test_power_gating_blocks_admission():
     q = JobTable.zeros(1, 8)
     q = JobTable(
         r=q.r.at[0, 0].set(10.0), dur=q.dur.at[0, 0].set(2),
-        prio=q.prio, count=q.count.at[0].set(1),
+        prio=q.prio, cls=q.cls, deadline=q.deadline,
+        count=q.count.at[0].set(1),
     )
     run = JobTable.zeros(1, 8)
     _, run_ok = J.admit_backfill(q, run, jnp.asarray([100.0]), jnp.asarray([1.0]), 8)

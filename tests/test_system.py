@@ -1,8 +1,6 @@
 """End-to-end behaviour tests: the paper's qualitative claims reproduced on
 reduced episodes (the full-scale quantitative runs live in benchmarks/)."""
 import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.core import DataCenterGym, EnvDims, make_params, metrics, rollout, synthesize_trace
 from repro.core.policies import make_policy
