@@ -1,0 +1,170 @@
+"""Fault-injection benchmark: rollout steps/sec with the fault state
+machine armed (`fault_mode=1`, the four fault scenarios) vs the same
+scenarios with faults stripped (`fault_mode=0` — the bitwise-identity
+path every pre-fault workload runs), plus fault-schedule build
+throughput (DESIGN.md §16).
+
+  PYTHONPATH=src python -m benchmarks.bench_faults
+  PYTHONPATH=src python -m benchmarks.run --only faults
+
+The on/off contrast is the number that matters: `fault_step` + the
+where-selects in power/thermal/jobs run inside *every* rollout either
+way, so a large gap here would mean the disabled path is paying for the
+subsystem. Rollouts are timed on the second call of a prebuilt vmap
+runner (compilation excluded), like bench_scenarios/bench_grid. Writes
+BENCH_faults.latest.json at the repo root; the committed
+BENCH_faults.json baseline is updated via `benchmarks.check_regression
+--update` and gated within ±30% like the other baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+
+from benchmarks.bench_scenarios import _bench_dims
+from repro.core import metrics
+from repro.core.env import rollout_params
+from repro.core.params import GRID_STEPS, make_params
+from repro.core.policies import make_policy
+from repro.scenarios import build_cells, registry
+from repro.scenarios.suite import make_runner
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: Committed bench-regression baseline — written only by
+#: `benchmarks.check_regression --update` (best-of-N).
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_faults.json")
+#: Default output of interactive runs (scratch, not the gate baseline).
+BENCH_LATEST = os.path.join(REPO_ROOT, "BENCH_faults.latest.json")
+
+
+def _fault_scenarios():
+    """Every registered scenario with a fault config — derived from the
+    registry so a newly registered fault scenario is benchmarked (and
+    thus baseline-gated) automatically."""
+    return tuple(
+        n for n in registry.names() if registry.get(n).faults is not None
+    )
+
+
+def schedule_generation(
+    batch: int = 512, reps: int = 20
+) -> Dict[str, Dict[str, float]]:
+    """Seeded (GRID_STEPS, D) fault-arrival trace builds per second, per
+    fault scenario. A single build is sub-millisecond and thus pure
+    dispatch noise, so the bench times one jitted vmap over `batch`
+    seed-derived keys × `reps` calls — the same arithmetic
+    `faults.build_schedule` runs per cell, amortized far enough above
+    timer jitter for the ±30% regression band to mean something.
+    Trace-mode schedules are skipped: they are seed-independent constant
+    scatters that XLA folds away, leaving nothing but dispatch noise to
+    measure."""
+    from repro.faults.injection import _FAULT_SEED_SALT, _build_schedule_jit
+
+    params = make_params()
+    keys = jax.vmap(jax.random.fold_in, (0, None))(
+        jax.random.split(jax.random.PRNGKey(0), batch), _FAULT_SEED_SALT
+    )
+    out: Dict[str, Dict[str, float]] = {}
+    for name in _fault_scenarios():
+        fp = registry.get(name).faults
+        if fp.arrival != "poisson":
+            continue
+        build = jax.jit(jax.vmap(
+            lambda key, fp=fp: _build_schedule_jit(key, params, fp, GRID_STEPS)
+        ))
+        jax.block_until_ready(build(keys))  # warmup/compile
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(build(keys))
+        wall = time.time() - t0
+        n = reps * batch
+        out[name] = {
+            "wall_s": wall,
+            "schedules_per_s": n / wall,
+            "steps_per_s": n * GRID_STEPS / wall,
+        }
+    print("# fault-schedule generation")
+    print("scenario,wall_s,schedules_per_s")
+    for name, r in out.items():
+        print(f"{name},{r['wall_s']:.3f},{r['schedules_per_s']:.0f}")
+    return out
+
+
+def fault_rollout(
+    policy: str = "greedy", seeds: int = 4, fast: bool = False
+) -> Dict[str, Dict[str, float]]:
+    """Whole-grid rollout throughput over the fault scenarios, armed vs
+    stripped. The stripped grid reuses the *same* scenarios (same
+    perturbations, same class-tagged traces) with `faults=None`, so the
+    contrast isolates exactly the fault_mode=1 arithmetic."""
+    dims = _bench_dims(fast)
+    if fast:
+        seeds = min(seeds, 2)
+    scens = [registry.get(s) for s in _fault_scenarios()]
+    n_cells = len(scens) * seeds
+    pol = make_policy(policy, dims)
+
+    def cell(p, t, r):
+        _, infos = rollout_params(dims, pol, p, t, r)
+        return metrics.summarize(infos)
+
+    result: Dict[str, Dict[str, float]] = {}
+    grids = {
+        "faults_on": scens,
+        "faults_off": [dataclasses.replace(s, faults=None) for s in scens],
+    }
+    for name, grid in grids.items():
+        stacked = build_cells(grid, seeds, dims)
+        runner = make_runner(cell, n_cells, "vmap", dims=dims)
+        t0 = time.time()
+        out = jax.block_until_ready(runner(*stacked))
+        compile_s = time.time() - t0
+        t0 = time.time()
+        out = jax.block_until_ready(runner(*stacked))
+        wall = time.time() - t0
+        result[name] = {
+            "wall_s": wall,
+            "steps_per_s": n_cells * dims.horizon / wall,
+            "first_call_s": compile_s,
+            "fault_dc_steps_mean": float(out["fault_dc_steps"].mean()),
+        }
+    # sanity: the armed grid saw faults, the stripped one none at all
+    assert result["faults_on"]["fault_dc_steps_mean"] > 0
+    assert result["faults_off"]["fault_dc_steps_mean"] == 0
+    print(f"\n# fault rollout: {n_cells} cells "
+          f"({len(scens)} scenarios x {seeds} seeds), "
+          f"horizon={dims.horizon}, policy={policy}")
+    print("name,wall_s,steps_per_s,first_call_s,fault_dc_steps_mean")
+    for name, r in result.items():
+        print(f"{name},{r['wall_s']:.3f},{r['steps_per_s']:.0f},"
+              f"{r['first_call_s']:.1f},{r['fault_dc_steps_mean']:.1f}")
+    ratio = result["faults_on"]["steps_per_s"] / \
+        result["faults_off"]["steps_per_s"]
+    print(f"armed/stripped throughput ratio: {ratio:.2f}x")
+    return result
+
+
+def main(fast: bool = False, out_path: str = BENCH_LATEST):
+    gen = schedule_generation()
+    roll = fault_rollout(fast=fast)
+    payload = {
+        "bench": "faults",
+        "fast": fast,
+        "jax_backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "per_fault_schedule": gen,
+        "fault_rollout": roll,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {out_path}")
+    return gen, roll
+
+
+if __name__ == "__main__":
+    main()

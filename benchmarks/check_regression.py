@@ -2,10 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.check_regression [--update] [--warn-only]
 
-Re-runs the `scenarios`, `kernels`, `grid`, and `jobs` benchmarks with the same
-`fast` flag each committed baseline (`BENCH_scenarios.json` /
-`BENCH_kernels.json` / `BENCH_grid.json` / `BENCH_jobs.json`) was
-recorded with and compares throughput within a ±30% band:
+Re-runs the `scenarios`, `kernels`, `grid`, `jobs`, and `faults` benchmarks
+with the same `fast` flag each committed baseline (`BENCH_scenarios.json` /
+`BENCH_kernels.json` / `BENCH_grid.json` / `BENCH_jobs.json` /
+`BENCH_faults.json`) was recorded with and compares throughput within a
+±30% band:
 
 - scenarios: `per_scenario_vmap[*].steps_per_s` and
   `per_backend[*].steps_per_s`, on the backends both runs measured
@@ -15,6 +16,9 @@ recorded with and compares throughput within a ±30% band:
   `carbon_rollout[*].steps_per_s` (trace-driven scenario rollouts);
 - jobs: `per_mix[*].jobs_per_s` (job-engine admission+tick throughput
   per service-class mix);
+- faults: `per_fault_schedule[*].schedules_per_s` (fault-arrival trace
+  builds) and `fault_rollout[*].steps_per_s` (fault-armed vs stripped
+  rollouts);
 - kernels: wall-clock per kernel (as 1/ms throughput), skipped when the
   Pallas numbers come from interpret mode on either side or the shapes
   differ.
@@ -43,6 +47,7 @@ BASELINES = {
     "kernels": os.path.join(REPO_ROOT, "BENCH_kernels.json"),
     "grid": os.path.join(REPO_ROOT, "BENCH_grid.json"),
     "jobs": os.path.join(REPO_ROOT, "BENCH_jobs.json"),
+    "faults": os.path.join(REPO_ROOT, "BENCH_faults.json"),
 }
 BAND = 0.30  # fresh/baseline throughput ratio must stay within [0.7, 1.3]
 
@@ -87,6 +92,21 @@ def jobs_pairs(baseline: Dict, fresh: Dict) -> Pairs:
         f = fresh.get("per_mix", {}).get(mix)
         if f:
             pairs.append((f"jobs/{mix}", b["jobs_per_s"], f["jobs_per_s"]))
+    return pairs
+
+
+def faults_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for name, b in baseline.get("per_fault_schedule", {}).items():
+        f = fresh.get("per_fault_schedule", {}).get(name)
+        if f:
+            pairs.append((f"faults/schedule/{name}",
+                          b["schedules_per_s"], f["schedules_per_s"]))
+    for name, b in baseline.get("fault_rollout", {}).items():
+        f = fresh.get("fault_rollout", {}).get(name)
+        if f:
+            pairs.append((f"faults/rollout/{name}",
+                          b["steps_per_s"], f["steps_per_s"]))
     return pairs
 
 
@@ -142,7 +162,9 @@ def _merge_payload_best(a: Dict, b: Dict) -> Dict:
     # per-section throughput key: the same one the pair functions compare
     sections = {"per_scenario_vmap": "steps_per_s", "per_backend": "steps_per_s",
                 "per_generator": "traces_per_s", "carbon_rollout": "steps_per_s",
-                "per_mix": "jobs_per_s"}
+                "per_mix": "jobs_per_s",
+                "per_fault_schedule": "schedules_per_s",
+                "fault_rollout": "steps_per_s"}
     for sect, tkey in sections.items():
         for key, cell in a.get(sect, {}).items():
             tgt = out.get(sect, {}).get(key)
@@ -193,13 +215,16 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     warn_only = args.warn_only or bool(os.environ.get("CI"))
 
-    from benchmarks import bench_grid, bench_jobs, bench_kernels, bench_scenarios
+    from benchmarks import (
+        bench_faults, bench_grid, bench_jobs, bench_kernels, bench_scenarios,
+    )
 
     suites = (
         ("scenarios", bench_scenarios, scenario_pairs),
         ("kernels", bench_kernels, kernel_pairs),
         ("grid", bench_grid, grid_pairs),
         ("jobs", bench_jobs, jobs_pairs),
+        ("faults", bench_faults, faults_pairs),
     )
 
     runs = 1 + max(0, args.retries)
@@ -209,7 +234,7 @@ def main(argv=None) -> int:
             for name, mod, _ in suites:
                 base_path = BASELINES[name]
                 fast = bool(_load(base_path).get("fast")) if os.path.exists(base_path) \
-                    else (name in ("scenarios", "grid", "jobs"))
+                    else (name in ("scenarios", "grid", "jobs", "faults"))
                 merged = _measure_best(name, mod, fast, runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
@@ -228,7 +253,7 @@ def main(argv=None) -> int:
                 print(f"note: no committed baseline at {base_path}; "
                       f"emitting one (best of {runs} runs)")
                 merged = _measure_best(
-                    name, mod, name in ("scenarios", "grid", "jobs"), runs, tmp)
+                    name, mod, name in ("scenarios", "grid", "jobs", "faults"), runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
                 continue

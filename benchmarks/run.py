@@ -52,7 +52,7 @@ def main() -> None:
                     help="tiny scenario suite + nominal smoke experiment, then exit")
     ap.add_argument("--only", default="",
                     help="comma list: rq1,rq2,complexity,throughput,kernels,"
-                         "scenarios,grid,jobs")
+                         "scenarios,grid,jobs,faults")
     args, _ = ap.parse_known_args()
     if args.smoke:
         sys.exit(smoke())
@@ -129,6 +129,18 @@ def main() -> None:
         res = bench_jobs.main(fast=args.fast)
         jps = min(r["jobs_per_s"] for r in res.values())
         rows.append(("jobs", time.time() - t0, f"min_jobs_ps={jps:.0f}"))
+
+    if want("faults"):
+        from benchmarks import bench_faults
+
+        print("\n=== Fault injection: armed vs stripped rollout throughput ===")
+        t0 = time.time()
+        gen, roll = bench_faults.main(fast=args.fast)
+        ratio = roll["faults_on"]["steps_per_s"] / \
+            roll["faults_off"]["steps_per_s"]
+        rows.append(("faults", time.time() - t0,
+                     f"armed_sps={roll['faults_on']['steps_per_s']:.0f} "
+                     f"armed/stripped={ratio:.2f}x"))
 
     if want("kernels"):
         from benchmarks import bench_kernels

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core import jobs as jobs_mod
 from repro.core import power as power_mod
 from repro.core import thermal as thermal_mod
+from repro.faults import injection as faults_mod
 from repro.core.params import EnvDims, EnvParams
 from repro.core.state import Action, Arrivals, EnvState, init_state
 from repro.core.workload import Trace
@@ -47,6 +48,10 @@ class StepInfo(NamedTuple):
     price: Any             # (D,)
     carbon_intensity: Any  # (D,) grid carbon intensity (gCO2/kWh)
     setpoint: Any          # (D,)
+    fault_active: Any      # (D,) bool: a fault is active at this DC
+    fault_cool_mult: Any   # (D,) active cooling-efficiency multiplier
+    fault_cap_mult: Any    # (D,) active compute-capacity multiplier
+    fault_partition: Any   # (D,) active network-partition mask
 
 
 def observe(state: EnvState, params: EnvParams) -> jnp.ndarray:
@@ -79,12 +84,20 @@ class DataCenterGym:
     ) -> Tuple[EnvState, StepInfo]:
         params, dims = self.params, self.dims
 
+        # 0. fault envelope: advance the per-DC fault state machine first so
+        #    this step's placement/execution/physics all run under it. With
+        #    fault_mode=0 the arrival trace is zero and every fault hook
+        #    below is an exact identity (DESIGN.md §16).
+        faults = faults_mod.fault_step(state.faults, state.t, params)
+
         # 1. placement: assigned jobs join cluster queues; deferred jobs wait.
+        #    Placements into a partitioned DC bounce to the pending buffer.
+        assign = jobs_mod.block_partitioned(action.assign, faults, params)
         queues, drop_q = jobs_mod.insert_arrivals(
-            state.queues, offered, action.assign, dims.num_clusters
+            state.queues, offered, assign, dims.num_clusters
         )
         pending, drop_p = jobs_mod.refill_pending(
-            offered, action.assign, dims.pending_cap
+            offered, assign, dims.pending_cap
         )
 
         # 2. execution: progress running jobs (per-class completion/violation
@@ -95,12 +108,14 @@ class DataCenterGym:
         #    power budget. On single-class tables the preempt/promote
         #    stages are exact identities (DESIGN.md §15).
         c_eff = thermal_mod.effective_capacity(state.theta, params)
+        c_eff = jobs_mod.fault_capacity(c_eff, faults, params)
         queues, running, tick, n_preempted, drop_e = jobs_mod.tick_and_preempt(
             queues, state.running, c_eff, state.t
         )
         n_done = tick.n_done
         queues = jobs_mod.promote_interactive(queues, window=dims.admit_depth)
         power_ok = (state.power > 0.0).astype(jnp.float32)
+        power_ok = jobs_mod.admission_gate(power_ok, faults, params)
         queues, running = jobs_mod.admit_backfill(
             queues, running, c_eff, power_ok, dims.admit_depth
         )
@@ -111,6 +126,7 @@ class DataCenterGym:
         theta, integral, err, phi_cool = thermal_mod.thermal_step(
             state.theta, state.theta_amb, setpoint,
             state.pid_integral, state.pid_prev_err, util, params,
+            faults=faults,
         )
         rng, k_amb = jax.random.split(state.rng)
         noise = jax.random.normal(k_amb, (dims.num_dcs,))
@@ -118,14 +134,18 @@ class DataCenterGym:
             (state.t + 1).astype(jnp.float32), noise, params, dims.horizon
         )
 
-        # 4. power budget, grid signals, accounting (Eqs. 8-9 + carbon).
+        # 4. power budget, grid signals, accounting (Eqs. 8-9 + carbon). A
+        #    degraded CRAC draws phi / cool_mult W of electricity for phi W
+        #    of delivered heat rejection, so all electrical accounting (and
+        #    the power budget) sees the COP-corrected draw.
+        phi_elec = power_mod.cooling_electrical_w(phi_cool, params, faults)
         price = power_mod.electricity_price(state.t, params)
         carbon = power_mod.carbon_intensity(state.t, params)
-        energy, _ = power_mod.step_energy_kwh(util, phi_cool, params)
-        cost = power_mod.step_cost_usd(util, phi_cool, price, params)
-        cool_cost = power_mod.step_cool_cost_usd(phi_cool, price, params)
-        carbon_kg = power_mod.step_carbon_kg(util, phi_cool, carbon, params)
-        power = power_mod.power_step(state.power, util, phi_cool, params)
+        energy, _ = power_mod.step_energy_kwh(util, phi_elec, params)
+        cost = power_mod.step_cost_usd(util, phi_elec, price, params)
+        cool_cost = power_mod.step_cool_cost_usd(phi_elec, price, params)
+        carbon_kg = power_mod.step_carbon_kg(util, phi_elec, carbon, params)
+        power = power_mod.power_step(state.power, util, phi_elec, params)
 
         is_gpu_cl = params.is_gpu
         cap_cpu = jnp.where(~is_gpu_cl, params.c_max, 0.0).sum()
@@ -158,6 +178,10 @@ class DataCenterGym:
             price=price,
             carbon_intensity=carbon,
             setpoint=setpoint,
+            fault_active=faults.remaining > 0,
+            fault_cool_mult=faults.cool_mult,
+            fault_cap_mult=faults.cap_mult,
+            fault_partition=faults.partition,
         )
 
         new_state = EnvState(
@@ -175,6 +199,7 @@ class DataCenterGym:
             setpoint=setpoint,
             cool_power=phi_cool,
             price=price,
+            faults=faults,
             pending=pending,
             completed=state.completed + n_done,
             dropped=state.dropped + dropped,

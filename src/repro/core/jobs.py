@@ -289,6 +289,46 @@ def tick_and_preempt(
             evict.sum().astype(jnp.int32), n_dropped)
 
 
+def fault_capacity(c_eff, faults, params):
+    """(C,) effective capacity masked by the active compute-fault envelope.
+
+    A PDU/host fault scales every cluster in the afflicted DC by that DC's
+    `cap_mult` (DESIGN.md §16). The reduced capacity feeds the same
+    admission and best-effort-preemption machinery as thermal throttling,
+    so capacity faults shed load through the existing pathways. Identity
+    when fault_mode=0 (bitwise).
+    """
+    masked = c_eff * faults.cap_mult[params.dc_id]
+    return jnp.where(params.fault_mode > 0, masked, c_eff)
+
+
+def block_partitioned(assign, faults, params):
+    """Bounce placements routed into a network-partitioned DC (-> defer).
+
+    A partitioned DC is unreachable for *new* work: any job the policy
+    assigned to one of its clusters is rewritten to -1 this step, so it
+    lands in the pending buffer and is re-offered once the partition
+    heals (already-running jobs keep executing). Identity when
+    fault_mode=0 (bitwise).
+    """
+    part_cl = faults.partition[params.dc_id]                   # (C,)
+    safe = jnp.clip(assign, 0, part_cl.shape[0] - 1)
+    blocked = (assign >= 0) & (part_cl[safe] > 0.0) & (params.fault_mode > 0)
+    return jnp.where(blocked, jnp.int32(-1), assign)
+
+
+def admission_gate(power_ok, faults, params):
+    """(C,) admission gate: positive power budget AND no network partition.
+
+    `admit_backfill` already gates on the power budget; a partition fault
+    additionally closes backfill admission into the partitioned DC's
+    clusters (queued work holds in place rather than starting under a
+    partition). Identity when fault_mode=0 (bitwise).
+    """
+    open_cl = 1.0 - faults.partition[params.dc_id]
+    return jnp.where(params.fault_mode > 0, power_ok * open_cl, power_ok)
+
+
 def insert_arrivals(
     queues: JobTable, jobs: Arrivals, assign, num_clusters: int
 ) -> Tuple[JobTable, jnp.ndarray]:

@@ -43,6 +43,13 @@ def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
         100.0,
     )
     deadlined = done_cls[0] + done_cls[1]           # classes carrying deadlines
+    # Fault exposure: DC-steps spent under an active fault, and the mean
+    # usable-capacity fraction lost to the fault envelope (cap x cool x
+    # partition — the same envelope the fault-aware H-MPC plans against).
+    envelope = (
+        infos.fault_cap_mult[sl] * infos.fault_cool_mult[sl]
+        * (1.0 - infos.fault_partition[sl])
+    )
     return {
         "cpu_util_pct": 100.0 * infos.cpu_util[sl].mean(),
         "gpu_util_pct": 100.0 * infos.gpu_util[sl].mean(),
@@ -64,6 +71,9 @@ def summarize(infos, warmup: int = 0) -> Dict[str, jnp.ndarray]:
         "slo_violations": viol_cls.sum(),
         "slack_mean_steps": slack_cls[:2].sum() / jnp.maximum(deadlined, 1),
         "preempted_jobs": infos.preempted[sl].sum(),
+        "fault_dc_steps": infos.fault_active[sl].sum().astype(jnp.float32),
+        "fault_cap_lost_pct": 100.0 * (1.0 - envelope).mean(),
+        "slo_interactive_violations": viol_cls[0],
     }
 
 
@@ -90,6 +100,10 @@ def summarize_np(infos, warmup: int = 0) -> Dict[str, float]:
         if done_cls[k] > 0 else 100.0
     )
     deadlined = done_cls[0] + done_cls[1]
+    envelope = (
+        f8(infos.fault_cap_mult) * f8(infos.fault_cool_mult)
+        * (1.0 - f8(infos.fault_partition))
+    )
     out = {
         "cpu_util_pct": 100.0 * f8(infos.cpu_util).mean(),
         "gpu_util_pct": 100.0 * f8(infos.gpu_util).mean(),
@@ -111,6 +125,9 @@ def summarize_np(infos, warmup: int = 0) -> Dict[str, float]:
         "slo_violations": viol_cls.sum(),
         "slack_mean_steps": slack_cls[:2].sum() / max(deadlined, 1.0),
         "preempted_jobs": f8(infos.preempted).sum(),
+        "fault_dc_steps": f8(infos.fault_active).sum(),
+        "fault_cap_lost_pct": 100.0 * (1.0 - envelope).mean(),
+        "slo_interactive_violations": viol_cls[0],
     }
     return {k: float(v) for k, v in out.items()}
 
@@ -150,4 +167,13 @@ def format_table(rows: Dict[str, Dict[str, float]], metrics=None) -> str:
             for n in names
         )
         out.append(f"| slo int/batch pct | {vals} |")
+    if all(
+        {"fault_dc_steps", "fault_cap_lost_pct"} <= set(rows[n]) for n in names
+    ) and any(float(rows[n]["fault_dc_steps"]) > 0 for n in names):
+        vals = " | ".join(
+            f"{float(rows[n]['fault_dc_steps']):,.0f} / "
+            f"{float(rows[n]['fault_cap_lost_pct']):.1f}%"
+            for n in names
+        )
+        out.append(f"| fault dc-steps/cap lost | {vals} |")
     return "\n".join(out)

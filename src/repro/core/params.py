@@ -93,6 +93,49 @@ class GridParams:
 
 
 # ---------------------------------------------------------------------------
+# Fault-injection configuration (static, hashable; DESIGN.md §16).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultParams:
+    """Configuration of the fault-injection subsystem (`repro.faults`).
+
+    Pure static data, mirroring `GridParams`: `repro.faults.build_schedule`
+    turns one `FaultParams` + a seed into a per-DC `(GRID_STEPS, D)` fault
+    arrival-indicator trace, which `Scenario.attach_faults` stores on
+    `EnvParams` together with the per-DC severity vectors (fault_mode=1).
+    The default `EnvParams` keeps fault_mode=0 with an all-zero arrival
+    trace: `repro.faults.fault_step` then never activates anything and
+    every fault multiplier stays pinned at its nominal value, so every
+    pre-fault golden stays bitwise valid.
+
+    Arrival is trace-or-Poisson: ``arrival="trace"`` reads deterministic
+    `(step, dc)` pairs from `schedule`; ``arrival="poisson"`` draws seeded
+    per-step Bernoulli arrivals at `rate`, optionally modulated by the
+    noise-free diurnal ambient via `heat_coupling` (cooling hardware fails
+    preferentially under peak thermal stress — the correlated-arrival law
+    the `cascading_heatwave_failure` scenario composes with a heatwave).
+
+    While a DC's fault is active (for `duration` steps) all three severity
+    channels apply at once: `cool_eff` multiplies delivered cooling and
+    effective CRAC capacity (COP degradation), `cap_eff` multiplies the
+    DC's compute capacity (PDU / node loss), and `partition` = 1.0 cuts
+    the DC off from new placements and admissions (network partition).
+    A channel a scenario does not stress keeps its identity value.
+    """
+
+    arrival: str = "poisson"                 # "poisson" | "trace"
+    rate: float = 0.02                       # per-DC per-step arrival prob
+    heat_coupling: float = 0.0               # ambient modulation of `rate`
+    schedule: Tuple[Tuple[int, int], ...] = ()   # (step, dc) pairs ("trace")
+    duration: int = 12                       # steps a fault stays active
+    cool_eff: Tuple[float, ...] = (1.0, 1.0, 1.0, 1.0)   # in (0, 1]
+    cap_eff: Tuple[float, ...] = (1.0, 1.0, 1.0, 1.0)    # in (0, 1]
+    partition: Tuple[float, ...] = (0.0, 0.0, 0.0, 0.0)  # {0, 1}
+
+
+# ---------------------------------------------------------------------------
 # Physical parameters (jnp arrays; a pytree usable inside jit).
 # ---------------------------------------------------------------------------
 
@@ -135,6 +178,20 @@ class EnvParams:
     grid_mode: Any      # int32 scalar
     price_trace: Any    # (GRID_STEPS, D) $/kWh
     carbon_trace: Any   # (GRID_STEPS, D) gCO2/kWh
+
+    # --- fault-injection schedule & severities (DESIGN.md §16) ---
+    # fault_mode 0: the all-nominal bitwise path — the arrival trace is
+    # zero, `repro.faults.fault_step` never activates a fault, and every
+    # fault-aware select in power/thermal/jobs/env takes its legacy branch.
+    # fault_mode 1: arrivals looked up from the (GRID_STEPS, D) indicator
+    # trace at t % GRID_STEPS activate the per-DC severities below for
+    # fault_duration steps. Set by `Scenario.attach_faults`; never perturbed.
+    fault_mode: Any      # int32 scalar
+    fault_arrival: Any   # (GRID_STEPS, D) f32 arrival indicator {0, 1}
+    fault_cool_eff: Any  # (D,) f32 cooling multiplier while active, (0, 1]
+    fault_cap_eff: Any   # (D,) f32 capacity multiplier while active, (0, 1]
+    fault_partition: Any # (D,) f32 partition indicator while active, {0, 1}
+    fault_duration: Any  # (D,) int32 fault duration (steps)
 
     # --- scalars ---
     dt: Any             # s per step
@@ -244,6 +301,12 @@ def make_params(
         grid_mode=jnp.int32(0),
         price_trace=jnp.zeros((GRID_STEPS, len(_DC_CLUSTERS)), jnp.float32),
         carbon_trace=jnp.zeros((GRID_STEPS, len(_DC_CLUSTERS)), jnp.float32),
+        fault_mode=jnp.int32(0),
+        fault_arrival=jnp.zeros((GRID_STEPS, len(_DC_CLUSTERS)), jnp.float32),
+        fault_cool_eff=jnp.ones((len(_DC_CLUSTERS),), jnp.float32),
+        fault_cap_eff=jnp.ones((len(_DC_CLUSTERS),), jnp.float32),
+        fault_partition=jnp.zeros((len(_DC_CLUSTERS),), jnp.float32),
+        fault_duration=jnp.zeros((len(_DC_CLUSTERS),), jnp.int32),
         dt=jnp.float32(dt),
         theta_soft=jnp.float32(theta_soft),
         theta_max=jnp.float32(theta_max),
@@ -260,8 +323,13 @@ def make_params(
 
 # Structural fields define the plant topology; scenarios may not touch them.
 # The grid-mode flag and signal traces are structural too: they are set by
-# `Scenario.attach_grid` through the repro.grid generators, never perturbed.
-_STRUCTURAL_FIELDS = ("dc_id", "is_gpu", "grid_mode", "price_trace", "carbon_trace")
+# `Scenario.attach_grid` through the repro.grid generators, never perturbed;
+# likewise the fault schedule/severity fields owned by `Scenario.attach_faults`.
+_STRUCTURAL_FIELDS = (
+    "dc_id", "is_gpu", "grid_mode", "price_trace", "carbon_trace",
+    "fault_mode", "fault_arrival", "fault_cool_eff", "fault_cap_eff",
+    "fault_partition", "fault_duration",
+)
 # Fields that must stay strictly positive (a zero tariff degenerates Eq. 9).
 _PRICE_FLOOR = 1e-4
 _PRICE_FIELDS = ("price_peak", "price_off")

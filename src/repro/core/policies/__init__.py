@@ -11,13 +11,14 @@ from repro.core.policies.h_mpc import (
     HMPCConfig,
     h_mpc_carbon_policy,
     h_mpc_policy,
+    h_mpc_resilient_policy,
     h_mpc_slo_policy,
 )
 
 
 def make_policy(name: str, dims, **kw) -> Policy:
     """Factory: random | greedy | thermal | power_cool | sc_mpc | h_mpc |
-    h_mpc_carbon | h_mpc_slo."""
+    h_mpc_carbon | h_mpc_slo | h_mpc_resilient."""
     table = {
         "random": random_policy,
         "greedy": greedy_policy,
@@ -27,6 +28,7 @@ def make_policy(name: str, dims, **kw) -> Policy:
         "h_mpc": h_mpc_policy,
         "h_mpc_carbon": h_mpc_carbon_policy,
         "h_mpc_slo": h_mpc_slo_policy,
+        "h_mpc_resilient": h_mpc_resilient_policy,
     }
     try:
         factory = table[name]

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import power, thermal
 from repro.core.mpc import rollout as plant
+from repro.faults import injection as faults_inj
 from repro.core.mpc.solvers import projected_adam
 from repro.core.params import EnvDims
 from repro.core.policies.base import Policy
@@ -74,6 +75,14 @@ class HMPCConfig:
     temporal_shift: bool = False
     defer_price_ratio: float = 0.97
     defer_pending_frac: float = 0.5
+    # resilience-aware capacity forecasting (DESIGN.md §16): discount each
+    # DC's predicted capacity by its active-fault envelope
+    # (`faults.capacity_envelope`) in both planning stages, so stage 1
+    # proactively routes load away from faulted DCs for as long as the
+    # fault persists instead of reacting to the throttle/backlog fallout.
+    # False (default) skips the branch at trace time — the fault-blind
+    # programs stay bitwise unchanged.
+    fault_aware: bool = False
 
 
 jax.tree_util.register_dataclass(
@@ -257,6 +266,8 @@ def _stage2(state, params, agg, cfg: HMPCConfig, pol: HMPCState, rho0, num_dcs: 
     queued = jnp.where(qvalid, state.queues.r, 0.0).sum(1)
     g = thermal.throttle_factor(state.theta, params)[params.dc_id]
     c_eff = params.c_max * g
+    if cfg.fault_aware:
+        c_eff = c_eff * faults_inj.capacity_envelope(state.faults)[params.dc_id]
 
     def seg_softmax(z):
         zmax = jax.ops.segment_max(z, group, num_segments=n_groups)
@@ -388,6 +399,32 @@ def h_mpc_slo_policy(dims: EnvDims, cfg: HMPCConfig | None = None) -> Policy:
     return h_mpc_policy(dims, cfg, name="h_mpc_slo")
 
 
+def h_mpc_resilient_policy(dims: EnvDims, cfg: HMPCConfig | None = None) -> Policy:
+    """Resilience-aware H-MPC: the full `h_mpc_slo` program (carbon-adjusted
+    planning + temporal shifting) *plus* fault-aware capacity forecasting
+    (DESIGN.md §16) — each DC's predicted capacity is discounted by its
+    active-fault envelope, so stage 1 migrates load off faulted sites
+    proactively instead of waiting for the backlog/throttle signal.
+
+    Built on the `h_mpc_slo` knobs so the resilience-experiment margin
+    (`h_mpc_resilient` vs `h_mpc_slo` under injection) isolates exactly
+    the fault-awareness delta. Like the other named factories, a cfg
+    without the defining knobs gets them forced on.
+    """
+    if cfg is None:
+        cfg = HMPCConfig(
+            w_carbon=SLO_CARBON_PRICE, temporal_shift=True, fault_aware=True
+        )
+    else:
+        if not cfg.w_carbon:
+            cfg = dataclasses.replace(cfg, w_carbon=SLO_CARBON_PRICE)
+        if not cfg.temporal_shift:
+            cfg = dataclasses.replace(cfg, temporal_shift=True)
+        if not cfg.fault_aware:
+            cfg = dataclasses.replace(cfg, fault_aware=True)
+    return h_mpc_policy(dims, cfg, name="h_mpc_resilient")
+
+
 def h_mpc_policy(
     dims: EnvDims, cfg: HMPCConfig = HMPCConfig(), name: str = "h_mpc"
 ) -> Policy:
@@ -405,6 +442,25 @@ def h_mpc_policy(
 
     def act(pol_state, state, offered, params, rng):
         agg = plant.aggregate_params(params, D)
+        if cfg.fault_aware:
+            # plan against fault-discounted DC capacity, *relatively*
+            # normalized: routing is driven by capacity ratios, so the
+            # discount shifts load off the worst-faulted sites for the
+            # remainder of the fault (DESIGN.md §16). Normalizing by the
+            # healthiest DC keeps the fleet-wide scales (utilization
+            # band, cost normalization) calibrated — an absolute
+            # discount under a symmetric fleet-wide fault would shrink
+            # the util-band target and defer work the plant can still
+            # serve, with no routing signal to show for it. The floor
+            # keeps capacity normalizations finite under a full-fleet
+            # partition.
+            envelope = faults_inj.capacity_envelope(state.faults)  # (D,)
+            envelope = jnp.maximum(
+                envelope / jnp.maximum(envelope.max(), 1e-3), 1e-3
+            )
+            agg = dataclasses.replace(
+                agg, c_max=agg.c_max * envelope[:, None]
+            )
         count, rbar, mu = _offered_stats(state, offered)
         e = cfg.ema
         pol_state = dataclasses.replace(

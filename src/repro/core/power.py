@@ -55,6 +55,22 @@ def power_step(power, util, phi_cool, params):
     return jnp.clip(power - draw + params.w_in, 0.0, params.p_max)
 
 
+def cooling_electrical_w(phi_cool, params, faults=None):
+    """(D,) electrical draw of the CRACs for delivered heat rejection phi_cool.
+
+    Nominally the CRAC COP is normalized into the model's units — delivered
+    heat rejection equals electrical draw (Eq. 4). An active cooling fault
+    degrades the COP by `cool_mult`, so the damaged unit burns
+    phi / cool_mult watts of electricity to reject the same phi watts of
+    heat (DESIGN.md §16). With faults=None or fault_mode=0 this is the
+    identity, which keeps every pre-fault golden bitwise.
+    """
+    if faults is None:
+        return phi_cool
+    eta = jnp.maximum(faults.cool_mult, 1e-3)
+    return jnp.where(params.fault_mode > 0, phi_cool / eta, phi_cool)
+
+
 def _dc_compute_w(util, params):
     """(D,) compute electrical draw per DC (segment sum over clusters)."""
     num_dcs = params.r_th.shape[0]

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.params import EnvDims
+from repro.faults.state import FaultState, init_faults
 
 # --------------------------------------------------------------------------
 # Service classes & deadlines (DESIGN.md §15). Every job carries a class id
@@ -96,6 +97,7 @@ class EnvState:
     setpoint: Any         # (D,) f32 current cooling setpoint
     cool_power: Any       # (D,) f32 last applied cooling power (W)
     price: Any            # (D,) f32 current electricity price ($/kWh)
+    faults: FaultState    # (D,)-leaf active-fault envelope (DESIGN.md §16)
     # global
     pending: PendingBuffer
     # cumulative counters (diagnostics; metrics proper are step outputs)
@@ -147,6 +149,7 @@ def init_state(dims: EnvDims, params, rng) -> EnvState:
         setpoint=params.setpoint_fixed,
         cool_power=jnp.zeros((d.num_dcs,), jnp.float32),
         price=params.price_off,
+        faults=init_faults(d.num_dcs),
         pending=PendingBuffer.zeros(d.pending_cap),
         completed=jnp.int32(0),
         dropped=jnp.int32(0),

@@ -28,15 +28,21 @@ def effective_capacity(theta, params):
     return params.c_max * g[params.dc_id]
 
 
-def pid_cooling(theta, setpoint, integral, prev_err, params):
-    """PID cooling power (Eq. 4) with anti-windup. Returns (phi_cool, I', e)."""
+def pid_cooling(theta, setpoint, integral, prev_err, params, cool_max=None):
+    """PID cooling power (Eq. 4) with anti-windup. Returns (phi_cool, I', e).
+
+    `cool_max` overrides the CRAC heat-rejection ceiling (and the
+    anti-windup ceiling with it) — the fault subsystem derates it while a
+    cooling fault is active (DESIGN.md §16). Default: params.cool_max.
+    """
+    cool_max = params.cool_max if cool_max is None else cool_max
     err = jnp.maximum(0.0, theta - setpoint)           # paper's one-sided error
     signed = theta - setpoint                          # used for integral decay
     integral = jnp.clip(
-        integral + signed * params.dt, 0.0, params.cool_max / params.ki
+        integral + signed * params.dt, 0.0, cool_max / params.ki
     )
     phi = params.kp * err + params.ki * integral + params.kd * (err - prev_err) / params.dt
-    phi = jnp.clip(phi, 0.0, params.cool_max)
+    phi = jnp.clip(phi, 0.0, cool_max)
     return phi, integral, err
 
 
@@ -65,10 +71,27 @@ def ambient_temperature(t, noise, params, steps_per_day: int = 288):
     return params.amb_base + params.amb_amp * jnp.sin(phase) + params.amb_sigma * noise
 
 
-def thermal_step(state_theta, theta_amb, setpoint, integral, prev_err, util, params):
-    """One full thermal transition. Returns (theta', I', e', phi_cool)."""
+def thermal_step(state_theta, theta_amb, setpoint, integral, prev_err, util, params,
+                 faults=None):
+    """One full thermal transition. Returns (theta', I', e', phi_cool).
+
+    When a `FaultState` is passed and fault injection is enabled
+    (params.fault_mode > 0), an active cooling fault derates the CRAC
+    heat-rejection ceiling to cool_max * cool_mult — the PID can no longer
+    command more rejection than the damaged unit delivers (DESIGN.md §16).
+    The matching COP penalty on *electrical* draw lives in
+    `power.cooling_electrical_w`. With faults=None (or fault_mode=0) this
+    is bitwise the legacy transition.
+    """
+    cool_max = None
+    if faults is not None:
+        cool_max = jnp.where(
+            params.fault_mode > 0,
+            params.cool_max * faults.cool_mult,
+            params.cool_max,
+        )
     phi_cool, integral, err = pid_cooling(
-        state_theta, setpoint, integral, prev_err, params
+        state_theta, setpoint, integral, prev_err, params, cool_max=cool_max
     )
     heat = compute_heat(util, params)
     theta = rc_step(state_theta, theta_amb, heat, phi_cool, params)

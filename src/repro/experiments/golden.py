@@ -46,6 +46,9 @@ DEFAULT_ATOL = {
     "slo_batch_pct": 0.5,
     # mean queue depths shift by a few jobs when those decisions flip
     "cpu_queue": 2.0, "gpu_queue": 2.0,
+    # fault exposure is policy-independent but SLO fallout under faults
+    # inherits the same threshold-adjacent flip sensitivity as above
+    "slo_interactive_violations": 10.0,
 }
 
 

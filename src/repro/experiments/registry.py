@@ -237,3 +237,61 @@ register(ExperimentSpec(
               scenario="deadline_pressure", min_value=99.0),
     ),
 ))
+
+
+register(ExperimentSpec(
+    name="resilience",
+    description="Fault-injection extension: resilience-aware H-MPC "
+                "(fault-discounted capacity forecasts, h_mpc_resilient) vs "
+                "the fault-blind h_mpc_slo under CRAC/PDU/partition faults "
+                "(DESIGN.md §16).",
+    paper_ref="Sec. V-C (resilience extension)",
+    full=ExperimentTier(
+        policies=("greedy", "h_mpc_slo", "h_mpc_resilient"),
+        scenarios=("crac_failure", "pdu_spike", "regional_outage",
+                   "cascading_heatwave_failure"),
+        seeds=3,
+        dims=EnvDims(),
+    ),
+    smoke=ExperimentTier(
+        policies=("h_mpc_slo", "h_mpc_resilient"),
+        scenarios=("regional_outage", "cascading_heatwave_failure"),
+        seeds=2,
+        # Fault response needs room in time for the same reason temporal
+        # shifting does (see the slo smoke tier): the regional outage
+        # spans 4 h and the recovery transient another 1-2 h, so the
+        # 24-step SMOKE window would end mid-fault. Reuses the slo smoke
+        # shape — 96 steps, deep queues/pending for the displaced load.
+        dims=EnvDims(horizon=96, max_arrivals=128, queue_cap=1024,
+                     run_cap=1024, pending_cap=512, admit_depth=128,
+                     policy_depth=256),
+        trace_overrides={"cap_per_step": 96},
+    ),
+    margins=(
+        # The headline resilience claims. On the scripted partition
+        # (deterministic fault arrival): fault-discounted planning must
+        # drop fewer jobs AND miss fewer interactive deadlines than
+        # fault-blind planning — the small absolute slacks cover seed
+        # noise in the workload draw.
+        Margin("dropped_jobs", better="h_mpc_resilient", worse="h_mpc_slo",
+               scenario="regional_outage", max_ratio=1.00, slack=2.0),
+        Margin("slo_interactive_violations",
+               better="h_mpc_resilient", worse="h_mpc_slo",
+               scenario="regional_outage", max_ratio=1.00, slack=5.0),
+        # On the compound heatwave cascade (random fleet-wide faults,
+        # every DC thermally stressed): migration targets are themselves
+        # degraded, so the requirement is no dropped-job regression and
+        # near-parity throughput (the blind policy may complete at most
+        # 2% more) — per-deadline deltas there are seed noise.
+        Margin("dropped_jobs", better="h_mpc_resilient", worse="h_mpc_slo",
+               scenario="cascading_heatwave_failure",
+               max_ratio=1.00, slack=2.0),
+        Margin("completed_jobs", better="h_mpc_slo",
+               worse="h_mpc_resilient",
+               scenario="cascading_heatwave_failure", max_ratio=1.02),
+        # Full tier only: proactive migration must also beat the
+        # fault-blind *classic* baseline on drops under the partition.
+        Margin("dropped_jobs", better="h_mpc_resilient", worse="greedy",
+               scenario="regional_outage", max_ratio=1.00, slack=2.0),
+    ),
+))

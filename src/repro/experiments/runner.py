@@ -45,6 +45,7 @@ ARTIFACT_METRICS = (
     "carbon_kg", "completed_jobs", "dropped_jobs",
     "slo_interactive_pct", "slo_batch_pct", "slo_violations",
     "slack_mean_steps", "preempted_jobs",
+    "fault_dc_steps", "fault_cap_lost_pct", "slo_interactive_violations",
 )
 
 

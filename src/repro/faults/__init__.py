@@ -1,0 +1,29 @@
+"""Fault-injection subsystem: trace-or-Poisson hardware faults threaded
+through the power/thermal/job physics (DESIGN.md §16).
+
+Public API:
+  - `FaultParams` (re-exported from core.params): static fault config
+  - `FaultState` / `init_faults`: the per-DC active-fault pytree
+  - `build_schedule(fp, seed, params)`: (GRID_STEPS, D) arrival trace
+  - `attach(params, fp, seed)`: EnvParams with fault_mode=1 + severities
+  - `fault_step(fs, t, params)`: the jitted per-step state machine
+  - `capacity_envelope(fs)`: the fault-aware H-MPC planning discount
+"""
+from __future__ import annotations
+
+from repro.core.params import FaultParams
+from repro.faults.injection import (
+    ARRIVAL_MODES,
+    FAULT_CHANNELS,
+    attach,
+    build_schedule,
+    capacity_envelope,
+    fault_step,
+)
+from repro.faults.state import FaultState, init_faults
+
+__all__ = [
+    "ARRIVAL_MODES", "FAULT_CHANNELS", "FaultParams", "FaultState",
+    "attach", "build_schedule", "capacity_envelope", "fault_step",
+    "init_faults",
+]

@@ -1,0 +1,169 @@
+"""Fault schedule generation and the jitted fault state machine
+(DESIGN.md §16).
+
+The split mirrors `repro.grid`: all randomness is spent at *attach* time —
+`build_schedule` turns one static `FaultParams` + a seed into a
+deterministic `(GRID_STEPS, D)` arrival-indicator trace stored on
+`EnvParams` — while `fault_step`, the in-episode state machine, is a pure
+deterministic function of (FaultState, t, params). The rollout's own PRNG
+stream is never consumed, which is one half of the fault_mode=0 bitwise
+contract; the other half is that every select in power/thermal/jobs/env
+routes through `jnp.where(params.fault_mode > 0, faulted, nominal)`.
+
+State-machine semantics per DC and step:
+
+1. an active fault's remaining-duration counter decrements (never below 0);
+2. an arrival indicator at step ``t % GRID_STEPS`` (re)arms an *idle* DC
+   for `fault_duration` steps — arrivals during an active fault are
+   absorbed, so faults never stack;
+3. the severity multipliers (`cool_mult`, `cap_mult`, `partition`) hold
+   their configured per-DC values exactly while ``remaining > 0`` and
+   their identity values (1.0 / 1.0 / 0.0) otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import EnvParams, FaultParams
+from repro.faults.state import FaultState
+
+#: The three severity channels every fault activates at once; scenario
+#: severities leave untouched channels at their identity values. The docs
+#: catalogue check (`tests/test_docs.py`) pins these names to the
+#: SIMULATOR_GUIDE "Faults & resilience" chapter.
+FAULT_CHANNELS = ("cooling", "capacity", "partition")
+
+ARRIVAL_MODES = ("poisson", "trace")
+
+#: Salt folded into the fault PRNG stream so Poisson fault arrivals are
+#: independent of both the rollout keys and the grid-market noise.
+_FAULT_SEED_SALT = 0x666C7473  # "flts"
+
+#: Floor on the efficiency multipliers: the (0, 1] contract (a zero
+#: cooling multiplier would make the CRAC COP correction divide by zero).
+_EFF_FLOOR = 1e-3
+
+
+def _ambient_modulation(ts, fp: FaultParams, params: EnvParams, steps: int):
+    """(T, D) arrival-rate modulation: 1 + heat_coupling * relu(diurnal).
+
+    Uses the noise-free normalized diurnal excess ((amb - base) / amp =
+    sin(phase), in [-1, 1]), so hardware fails preferentially in the
+    afternoon heat peak and never *less* often than the base rate."""
+    from repro.core import thermal
+
+    zero = jnp.zeros_like(params.amb_base)
+    amb = jax.vmap(
+        lambda t: thermal.ambient_temperature(
+            t.astype(jnp.float32), zero, params, steps
+        )
+    )(ts)                                                       # (T, D)
+    excess = (amb - params.amb_base) / jnp.maximum(params.amb_amp, 1e-6)
+    return 1.0 + fp.heat_coupling * jax.nn.relu(excess)
+
+
+@functools.partial(jax.jit, static_argnames=("fp", "steps"))
+def _build_schedule_jit(key, params: EnvParams, fp: FaultParams, steps: int):
+    num_dcs = params.r_th.shape[0]
+    if fp.arrival == "trace":
+        arr = jnp.zeros((steps, num_dcs), jnp.float32)
+        for step, dc in fp.schedule:
+            arr = arr.at[int(step) % steps, int(dc)].set(1.0)
+        return arr
+    if fp.arrival == "poisson":
+        ts = jnp.arange(steps, dtype=jnp.int32)
+        p = jnp.clip(
+            fp.rate * _ambient_modulation(ts, fp, params, steps), 0.0, 1.0
+        )
+        u = jax.random.uniform(key, (steps, num_dcs))
+        return (u < p).astype(jnp.float32)
+    raise ValueError(
+        f"FaultParams.arrival must be one of {ARRIVAL_MODES}, got {fp.arrival!r}"
+    )
+
+
+def build_schedule(
+    fp: FaultParams,
+    seed: int,
+    params: EnvParams,
+    steps: int | None = None,
+):
+    """Materialize the (steps, D) arrival-indicator trace for (fp, seed).
+
+    Deterministic per (fp, seed, params); jitted with the hashable
+    `FaultParams` static so seed sweeps pay one compile per fault config.
+    """
+    from repro.core.params import GRID_STEPS
+
+    steps = GRID_STEPS if steps is None else steps
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), _FAULT_SEED_SALT)
+    return _build_schedule_jit(key, params, fp, steps)
+
+
+def attach(params: EnvParams, fp: FaultParams, seed: int) -> EnvParams:
+    """Return `params` switched to fault injection (fault_mode=1).
+
+    Stores the seeded arrival trace plus the per-DC severity vectors,
+    clamped to their physical ranges: efficiency multipliers to
+    [1e-3, 1] (the (0, 1] contract), partition to {0, 1}-ish [0, 1].
+    """
+    num_dcs = params.r_th.shape[0]
+    for name in ("cool_eff", "cap_eff", "partition"):
+        if len(getattr(fp, name)) != num_dcs:
+            raise ValueError(
+                f"FaultParams.{name} must have {num_dcs} per-DC entries, "
+                f"got {len(getattr(fp, name))}"
+            )
+    return dataclasses.replace(
+        params,
+        fault_mode=jnp.int32(1),
+        fault_arrival=build_schedule(fp, seed, params),
+        fault_cool_eff=jnp.clip(
+            jnp.asarray(fp.cool_eff, jnp.float32), _EFF_FLOOR, 1.0
+        ),
+        fault_cap_eff=jnp.clip(
+            jnp.asarray(fp.cap_eff, jnp.float32), _EFF_FLOOR, 1.0
+        ),
+        fault_partition=jnp.clip(
+            jnp.asarray(fp.partition, jnp.float32), 0.0, 1.0
+        ),
+        fault_duration=jnp.full((num_dcs,), int(fp.duration), jnp.int32),
+    )
+
+
+@jax.jit
+def fault_step(fs: FaultState, t, params: EnvParams) -> FaultState:
+    """Advance the per-DC fault state machine by one step (semantics above).
+
+    With a zero arrival trace (fault_mode=0) this is an exact identity on
+    `init_faults`: remaining stays 0 and every multiplier reproduces its
+    nominal value bitwise.
+    """
+    arr = params.fault_arrival[t % params.fault_arrival.shape[0]]   # (D,)
+    rem = jnp.maximum(fs.remaining - 1, 0)
+    new = (arr > 0.0) & (rem <= 0)
+    rem = jnp.where(new, params.fault_duration, rem)
+    active = rem > 0
+    return FaultState(
+        cool_mult=jnp.where(active, params.fault_cool_eff, 1.0),
+        cap_mult=jnp.where(active, params.fault_cap_eff, 1.0),
+        partition=jnp.where(active, params.fault_partition, 0.0),
+        remaining=rem,
+    )
+
+
+def capacity_envelope(fs: FaultState):
+    """(D,) usable-capacity fraction under the active-fault envelope.
+
+    Direct capacity loss (`cap_mult`) times the partition cut (a
+    partitioned DC takes no new load at all) times the cooling multiplier
+    (degraded heat rejection forecasts thermal throttling). Healthy DCs
+    give exactly 1.0. The `fault_cap_lost_pct` metric reports the mean of
+    ``1 - envelope``; the fault-aware H-MPC plans against a *relatively*
+    normalized form of it (see `policies.h_mpc`).
+    """
+    return fs.cap_mult * fs.cool_mult * (1.0 - fs.partition)

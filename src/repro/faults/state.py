@@ -1,0 +1,46 @@
+"""The per-DC fault state pytree (DESIGN.md §16).
+
+Deliberately a leaf module (jax-only imports): `repro.core.state` embeds
+`FaultState` in `EnvState`, and `repro.faults.injection` advances it, so
+neither side may depend on the other through this file.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultState:
+    """Active-fault envelope of the fleet, advanced by `faults.fault_step`.
+
+    All leaves are (D,). The nominal (fault-free) state is multipliers at
+    1.0, partition at 0.0, and remaining at 0 — `init_faults` — and
+    `fault_step` is an exact identity on it whenever the arrival trace is
+    zero (fault_mode=0), which is what keeps pre-fault goldens bitwise.
+    """
+
+    cool_mult: Any   # (D,) f32 active cooling-efficiency multiplier, (0, 1]
+    cap_mult: Any    # (D,) f32 active compute-capacity multiplier, (0, 1]
+    partition: Any   # (D,) f32 network-partition mask, {0, 1}
+    remaining: Any   # (D,) i32 remaining fault duration (steps)
+
+
+jax.tree_util.register_dataclass(
+    FaultState,
+    data_fields=["cool_mult", "cap_mult", "partition", "remaining"],
+    meta_fields=[],
+)
+
+
+def init_faults(num_dcs: int) -> FaultState:
+    """The nominal (all-healthy) fault state."""
+    return FaultState(
+        cool_mult=jnp.ones((num_dcs,), jnp.float32),
+        cap_mult=jnp.ones((num_dcs,), jnp.float32),
+        partition=jnp.zeros((num_dcs,), jnp.float32),
+        remaining=jnp.zeros((num_dcs,), jnp.int32),
+    )

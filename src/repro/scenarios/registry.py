@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-from repro.core.params import GridParams
+from repro.core.params import FaultParams, GridParams
 from repro.scenarios.spec import Scenario
 
 _REGISTRY: Dict[str, Scenario] = {}
@@ -194,4 +194,60 @@ register(Scenario(
     description="Calibrated three-class mix (30/50/20) with nominal slack "
                 "laws on the Table-I plant; the SLO-accounting baseline.",
     trace_overrides={"class_mode": 1},
+))
+
+# ---------------------------------------------------------------------------
+# Fault-injection scenarios (DESIGN.md §16): fault_mode=1 arms the per-DC
+# fault state machine with a seeded Poisson or scripted arrival trace and
+# per-DC severities. All four run the SLO-tagged trace (class_mode=1) so
+# fault fallout is visible in the interactive-SLO metrics, not just drops.
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    name="crac_failure",
+    description="Random CRAC unit failures: Poisson fault arrivals derate "
+                "a DC's cooling efficiency to 40% for ~2 h (reduced heat "
+                "rejection at 2.5x the electrical draw per delivered watt); "
+                "stresses thermal headroom and fault-aware routing.",
+    trace_overrides={"class_mode": 1},
+    faults=FaultParams(arrival="poisson", rate=0.02, duration=24,
+                       cool_eff=(0.4, 0.4, 0.4, 0.4)),
+))
+
+register(Scenario(
+    name="pdu_spike",
+    description="Power-distribution faults: frequent short Poisson events "
+                "(~20 min) halve a DC's usable compute capacity — hosts "
+                "shed behind a tripped PDU; stresses admission and "
+                "best-effort preemption under sudden capacity loss.",
+    trace_overrides={"class_mode": 1},
+    faults=FaultParams(arrival="poisson", rate=0.03, duration=4,
+                       cap_eff=(0.5, 0.5, 0.5, 0.5)),
+))
+
+register(Scenario(
+    name="regional_outage",
+    description="Scripted regional incident: a network partition cuts the "
+                "Phoenix DC off early in the episode for 4 h — no new "
+                "placements or admissions there, residual capacity at 40% "
+                "— then heals. Deterministic (trace arrival), so parity "
+                "tests can pin it bitwise.",
+    trace_overrides={"class_mode": 1},
+    faults=FaultParams(arrival="trace", schedule=((4, 1),), duration=48,
+                       cap_eff=(1.0, 0.4, 1.0, 1.0),
+                       partition=(0.0, 1.0, 0.0, 0.0)),
+))
+
+register(Scenario(
+    name="cascading_heatwave_failure",
+    description="Heatwave-correlated cascade: the heatwave plant (+8 degC "
+                "mean, +3 degC swing) with heat-coupled Poisson fault "
+                "arrivals (rate rises up to 4x at the afternoon peak) "
+                "degrading cooling to 50% and capacity to 70% for ~1.5 h; "
+                "the compound-stress regime for resilience-aware control.",
+    trace_overrides={"class_mode": 1},
+    param_offset={"amb_base": 8.0, "amb_amp": 3.0},
+    faults=FaultParams(arrival="poisson", rate=0.01, heat_coupling=3.0,
+                       duration=18, cool_eff=(0.5, 0.5, 0.5, 0.5),
+                       cap_eff=(0.7, 0.7, 0.7, 0.7)),
 ))

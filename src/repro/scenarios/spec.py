@@ -14,7 +14,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping, Optional
 
-from repro.core.params import EnvDims, EnvParams, GridParams, make_params, perturb
+from repro.core.params import (
+    EnvDims, EnvParams, FaultParams, GridParams, make_params, perturb,
+)
 from repro.core.workload import Trace, synthesize_trace
 
 
@@ -32,6 +34,12 @@ class Scenario:
     when set, `attach_grid` switches the perturbed plant to trace-driven
     price/carbon signals generated per seed by `repro.grid`; when None the
     plant keeps the legacy TOU + constant-carbon formulas (grid_mode 0).
+
+    `faults` optionally names a fault-injection configuration (DESIGN.md
+    §16): when set, `attach_faults` switches the plant to fault_mode=1
+    with a seeded arrival trace and per-DC severities built by
+    `repro.faults`; when None the plant stays fault-free (fault_mode 0,
+    the bitwise legacy path).
     """
 
     name: str
@@ -41,6 +49,7 @@ class Scenario:
     param_offset: Mapping[str, float] = dataclasses.field(default_factory=dict)
     param_replace: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     grid: Optional[GridParams] = None
+    faults: Optional[FaultParams] = None
 
     def build_params(self, base: EnvParams | None = None) -> EnvParams:
         """Perturbed plant parameters (bounds enforced by `perturb`)."""
@@ -66,6 +75,20 @@ class Scenario:
         from repro import grid as grid_mod
 
         return grid_mod.attach(params, self.grid, seed)
+
+    def attach_faults(self, params: EnvParams, seed: int) -> EnvParams:
+        """Seeded fault injection on top of the perturbed plant.
+
+        Identity when the scenario declares no `faults`; otherwise returns
+        `params` with fault_mode=1, the seeded (GRID_STEPS, D) arrival
+        trace, and the per-DC severity vectors (DESIGN.md §16). Called per
+        (scenario, seed) cell by `suite.build_cells` after `attach_grid`.
+        """
+        if self.faults is None:
+            return params
+        from repro import faults as faults_mod
+
+        return faults_mod.attach(params, self.faults, seed)
 
     def build_trace(self, seed: int, dims: EnvDims, params: EnvParams) -> Trace:
         """Seeded workload trace under this scenario's arrival process."""

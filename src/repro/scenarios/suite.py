@@ -117,6 +117,9 @@ def build_cells(
             # grid-signal traces are seeded per cell (market noise is part
             # of the Monte-Carlo draw); a no-op for grid-less scenarios
             cell_params = scen.attach_grid(scen_params, k)
+            # fault arrival schedules are likewise seeded per cell; a
+            # no-op for fault-free scenarios (fault_mode stays 0)
+            cell_params = scen.attach_faults(cell_params, k)
             params_cells.append(cell_params)
             trace_cells.append(scen.build_trace(k, dims, cell_params))
             rng_cells.append(jax.random.PRNGKey(k))

@@ -157,6 +157,47 @@ def test_guide_documents_service_classes():
         assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor!r}"
 
 
+def test_guide_documents_fault_catalogue():
+    """The SIMULATOR_GUIDE's "Faults & resilience" chapter must catalogue
+    every fault channel (`faults.FAULT_CHANNELS`), every arrival mode,
+    every `FaultParams` severity field, and the fault-injection scenarios,
+    like the grid-generator and service-class catalogues."""
+    import dataclasses
+
+    from repro.core.params import FaultParams
+    from repro.faults import ARRIVAL_MODES, FAULT_CHANNELS
+    from repro.scenarios import all_scenarios
+
+    text = _read("SIMULATOR_GUIDE.md")
+    assert "## Faults & resilience" in text, (
+        "SIMULATOR_GUIDE.md must have a 'Faults & resilience' chapter"
+    )
+    undocumented = [n for n in FAULT_CHANNELS if f"`{n}`" not in text]
+    assert not undocumented, (
+        f"SIMULATOR_GUIDE.md fault-channel catalogue is missing: "
+        f"{undocumented}"
+    )
+    for mode in ARRIVAL_MODES:
+        assert f'"{mode}"' in text or f"`{mode}`" in text, (
+            f"SIMULATOR_GUIDE.md must document the {mode!r} arrival mode"
+        )
+    undocumented = [
+        f.name for f in dataclasses.fields(FaultParams)
+        if f"`{f.name}`" not in text and f.name != "arrival"
+    ]
+    assert not undocumented, (
+        f"SIMULATOR_GUIDE.md is missing FaultParams fields: {undocumented}"
+    )
+    fault_scens = [s.name for s in all_scenarios() if s.faults is not None]
+    assert fault_scens, "no fault scenarios registered — registry broke?"
+    undocumented = [n for n in fault_scens if f"`{n}`" not in text]
+    assert not undocumented, (
+        f"SIMULATOR_GUIDE.md fault-scenario table is missing: {undocumented}"
+    )
+    for anchor in ("`fault_mode`", "`h_mpc_resilient`", "`fault_aware`"):
+        assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor}"
+
+
 def test_guide_maps_experiments_to_paper_artifacts():
     """The SIMULATOR_GUIDE's experiment chapter must name the paper
     table/figure each spec reproduces."""

@@ -14,10 +14,11 @@ from repro.core import EnvDims, make_params, metrics
 from repro.core.env import rollout_params
 from repro.core.policies import make_policy
 from repro.experiments import (
-    ARTIFACT_METRICS, ExperimentSpec, ExperimentTier, Margin,
-    check_margins, compare_to_golden, registry, resolve_scenarios,
-    run_experiment, write_artifacts,
+    ARTIFACT_METRICS, Bound, ExperimentResult, ExperimentSpec,
+    ExperimentTier, Margin, check_bounds, check_margins, compare_to_golden,
+    registry, resolve_scenarios, run_experiment, write_artifacts,
 )
+from repro.experiments import runner as runner_mod
 from repro.experiments import golden as golden_mod
 from repro.experiments.__main__ import main as cli_main
 
@@ -288,6 +289,131 @@ def test_registered_margins_hold_on_smoke_goldens():
             better = gold["table"][mg.better][mg.scenario][mg.metric]["mean"]
             worse = gold["table"][mg.worse][mg.scenario][mg.metric]["mean"]
             assert better <= mg.max_ratio * worse + mg.slack, (spec.name, mg)
+
+
+def _fake_result(spec, values, tier="smoke"):
+    """Synthetic ExperimentResult with canned cell means — no rollout.
+
+    `values`: {(policy, scenario, metric): mean}; every other cell is 0.
+    Lets the bound/margin/refusal paths be unit-tested directly instead of
+    only through a full experiment run."""
+    t = spec.smoke if tier == "smoke" else spec.full
+    pols, scens = tuple(t.policies), tuple(t.scenario_names())
+    table = {
+        p: {s: {m: {"mean": 0.0, "std": 0.0, "per_seed": [0.0]}
+                for m in ARTIFACT_METRICS} for s in scens}
+        for p in pols
+    }
+    for (p, s, m), v in values.items():
+        table[p][s][m] = {"mean": v, "std": 0.0, "per_seed": [v]}
+    return ExperimentResult(
+        experiment=spec.name, tier=tier, paper_ref=spec.paper_ref,
+        policies=pols, scenarios=scens, seeds=1,
+        dims={"horizon": t.dims.horizon}, table=table,
+        runtime={"wall_s": 0.0, "batch_mode": "vmap"},
+    )
+
+
+def test_check_bounds_direct():
+    """check_bounds unit-tested on synthetic results: min and max sides
+    fire independently, in-band values pass, and bounds naming absent
+    policies/scenarios are skipped rather than crashed."""
+    spec = tiny_spec()
+    spec = ExperimentSpec(
+        name=spec.name, description=spec.description,
+        paper_ref=spec.paper_ref, full=spec.full, smoke=spec.smoke,
+        bounds=(
+            Bound("slo_interactive_pct", policy="greedy",
+                  scenario="nominal", min_value=99.0),
+            Bound("dropped_jobs", policy="greedy", scenario="nominal",
+                  max_value=5.0),
+            Bound("cost_usd", policy="h_mpc", scenario="nominal",
+                  min_value=1.0),          # absent policy: skipped
+            Bound("cost_usd", policy="greedy", scenario="heatwave",
+                  min_value=1.0),          # absent scenario: skipped
+        ),
+    )
+    ok = _fake_result(spec, {
+        ("greedy", "nominal", "slo_interactive_pct"): 99.5,
+        ("greedy", "nominal", "dropped_jobs"): 0.0,
+    })
+    assert check_bounds(ok, spec) == []
+
+    bad = _fake_result(spec, {
+        ("greedy", "nominal", "slo_interactive_pct"): 97.0,  # < min 99
+        ("greedy", "nominal", "dropped_jobs"): 12.0,         # > max 5
+    })
+    violations = check_bounds(bad, spec)
+    assert len(violations) == 2
+    assert any("< min 99" in v and "slo_interactive_pct" in v
+               for v in violations)
+    assert any("> max 5" in v and "dropped_jobs" in v for v in violations)
+
+
+def test_check_margins_direct_on_synthetic_result():
+    """check_margins on canned means: the max_ratio * worse + slack limit
+    is evaluated exactly as documented."""
+    spec = tiny_spec(policies=("greedy", "h_mpc"), margins=[
+        Margin("dropped_jobs", better="h_mpc", worse="greedy",
+               scenario="nominal", max_ratio=1.0, slack=2.0),
+    ])
+    ok = _fake_result(spec, {
+        ("greedy", "nominal", "dropped_jobs"): 10.0,
+        ("h_mpc", "nominal", "dropped_jobs"): 12.0,  # == limit, passes
+    })
+    assert check_margins(ok, spec) == []
+    bad = _fake_result(spec, {
+        ("greedy", "nominal", "dropped_jobs"): 10.0,
+        ("h_mpc", "nominal", "dropped_jobs"): 12.5,  # > 1.0*10 + 2
+    })
+    violations = check_margins(bad, spec)
+    assert violations and "margin violated" in violations[0]
+
+
+def test_update_golden_refusal_paths_direct(tmp_path, monkeypatch, capsys):
+    """The --update-golden refusal branch, unit-tested with a stubbed
+    runner (no rollout): a result violating the spec's own margins OR
+    bounds must never be frozen, and the refusal is printed to stderr."""
+    spec = tiny_spec(name="refuse", policies=("greedy", "h_mpc"), margins=[
+        Margin("dropped_jobs", better="h_mpc", worse="greedy",
+               scenario="nominal", max_ratio=1.0),
+    ])
+    bad = _fake_result(spec, {
+        ("greedy", "nominal", "dropped_jobs"): 1.0,
+        ("h_mpc", "nominal", "dropped_jobs"): 50.0,
+    })
+    monkeypatch.setattr(registry, "_REGISTRY", {"refuse": spec})
+    monkeypatch.setattr(runner_mod, "run_experiment",
+                        lambda *a, **k: bad)
+    out = str(tmp_path)
+    rc = cli_main(["run", "--exp", "refuse", "--smoke", "--out", out,
+                   "--update-golden"])
+    gpath = golden_mod.golden_path("refuse", "smoke", out)
+    assert rc == 1
+    assert not os.path.exists(gpath)
+    assert "golden NOT updated" in capsys.readouterr().err
+
+    # bound violations refuse the freeze through the same gate
+    spec_b = ExperimentSpec(
+        name="refuse", description="test-only", paper_ref="none",
+        full=spec.full, smoke=spec.smoke,
+        bounds=(Bound("slo_interactive_pct", policy="greedy",
+                      scenario="nominal", min_value=99.0),),
+    )
+    monkeypatch.setattr(registry, "_REGISTRY", {"refuse": spec_b})
+    rc = cli_main(["run", "--exp", "refuse", "--smoke", "--out", out,
+                   "--update-golden"])
+    assert rc == 1 and not os.path.exists(gpath)
+
+    # and a clean result on the same path DOES freeze
+    clean = _fake_result(spec_b, {
+        ("greedy", "nominal", "slo_interactive_pct"): 99.9,
+    })
+    monkeypatch.setattr(runner_mod, "run_experiment",
+                        lambda *a, **k: clean)
+    rc = cli_main(["run", "--exp", "refuse", "--smoke", "--out", out,
+                   "--update-golden"])
+    assert rc == 0 and os.path.exists(gpath)
 
 
 # ----------------------------------------------------------------- CLI

@@ -1,0 +1,126 @@
+"""Golden-stability regression: with the fault subsystem compiled into
+every rollout but disabled (`fault_mode=0`, the default), the four
+pre-existing smoke experiments must reproduce their committed goldens
+*bitwise* — not merely within the 2% gate band. This guards the identity
+claim the fault tentpole rests on (DESIGN.md §16): every fault hook in
+power/thermal/jobs/env routes through `jnp.where(params.fault_mode > 0,
+faulted, nominal)` and the fault schedule spends no rollout randomness,
+so a disabled fault subsystem is invisible down to the last ulp.
+
+Backend coverage: vmap and chunked for all four experiments, plus scan
+in-process and shard in an 8-device subprocess for `nominal` (the other
+tiers are class-tagged or grid-driven supersets of the same code paths;
+scan/shard reduction-order flips on tagged tables are covered with
+tolerances in test_experiments.py / test_multidevice.py)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.experiments import golden as golden_mod
+from repro.experiments import registry, run_experiment
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "results")
+
+#: The smoke goldens that predate the fault subsystem. `resilience` is
+#: deliberately absent — it runs with fault_mode=1 and has its own gate.
+PRE_FAULT_EXPERIMENTS = ("nominal", "sensitivity", "carbon", "slo")
+
+
+def _committed_golden(name):
+    gold = golden_mod.load_golden(
+        golden_mod.golden_path(name, "smoke", RESULTS))
+    assert gold is not None, f"missing committed smoke golden for {name}"
+    return gold
+
+
+def _assert_bitwise(result, gold, label):
+    """Every (policy, scenario, metric) cell — mean, std, AND the raw
+    per-seed values — must equal the committed golden exactly. Floats
+    round-trip JSON exactly (json uses repr), so `==` is bitwise."""
+    metrics = tuple(gold.get("metrics") or ())
+    assert metrics, f"{label}: golden has no frozen metrics list"
+    for pol in gold["policies"]:
+        for scen in gold["scenarios"]:
+            for m in metrics:
+                want = gold["table"][pol][scen][m]
+                got = result.table[pol][scen][m]
+                assert got["mean"] == want["mean"], (
+                    f"{label}/{pol}/{scen}/{m}: mean {got['mean']!r} != "
+                    f"golden {want['mean']!r} (fault_mode=0 is not bitwise)")
+                assert got["std"] == want["std"], (
+                    f"{label}/{pol}/{scen}/{m}: std drifted")
+                assert list(got["per_seed"]) == list(want["per_seed"]), (
+                    f"{label}/{pol}/{scen}/{m}: per-seed values drifted")
+
+
+@pytest.mark.parametrize("name", PRE_FAULT_EXPERIMENTS)
+def test_smoke_goldens_bitwise_with_faults_disabled(name):
+    """vmap + chunked: the artifact is byte-for-byte what was frozen
+    before `src/repro/faults/` existed."""
+    spec = registry.get(name)
+    gold = _committed_golden(name)
+    res_v = run_experiment(spec, smoke=True, batch_mode="vmap")
+    _assert_bitwise(res_v, gold, f"{name}/vmap")
+    res_c = run_experiment(spec, smoke=True, batch_mode="chunked",
+                           chunk_size=4)
+    _assert_bitwise(res_c, gold, f"{name}/chunked")
+
+
+def test_nominal_smoke_golden_bitwise_under_scan():
+    """scan reorders the metric reductions inside `lax.map`, but the
+    runner aggregates raw StepInfo on the host in float64, so even scan
+    reproduces the untagged nominal golden bitwise."""
+    res = run_experiment(registry.get("nominal"), smoke=True,
+                         batch_mode="scan")
+    _assert_bitwise(res, _committed_golden("nominal"), "nominal/scan")
+
+
+def test_nominal_smoke_golden_bitwise_under_shard():
+    """shard needs >1 device, so it runs in an 8-device subprocess (same
+    pattern as test_multidevice.py) and compares against the committed
+    golden in there."""
+    script = """
+import warnings; warnings.filterwarnings("ignore")
+import jax
+from repro.experiments import golden as golden_mod
+from repro.experiments import registry, run_experiment
+
+assert len(jax.devices()) == 8
+gold = golden_mod.load_golden(golden_mod.golden_path(
+    "nominal", "smoke", {results!r}))
+res = run_experiment(registry.get("nominal"), smoke=True,
+                     batch_mode="shard")
+for pol in gold["policies"]:
+    for scen in gold["scenarios"]:
+        for m in gold["metrics"]:
+            want = gold["table"][pol][scen][m]
+            got = res.table[pol][scen][m]
+            assert got["mean"] == want["mean"], (pol, scen, m, got, want)
+            assert list(got["per_seed"]) == list(want["per_seed"]), (
+                pol, scen, m)
+print("GOLDEN-SHARD-OK")
+""".format(results=RESULTS)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "GOLDEN-SHARD-OK" in out.stdout
+
+
+def test_committed_goldens_predate_fault_metrics():
+    """The four pre-fault goldens must NOT list the fault metrics — their
+    frozen `metrics` tuple is what `compare_to_golden` gates on, and
+    freezing fault columns into them would silently rewrite history. The
+    resilience golden, frozen after the tentpole, must list them."""
+    for name in PRE_FAULT_EXPERIMENTS:
+        gold = _committed_golden(name)
+        assert "fault_dc_steps" not in gold["metrics"], name
+    res_gold = _committed_golden("resilience")
+    assert {"fault_dc_steps", "fault_cap_lost_pct",
+            "slo_interactive_violations"} <= set(res_gold["metrics"])

@@ -155,11 +155,13 @@ print("PIPELINE-OK", err)
 def test_suite_shard_backend_matches_vmap():
     """Device-sharded scenario evaluation: `batch_mode="shard"` over an
     8-device cells mesh must reproduce the single-device vmap metrics
-    bitwise (9 cells pad to 16, exercising edge-replication padding).
+    bitwise (12 cells pad to 16, exercising edge-replication padding).
     `duck_curve` puts a trace-driven grid cell (grid_mode=1) in the mix,
-    so the sharded params pytree carries mixed grid modes, and
-    `mixed_slo` adds a class-tagged cell (class_mode=1) so the sharded
-    traces carry real service classes and deadlines."""
+    so the sharded params pytree carries mixed grid modes, `mixed_slo`
+    adds a class-tagged cell (class_mode=1) so the sharded traces carry
+    real service classes and deadlines, and `regional_outage` adds a
+    fault-active cell (fault_mode=1, scripted partition) so the sharded
+    params carry a live fault arrival trace and severity vectors."""
     _run("""
 import warnings; warnings.filterwarnings("ignore")
 import jax, numpy as np
@@ -171,14 +173,16 @@ assert len(jax.devices()) == 8
 dims = EnvDims(horizon=12, max_arrivals=32, queue_cap=64, run_cap=64,
                pending_cap=32, admit_depth=32, policy_depth=64)
 assert select_batch_mode(6, dims) == "shard"   # auto picks shard here
-kw = dict(scenarios=["nominal", "duck_curve", "mixed_slo"], seeds=3, dims=dims)
+kw = dict(scenarios=["nominal", "duck_curve", "mixed_slo", "regional_outage"],
+          seeds=3, dims=dims)
 rv = evaluate_suite(["greedy"], batch_mode="vmap", **kw)
 rs = evaluate_suite(["greedy"], batch_mode="shard", **kw)
 for scen in rv.scenarios:
     for key, v in rv.cells["greedy"][scen].items():
-        if scen == "mixed_slo":
-            # tagged cell: threshold-guarded preempt decisions may flip
-            # between backends (runner docstring) — tolerance, not bitwise
+        if scen in ("mixed_slo", "regional_outage"):
+            # tagged cells (both run class_mode=1): threshold-guarded
+            # preempt decisions may flip between backends (runner
+            # docstring) — tolerance, not bitwise
             np.testing.assert_allclose(
                 v, rs.cells["greedy"][scen][key], rtol=0.02, atol=25.0,
                 err_msg=f"{scen}/{key}")

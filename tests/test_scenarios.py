@@ -143,15 +143,19 @@ def test_evaluate_suite_matches_per_episode_rollout():
 
 
 def test_evaluate_suite_backends_identical():
-    """Backend parity on a 2-scenario x 2-seed grid. chunked is bitwise
-    equal to vmap (it IS a vmap per chunk; the chunk size of 3 forces
-    edge-replication padding, 4 cells -> 6). scan may differ by float32
-    round-off — XLA fuses the metric reductions differently inside
+    """Backend parity on a 3-scenario x 2-seed grid — one nominal cell, one
+    workload-stressed cell, and one *fault-active* cell (regional_outage:
+    fault_mode=1, scripted partition), so the parity contract covers the
+    fault state machine and every fault hook in the physics. chunked is
+    bitwise equal to vmap (it IS a vmap per chunk; the chunk size of 4
+    forces edge-replication padding, 6 cells -> 8). scan may differ by
+    float32 round-off — XLA fuses the metric reductions differently inside
     `lax.map` — so it gets a few-ulp relative tolerance (5e-7 ~ 4 ulps)
     instead of array_equal."""
-    kw = dict(scenarios=["nominal", "flash_crowd"], seeds=2, dims=DIMS)
+    kw = dict(scenarios=["nominal", "flash_crowd", "regional_outage"],
+              seeds=2, dims=DIMS)
     res_v = evaluate_suite(["greedy"], batch_mode="vmap", **kw)
-    res_c = evaluate_suite(["greedy"], batch_mode="chunked", chunk_size=3, **kw)
+    res_c = evaluate_suite(["greedy"], batch_mode="chunked", chunk_size=4, **kw)
     res_s = evaluate_suite(["greedy"], batch_mode="scan", **kw)
     for scen in res_v.scenarios:
         want = res_v.cells["greedy"][scen]
