@@ -1,19 +1,23 @@
 """Job-engine micro-benchmark: admission + tick throughput across
-service-class mixes (DESIGN.md §15).
+service-class mixes (DESIGN.md §15, §17).
 
-  PYTHONPATH=src python -m benchmarks.bench_jobs
+  PYTHONPATH=src python -m benchmarks.bench_jobs [--fast] [--backend B]
   PYTHONPATH=src python -m benchmarks.run --only jobs
 
 Times the full per-step engine pipeline — merge offered, insert
-arrivals, the fused tick+preempt (`tick_and_preempt`, exactly what
-`env.step` runs), interactive promotion, FIFO+backfill admission — as
-one jitted `lax.scan` over a synthetic episode, reporting jobs/sec and
-steps/sec per class mix. The untagged mix exercises the legacy identity
-path; the tagged mixes exercise promotion and preemption for real.
+arrivals, then the fused execution stage `jobs_tick` (tick+preempt,
+interactive promotion, FIFO+backfill admission — exactly what `env.step`
+runs, through the same backend dispatcher) — as one jitted `lax.scan`
+over a synthetic episode, reporting jobs/sec and steps/sec per class
+mix. The untagged mix exercises the legacy identity path; the tagged
+mixes exercise promotion and preemption for real. `--backend` selects
+the engine ("ref"/"pallas"/"auto", default auto — the Pallas kernel on
+TPU, the sort engine elsewhere).
 
 Writes BENCH_jobs.latest.json at the repo root; the committed
 BENCH_jobs.json baseline is updated via `benchmarks.check_regression
---update` and gated within ±30% like the other baselines. The scan is
+--update` (use `--only jobs` to ratchet just this baseline) and both
+jobs/sec and steps/sec are gated per mix within ±30%. The scan is
 timed on its second call, so compilation is excluded.
 """
 
@@ -59,12 +63,14 @@ def _bench_dims(fast: bool) -> EnvDims:
                    policy_depth=512)
 
 
-def _engine_scan(dims: EnvDims, params):
+def _engine_scan(dims: EnvDims, params, backend: str = "auto"):
     """One jitted scan of the bare job-engine pipeline over the trace.
 
     Round-robin placement stands in for a policy so the measurement is
     the engine, not a scheduler; capacity is derated to 80% so the
-    preemption path sees genuine pressure once utilization builds.
+    preemption path sees genuine pressure once utilization builds. The
+    execution stage routes through the `jobs_tick` dispatcher, so the
+    bench measures whichever backend `env.step` would run.
     """
     C = dims.num_clusters
     c_eff = 0.8 * params.c_max
@@ -80,12 +86,9 @@ def _engine_scan(dims: EnvDims, params):
         )
         queues, _ = jobs_mod.insert_arrivals(queues, offered, assign, C)
         pending, _ = jobs_mod.refill_pending(offered, assign, dims.pending_cap)
-        queues, running, tick, n_pre, _ = jobs_mod.tick_and_preempt(
-            queues, running, c_eff, t
-        )
-        queues = jobs_mod.promote_interactive(queues, window=dims.admit_depth)
-        queues, running = jobs_mod.admit_backfill(
-            queues, running, c_eff, power_ok, dims.admit_depth
+        queues, running, tick, n_pre, _ = jobs_mod.jobs_tick(
+            queues, running, c_eff, power_ok, t, dims.admit_depth,
+            backend=backend,
         )
         return (queues, running, pending, t + 1), (tick.n_done, n_pre)
 
@@ -102,11 +105,12 @@ def _engine_scan(dims: EnvDims, params):
     return jax.jit(run)
 
 
-def main(fast: bool = False, out_path: str = BENCH_LATEST):
+def main(fast: bool = False, out_path: str = BENCH_LATEST,
+         backend: str = "auto"):
     dims = _bench_dims(fast)
     params = make_params()
     out: Dict[str, Dict[str, float]] = {}
-    run = _engine_scan(dims, params)  # one compile serves every mix
+    run = _engine_scan(dims, params, backend)  # one compile serves every mix
     for name, mix in MIXES.items():
         kw = {} if mix is None else {"class_mode": 1, "class_mix": mix}
         trace = synthesize_trace(0, dims, params, **kw)
@@ -133,6 +137,7 @@ def main(fast: bool = False, out_path: str = BENCH_LATEST):
     payload = {
         "bench": "jobs",
         "fast": fast,
+        "engine_backend": backend,
         "jax_backend": jax.default_backend(),
         "device_count": len(jax.devices()),
         "per_mix": out,
@@ -144,4 +149,14 @@ def main(fast: bool = False, out_path: str = BENCH_LATEST):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.bench_jobs")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller dims (the committed-baseline shape)")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "ref", "pallas"),
+                    help="jobs_tick backend (default auto)")
+    ap.add_argument("--out", default=BENCH_LATEST)
+    a = ap.parse_args()
+    main(fast=a.fast, out_path=a.out, backend=a.backend)

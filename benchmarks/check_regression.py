@@ -1,6 +1,7 @@
 """Bench-regression gate: fresh steps/sec vs the committed baselines.
 
-    PYTHONPATH=src python -m benchmarks.check_regression [--update] [--warn-only]
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--update] [--warn-only] [--only SUITE ...]
 
 Re-runs the `scenarios`, `kernels`, `grid`, `jobs`, and `faults` benchmarks
 with the same `fast` flag each committed baseline (`BENCH_scenarios.json` /
@@ -14,8 +15,9 @@ with the same `fast` flag each committed baseline (`BENCH_scenarios.json` /
   run that a plain runner won't reproduce);
 - grid: `per_generator[*].traces_per_s` (grid-signal trace builds) and
   `carbon_rollout[*].steps_per_s` (trace-driven scenario rollouts);
-- jobs: `per_mix[*].jobs_per_s` (job-engine admission+tick throughput
-  per service-class mix);
+- jobs: `per_mix[*].jobs_per_s` AND `per_mix[*].steps_per_s` per
+  service-class mix (job throughput tracks the workload draw; step
+  throughput is the engine hot-path contract DESIGN.md §17 ratchets);
 - faults: `per_fault_schedule[*].schedules_per_s` (fault-arrival trace
   builds) and `fault_rollout[*].steps_per_s` (fault-armed vs stripped
   rollouts);
@@ -31,6 +33,10 @@ band can fail: fresh > 1.3x baseline is reported as a stale baseline
 Confirmed slowdowns fail **hard locally** and **warn on CI** (`$CI` set,
 as GitHub Actions does: shared runners are too noisy for a wall-clock
 contract). Wired into `make check` and `.github/workflows/ci.yml`.
+
+`--only` restricts the run to the named suite(s) — `--update --only jobs`
+ratchets just BENCH_jobs.json after an engine speedup without
+re-measuring (or rewriting) the other baselines.
 """
 from __future__ import annotations
 
@@ -91,7 +97,11 @@ def jobs_pairs(baseline: Dict, fresh: Dict) -> Pairs:
     for mix, b in baseline.get("per_mix", {}).items():
         f = fresh.get("per_mix", {}).get(mix)
         if f:
-            pairs.append((f"jobs/{mix}", b["jobs_per_s"], f["jobs_per_s"]))
+            pairs.append((f"jobs/{mix}/jobs", b["jobs_per_s"], f["jobs_per_s"]))
+            # older baselines predate the steps_per_s field
+            if "steps_per_s" in b and "steps_per_s" in f:
+                pairs.append((f"jobs/{mix}/steps",
+                              b["steps_per_s"], f["steps_per_s"]))
     return pairs
 
 
@@ -212,6 +222,9 @@ def main(argv=None) -> int:
                     help=f"relative tolerance band (default {BAND})")
     ap.add_argument("--retries", type=int, default=2,
                     help="extra fresh runs (best-of) before believing a slowdown")
+    ap.add_argument("--only", action="append", choices=sorted(BASELINES),
+                    metavar="SUITE",
+                    help="restrict to the named suite(s); repeatable")
     args = ap.parse_args(argv)
     warn_only = args.warn_only or bool(os.environ.get("CI"))
 
@@ -226,6 +239,8 @@ def main(argv=None) -> int:
         ("jobs", bench_jobs, jobs_pairs),
         ("faults", bench_faults, faults_pairs),
     )
+    if args.only:
+        suites = tuple(s for s in suites if s[0] in args.only)
 
     runs = 1 + max(0, args.retries)
 

@@ -109,16 +109,13 @@ class DataCenterGym:
         #    stages are exact identities (DESIGN.md §15).
         c_eff = thermal_mod.effective_capacity(state.theta, params)
         c_eff = jobs_mod.fault_capacity(c_eff, faults, params)
-        queues, running, tick, n_preempted, drop_e = jobs_mod.tick_and_preempt(
-            queues, state.running, c_eff, state.t
-        )
-        n_done = tick.n_done
-        queues = jobs_mod.promote_interactive(queues, window=dims.admit_depth)
         power_ok = (state.power > 0.0).astype(jnp.float32)
         power_ok = jobs_mod.admission_gate(power_ok, faults, params)
-        queues, running = jobs_mod.admit_backfill(
-            queues, running, c_eff, power_ok, dims.admit_depth
+        queues, running, tick, n_preempted, drop_e = jobs_mod.jobs_tick(
+            queues, state.running, c_eff, power_ok, state.t,
+            dims.admit_depth, backend=dims.jobs_backend,
         )
+        n_done = tick.n_done
         util = jobs_mod.job_utilization(running)
 
         # 3. cooling + thermal transition (Eqs. 3-4) under the commanded setpoints.

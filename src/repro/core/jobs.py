@@ -1,5 +1,6 @@
 """Static-shape job execution engine: FIFO queues + backfilling admission,
-now class-aware (DESIGN.md §15).
+class-aware (DESIGN.md §15), with every table write one fused key-order
+pass (DESIGN.md §17).
 
 The paper's execution model (Sec. V-A "Job Completion Tracking"): jobs
 process in FIFO order up to available capacity; if a job doesn't fit,
@@ -9,8 +10,8 @@ decrement remaining duration each step until completion.
 Service classes refine that model without changing its shape discipline:
 
 - **interactive** (`CLS_INTERACTIVE`) jobs bypass the backfilling queue —
-  `promote_interactive` stable-reorders each cluster queue so they admit
-  first (FIFO preserved within each class);
+  `promote_interactive` reorders each cluster queue so they admit first
+  (FIFO preserved within each class);
 - **batch** (`CLS_BATCH`) jobs keep the legacy FIFO+backfill behavior;
 - **best-effort** (`CLS_BEST_EFFORT`) jobs are preempt-on-capacity-
   pressure: when thermal throttling (or cooling derating) pushes active
@@ -29,12 +30,31 @@ program: queues/running sets are (C, CAP) tables compacted each step, and
 admission is a bounded-depth lax.scan over queue positions, vectorized
 across clusters (DESIGN.md §5.2, §6).
 
-Hot-path notes: XLA:CPU scatters are far slower than its sort, so every
-multi-column table write goes through ONE scatter on a (..., 5)-packed
-array — the int32 columns ride as bitcast float32 lanes, a bit-exact
-round trip (`_pack_cols`/`_unpack_cols`) — while reorderings stay on the
-stable-argsort + cheap-gather path; `tick_and_preempt` folds completion
-removal and best-effort eviction into a single compaction.
+Hot-path notes (DESIGN.md §17): the PR-5 engine — even with all five job
+columns packed into one scatter per write — landed at ~0.65x pre-class
+rollout throughput, dominated by the stable argsorts behind every
+compaction/promotion (XLA:CPU comparison sorts run a comparator call per
+element pair) and by the per-queue-position scatters inside the
+admission scan. This engine reorders tables by the composite keys of
+`repro.core.sortkeys` instead:
+
+- every reordering write (compaction, interactive promotion, pending
+  refill) computes the key order in linear time (`sortkeys.group_order`:
+  cumsum ranks + vectorized binary search — bitwise the stable-argsort
+  permutation at ~1/6 the cost) and applies it with ONE gather of the
+  five columns packed into float32 lanes;
+- every appending write (arrival insertion, eviction re-queue, admission
+  merge) lands the appendix behind the FIFO prefix with ONE packed
+  scatter at cumsum-ranked slots — in particular the admission scan now
+  carries only (C,) mask vectors and merges once after the scan, instead
+  of one packed scatter per queue position;
+- invalid tails are zeroed on every write, so tables carry no stale rows.
+
+The PR-5 scatter engine survives verbatim in `repro.core.jobs_scatter`
+as the differential-test oracle: `tests/test_jobs_engine.py` asserts the
+two agree bitwise on the valid region for arbitrary tables, tagged or
+not. The fused per-step pipeline (`jobs_tick`) can also dispatch to the
+Pallas `kernels.jobs_tick` kernel on TPU via `EnvDims.jobs_backend`.
 """
 from __future__ import annotations
 
@@ -43,10 +63,17 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import sortkeys as sk
 from repro.core.state import (
     CLS_BEST_EFFORT, CLS_INTERACTIVE, NO_DEADLINE, NUM_CLASSES,
-    Arrivals, JobTable, PendingBuffer,
+    Arrivals, JobTable, PendingBuffer, table_active_mask,
 )
+
+#: Merge groups of the composite sort keys (low bits = FIFO position).
+#: KEEP rows order before APPEND rows before PARK rows; PARK parks both
+#: dropped rows and inert padding, where the post-reorder zero-mask (or
+#: a scatter drop) erases them.
+_G_KEEP, _G_APPEND, _G_PARK = 0, 1, 2
 
 
 def _pack_cols(r, dur, prio, cls, deadline):
@@ -66,30 +93,65 @@ def _unpack_cols(packed):
             bi(packed[..., 3]), bi(packed[..., 4]))
 
 
-def _take_rows(table: JobTable, order) -> JobTable:
-    """Reorder every per-job column of `table` by `order` (count kept)."""
-    take = lambda a: jnp.take_along_axis(a, order, axis=1)
-    return JobTable(
-        r=take(table.r), dur=take(table.dur), prio=take(table.prio),
-        cls=take(table.cls), deadline=take(table.deadline), count=table.count,
+def _zero_tail(cols, valid):
+    """Zero every column outside the `valid` mask (no stale rows)."""
+    r, dur, prio, cls, deadline = cols
+    return (
+        jnp.where(valid, r, 0.0),
+        jnp.where(valid, dur, 0),
+        jnp.where(valid, prio, 0),
+        jnp.where(valid, cls, 0),
+        jnp.where(valid, deadline, 0),
     )
+
+
+def _table_cols(table: JobTable):
+    return (table.r, table.dur, table.prio, table.cls, table.deadline)
+
+
+def _take_rows(table: JobTable, order):
+    """Apply a row permutation: ONE gather of the packed five columns."""
+    packed = _pack_cols(*_table_cols(table))
+    return _unpack_cols(jnp.take_along_axis(packed, order[..., None], axis=1))
 
 
 def _compact(table: JobTable, keep, cap: int) -> JobTable:
-    """Stable-compact kept rows to the front; count = #kept. keep: (C,CAP) bool."""
-    order = jnp.argsort(~keep, axis=1, stable=True)  # kept rows first, FIFO kept
+    """Stable-compact kept rows to the front; count = #kept. keep: (C,CAP) bool.
+
+    One key-order pass on (keep-bit, position): kept rows first in FIFO
+    order, dropped rows parked behind and zeroed. Bitwise identical to
+    the scatter engine's stable argsort + gather + mask.
+    """
+    pos = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    order = sk.group_order(jnp.where(keep, _G_KEEP, _G_APPEND), 2)
+    cols = _take_rows(table, order)
     new_count = keep.sum(axis=1).astype(jnp.int32)
-    idx = jnp.arange(cap)[None, :]
-    valid = idx < new_count[:, None]
-    t = _take_rows(table, order)
-    return JobTable(
-        r=jnp.where(valid, t.r, 0.0),
-        dur=jnp.where(valid, t.dur, 0),
-        prio=jnp.where(valid, t.prio, 0),
-        cls=jnp.where(valid, t.cls, 0),
-        deadline=jnp.where(valid, t.deadline, 0),
-        count=new_count,
-    )
+    cols = _zero_tail(cols, pos < new_count[:, None])
+    return JobTable(*cols, count=new_count)
+
+
+def _merge_append(base: JobTable, cap: int, app_cols, app_mask) -> Tuple[JobTable, jnp.ndarray]:
+    """Append `app_mask` rows of `app_cols` to each cluster's table tail.
+
+    The append primitive behind eviction re-queueing and the admission
+    merge: `app_mask` rows keep their relative (FIFO) order, landing at
+    slots count + rank in ONE packed scatter (slots are unique per
+    cluster; rows past `cap` drop — exactly the rows a bounds-checked
+    write would lose). The written slots [count, new_count) are
+    contiguous, so a zero-tailed base stays zero-tailed without a
+    re-mask. Returns ``(table', n_dropped)``.
+    """
+    num_clusters = app_mask.shape[0]
+    rank = jnp.cumsum(app_mask, axis=1) - app_mask.astype(jnp.int32)
+    slot = jnp.where(app_mask, base.count[:, None] + rank, cap)
+    rowc = jnp.arange(num_clusters)[:, None]
+    packed = _pack_cols(*_table_cols(base))
+    packed = packed.at[rowc, slot].set(_pack_cols(*app_cols), mode="drop")
+    cols = _unpack_cols(packed)
+    n_app = app_mask.sum(axis=1).astype(jnp.int32)
+    new_count = jnp.minimum(base.count + n_app, cap)
+    n_dropped = (base.count + n_app - new_count).sum().astype(jnp.int32)
+    return JobTable(*cols, count=new_count), n_dropped
 
 
 class TickStats(NamedTuple):
@@ -105,9 +167,7 @@ class TickStats(NamedTuple):
 def _tick_masks(running: JobTable, t):
     """Shared tick core: decremented durations, the done mask, and the
     per-class `TickStats` (masked reductions — NUM_CLASSES is static)."""
-    cap = running.r.shape[1]
-    idx = jnp.arange(cap)[None, :]
-    active = idx < running.count[:, None]
+    active = table_active_mask(running)
     dur = jnp.where(active, running.dur - 1, running.dur)
     done = active & (dur <= 0)
 
@@ -147,43 +207,44 @@ def tick_running(running: JobTable, t) -> Tuple[JobTable, TickStats]:
 
 
 def promote_interactive(queues: JobTable, window: int | None = None) -> JobTable:
-    """Stable-reorder each cluster queue so interactive jobs admit first.
+    """Reorder each cluster queue so interactive jobs admit first.
 
-    FIFO order is preserved within each class (stable sort on the
-    "is interactive" key), so on a single-class queue this is an exact
-    identity — the class-blind bitwise contract.
+    One key-order pass on (class-group, position): interactive-active
+    rows first, other active rows next, inactive rows parked — FIFO
+    preserved within each group, so on a single-class queue this is an
+    exact identity (the class-blind bitwise contract).
 
-    `window` bounds the sort to the first `window` queue positions (None
-    = whole queue). `env.step` passes `admit_depth`: admission never
-    looks past it, so sorting deeper buys nothing this step — a full
-    argsort over `queue_cap` columns was the single largest class-layer
-    hot-path cost. Interactive jobs deeper than the window bubble
-    forward as the queue drains (the sort re-runs every step).
+    `window` bounds the reorder to the first `window` queue positions
+    (None = whole queue). `env.step` passes `admit_depth`: admission
+    never looks past it, so reordering deeper buys nothing this step.
+    Interactive jobs deeper than the window bubble forward as the queue
+    drains (the pass re-runs every step).
     """
     cap = queues.r.shape[1]
     w = cap if window is None else min(window, cap)
-    idx = jnp.arange(w)[None, :]
-    active = idx < queues.count[:, None]
-    cls_w = queues.cls[:, :w]
-    # inactive rows sort last; interactive first among the active rows
-    key = jnp.where(active, jnp.where(cls_w == CLS_INTERACTIVE, 0, 1), 2)
-    order = jnp.argsort(key, axis=1, stable=True)
-    take = lambda a: jnp.concatenate(
-        [jnp.take_along_axis(a[:, :w], order, axis=1), a[:, w:]], axis=1
+    pos = jnp.arange(w, dtype=jnp.int32)[None, :]
+    active = pos < queues.count[:, None]
+    grp = jnp.where(
+        active,
+        jnp.where(queues.cls[:, :w] == CLS_INTERACTIVE, _G_KEEP, _G_APPEND),
+        _G_PARK,
     )
-    return JobTable(
-        r=take(queues.r), dur=take(queues.dur), prio=take(queues.prio),
-        cls=take(queues.cls), deadline=take(queues.deadline),
-        count=queues.count,
+    order = sk.group_order(grp, 3)
+    packed = _pack_cols(*(c[:, :w] for c in _table_cols(queues)))
+    head = _unpack_cols(jnp.take_along_axis(packed, order[..., None], axis=1))
+    cols = tuple(
+        jnp.concatenate([h, c[:, w:]], axis=1)
+        for h, c in zip(head, _table_cols(queues))
     )
+    return JobTable(*cols, count=queues.count)
 
 
 #: Max best-effort evictions per cluster per step. Bounds the preemption
 #: *throughput*, not the total: sustained pressure keeps evicting on
 #: subsequent steps (thermal throttling develops over minutes, so a few
-#: steps of lag is physical). The bound is what makes the eviction
-#: append cheap — a (C, PREEMPT_CAP) top-k gather + scatter instead of a
-#: full (C, run_cap)-wide scatter on the per-step hot path.
+#: steps of lag is physical). The bound is what keeps the eviction
+#: append narrow — a (C, PREEMPT_CAP) top-k gather merged by one packed
+#: scatter instead of a (C, run_cap)-wide appendix on the hot path.
 PREEMPT_CAP = 8
 
 
@@ -207,9 +268,10 @@ def _evict_best_effort(running: JobTable, alive, c_eff):
 def _append_evicted(queues: JobTable, src: JobTable, evict) -> Tuple[JobTable, jnp.ndarray]:
     """Append the (<= PREEMPT_CAP per cluster) `evict`-masked rows of
     `src` to each cluster's queue tail, oldest first. top-k gathers the
-    evicted rows so the scatter touches PREEMPT_CAP slots per cluster,
-    not the whole running width. Returns (queues', n_dropped)."""
-    num_clusters, rcap = src.r.shape
+    evicted rows into a (C, PREEMPT_CAP) appendix, then one packed
+    scatter lands it behind the queue (`_merge_append`) — nothing wider
+    than PREEMPT_CAP ever moves. Returns (queues', n_dropped)."""
+    rcap = src.r.shape[1]
     qcap = queues.r.shape[1]
     k = min(PREEMPT_CAP, rcap)
     # indices of evicted rows, newest-first via top_k, reversed to
@@ -219,19 +281,10 @@ def _append_evicted(queues: JobTable, src: JobTable, evict) -> Tuple[JobTable, j
     ord_idx = top[:, ::-1]                               # oldest first, -1s lead
     real = ord_idx >= 0
     gidx = jnp.clip(ord_idx, 0, rcap - 1)
-    packed_src = _pack_cols(src.r, src.dur, src.prio, src.cls, src.deadline)
-    rows = jnp.take_along_axis(packed_src, gidx[:, :, None], axis=1)  # (C,k,5)
-    rank = jnp.cumsum(real, axis=1) - real.astype(jnp.int32)
-    slot = jnp.where(real, queues.count[:, None] + rank, qcap)
-    rowc = jnp.where(real, jnp.arange(num_clusters)[:, None], num_clusters)
-    packed_q = _pack_cols(queues.r, queues.dur, queues.prio,
-                          queues.cls, queues.deadline)
-    packed_q = packed_q.at[rowc, slot].set(rows, mode="drop")
-    q_r, q_d, q_p, q_c, q_dl = _unpack_cols(packed_q)
-    n_mv = real.sum(axis=1).astype(jnp.int32)
-    new_count = jnp.minimum(queues.count + n_mv, qcap)
-    n_dropped = (queues.count + n_mv - new_count).sum().astype(jnp.int32)
-    return JobTable(q_r, q_d, q_p, q_c, q_dl, new_count), n_dropped
+    rows = tuple(
+        jnp.take_along_axis(c, gidx, axis=1) for c in _table_cols(src)
+    )                                                    # (C, k) each
+    return _merge_append(queues, qcap, rows, real)
 
 
 def preempt_best_effort(
@@ -252,8 +305,7 @@ def preempt_best_effort(
     evictions); this standalone form is the unit-testable building block.
     """
     rcap = running.r.shape[1]
-    idx = jnp.arange(rcap)[None, :]
-    active = idx < running.count[:, None]
+    active = table_active_mask(running)
     evict = _evict_best_effort(running, active, c_eff)
     new_running = _compact(running, active & ~evict, rcap)
     new_queues, n_dropped = _append_evicted(queues, running, evict)
@@ -266,11 +318,11 @@ def tick_and_preempt(
     """Fused `tick_running` + `preempt_best_effort` (one compaction).
 
     Completion removal and best-effort eviction are disjoint row drops on
-    the same table, so a single stable compaction implements both at
-    nearly half the hot-path cost. Semantics match the two-pass form —
-    same jobs ticked, same eviction rule — but the capacity-pressure
-    sums reduce over pre-compaction positions, so the eviction threshold
-    can differ from the two-pass form by float round-off exactly at the
+    the same table, so a single compaction implements both at nearly
+    half the hot-path cost. Semantics match the two-pass form — same
+    jobs ticked, same eviction rule — but the capacity-pressure sums
+    reduce over pre-compaction positions, so the eviction threshold can
+    differ from the two-pass form by float round-off exactly at the
     boundary. On single-class (untagged) tables eviction is identically
     false either way: the legacy path stays bitwise. Returns
     ``(queues', running', TickStats, n_preempted, n_dropped)``.
@@ -334,30 +386,30 @@ def insert_arrivals(
 ) -> Tuple[JobTable, jnp.ndarray]:
     """Append jobs with assign in [0, C) to their cluster queue (FIFO order).
 
-    Returns (queues', n_dropped) where drops are queue-capacity overflows.
+    Job j's slot is count[assign_j] + its FIFO rank among same-cluster
+    placements (a cumsum over the cluster one-hot); the whole batch lands
+    in ONE packed scatter of J rows. Returns (queues', n_dropped) where
+    drops are queue-capacity overflows — the newest placed jobs, whose
+    out-of-range slots ``mode="drop"`` discards.
     """
     cap = queues.r.shape[1]
     placed = jobs.valid & (assign >= 0)
-    cl = jnp.where(placed, assign, num_clusters)  # C = out-of-range -> dropped
-    onehot = (cl[:, None] == jnp.arange(num_clusters)[None, :])
-    rank = jnp.cumsum(onehot, axis=0) - onehot.astype(jnp.int32)  # arrivals FIFO rank
-    rank_j = jnp.take_along_axis(
-        rank, jnp.clip(cl, 0, num_clusters - 1)[:, None], axis=1
-    )[:, 0]
-    slot = jnp.where(placed, queues.count[jnp.clip(cl, 0, num_clusters - 1)] + rank_j, cap)
-    row = jnp.where(placed, cl, num_clusters)
-
-    packed_q = _pack_cols(queues.r, queues.dur, queues.prio,
-                          queues.cls, queues.deadline)
-    packed_jobs = _pack_cols(jobs.r, jobs.dur, jobs.prio,
-                             jobs.cls, jobs.deadline)
-    packed_q = packed_q.at[row, slot].set(packed_jobs, mode="drop")
-    q_r, q_d, q_p, q_c, q_dl = _unpack_cols(packed_q)
-
+    cl = jnp.where(placed, assign, num_clusters).astype(jnp.int32)
+    onehot = cl[:, None] == jnp.arange(num_clusters, dtype=jnp.int32)[None, :]
+    # FIFO rank of job j within its own cluster's placements: the running
+    # count of its one-hot column, read back through the one-hot itself
+    rank = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(axis=1)
+    base = queues.count[jnp.clip(cl, 0, num_clusters - 1)]
+    slot = jnp.where(placed, base + rank, cap)
+    rowc = jnp.where(placed, cl, num_clusters)
+    packed = _pack_cols(*_table_cols(queues))
+    rows = _pack_cols(jobs.r, jobs.dur, jobs.prio, jobs.cls, jobs.deadline)
+    packed = packed.at[rowc, slot].set(rows, mode="drop")
+    cols = _unpack_cols(packed)
     n_assigned = onehot.sum(axis=0).astype(jnp.int32)
     new_count = jnp.minimum(queues.count + n_assigned, cap)
     n_dropped = (queues.count + n_assigned - new_count).sum().astype(jnp.int32)
-    return JobTable(q_r, q_d, q_p, q_c, q_dl, new_count), n_dropped
+    return JobTable(*cols, count=new_count), n_dropped
 
 
 def admit_backfill(
@@ -370,57 +422,110 @@ def admit_backfill(
     """FIFO + backfill admission: greedy pass over the first `admit_depth`
     queue positions (vectorized across clusters).
 
-    A job at position k starts iff r <= remaining headroom, the running table
-    has a free slot, and the cluster's power budget is positive. Class
-    priority is positional: run `promote_interactive` first so interactive
-    jobs occupy the front of the scan window.
+    A job at position k starts iff r <= remaining headroom, the running
+    table has a free slot, and the cluster's power budget is positive.
+    Class priority is positional: run `promote_interactive` first so
+    interactive jobs occupy the front of the scan window.
+
+    The greedy recurrence is inherently sequential (each admission
+    shrinks the headroom the next decision sees), but only the
+    *decisions* are: the scan carries (C,) scalars and emits the
+    admitted mask, then ONE packed scatter lands the admitted window
+    rows behind the running set and one compaction closes the queue —
+    the scatter engine paid one packed row-scatter per queue position
+    here, the dominant hot-path cost.
     """
     num_clusters, qcap = queues.r.shape
     rcap = running.r.shape[1]
     depth = min(admit_depth, qcap)
-    cidx = jnp.arange(num_clusters)
 
     util0 = job_utilization(running)
     rem0 = jnp.maximum(c_eff - util0, 0.0) * power_ok
-    packed_queues = _pack_cols(queues.r, queues.dur, queues.prio,
-                               queues.cls, queues.deadline)  # (C, qcap, 5)
-    packed_run0 = _pack_cols(running.r, running.dur, running.prio,
-                             running.cls, running.deadline)  # (C, rcap, 5)
 
     def body(carry, xs):
-        packed_run, run_cnt, rem = carry
-        k, = xs
-        job_r = queues.r[:, k]
+        run_cnt, rem = carry
+        job_r, k = xs                            # (C,), scalar
         in_queue = k < queues.count
         fits = in_queue & (job_r <= rem) & (job_r > 0.0) & (run_cnt < rcap)
         rem = rem - jnp.where(fits, job_r, 0.0)
-        slot = jnp.where(fits, run_cnt, rcap)  # rcap = OOB -> dropped write
-        packed_run = packed_run.at[cidx, slot].set(
-            packed_queues[:, k, :], mode="drop"
-        )
         run_cnt = run_cnt + fits.astype(jnp.int32)
-        return (packed_run, run_cnt, rem), fits
+        return (run_cnt, rem), fits
 
-    carry0 = (packed_run0, running.count, rem0)
-    (packed_run, run_cnt, _), admitted = jax.lax.scan(
-        body, carry0, (jnp.arange(depth),)
+    (_, _), admitted = jax.lax.scan(
+        body, (running.count, rem0),
+        (queues.r[:, :depth].T, jnp.arange(depth)),
     )
-    admitted = admitted.T  # (C, depth)
-    admitted_full = jnp.zeros((num_clusters, qcap), bool).at[:, :depth].set(admitted)
+    admitted = admitted.T                        # (C, depth)
 
-    idx = jnp.arange(qcap)[None, :]
-    keep = (idx < queues.count[:, None]) & ~admitted_full
+    window_cols = tuple(c[:, :depth] for c in _table_cols(queues))
+    running, _ = _merge_append(running, rcap, window_cols, admitted)
+
+    admitted_full = jnp.concatenate(
+        [admitted, jnp.zeros((num_clusters, qcap - depth), bool)], axis=1)
+    keep = table_active_mask(queues) & ~admitted_full
     queues = _compact(queues, keep, qcap)
-    run_r, run_d, run_p, run_c, run_dl = _unpack_cols(packed_run)
-    running = JobTable(run_r, run_d, run_p, run_c, run_dl, run_cnt)
     return queues, running
+
+
+def engine_tick(
+    queues: JobTable, running: JobTable, c_eff, power_ok, t, admit_depth: int
+) -> Tuple[JobTable, JobTable, TickStats, jnp.ndarray, jnp.ndarray]:
+    """The fused per-step execution stage `env.step` runs (DESIGN.md §17):
+    tick completions + best-effort preemption (one compaction), promote
+    interactive jobs into the admission window, FIFO+backfill admission.
+
+    This is the reference composition the Pallas `kernels.jobs_tick`
+    kernel reproduces per cluster in VMEM; `jobs_tick` dispatches between
+    the two. Returns ``(queues', running', TickStats, n_preempted,
+    n_dropped)``.
+    """
+    queues, running, stats, n_pre, n_drop = tick_and_preempt(
+        queues, running, c_eff, t
+    )
+    queues = promote_interactive(queues, window=admit_depth)
+    queues, running = admit_backfill(
+        queues, running, c_eff, power_ok, admit_depth
+    )
+    return queues, running, stats, n_pre, n_drop
+
+
+def jobs_tick(
+    queues: JobTable,
+    running: JobTable,
+    c_eff,
+    power_ok,
+    t,
+    admit_depth: int,
+    backend: str = "auto",
+) -> Tuple[JobTable, JobTable, TickStats, jnp.ndarray, jnp.ndarray]:
+    """Backend-dispatched `engine_tick` (threaded from `EnvDims.jobs_backend`,
+    mirroring `HMPCConfig.thermal_backend`, DESIGN.md §12/§17):
+
+    - "pallas": the VMEM-resident per-cluster Pallas kernel
+                (`kernels.jobs_tick`),
+    - "ref":    the fused sort-engine composition above — also the
+                kernel's documented CPU fallback (`kernels.ref`
+                delegates here),
+    - "auto":   pallas on TPU, ref elsewhere (the kernel's interpret
+                mode is correct on CPU but adds no speed).
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        from repro.kernels.jobs_tick import jobs_tick as jobs_tick_kernel
+
+        return jobs_tick_kernel(
+            queues, running, c_eff, power_ok, t, admit_depth
+        )
+    if backend == "ref":
+        return engine_tick(queues, running, c_eff, power_ok, t, admit_depth)
+    raise ValueError(
+        f"backend must be 'auto', 'pallas', or 'ref', got {backend!r}")
 
 
 def job_utilization(running: JobTable):
     """(C,) active demand u_i = sum of r over running jobs."""
-    cap = running.r.shape[1]
-    active = jnp.arange(cap)[None, :] < running.count[:, None]
-    return jnp.where(active, running.r, 0.0).sum(axis=1)
+    return jnp.where(table_active_mask(running), running.r, 0.0).sum(axis=1)
 
 
 def merge_offered(pending: PendingBuffer, arrivals: Arrivals) -> Arrivals:
@@ -442,12 +547,13 @@ def refill_pending(
 ) -> Tuple[PendingBuffer, jnp.ndarray]:
     """Jobs the policy deferred (assign == -1) form the next pending buffer.
 
-    Stable order keeps older jobs first. Overflow beyond pending_cap drops
-    (counted).
+    One key-order pass on (deferred-bit, position) keeps older jobs
+    first; overflow beyond pending_cap drops (counted).
     """
     deferred = offered.valid & (assign < 0)
-    order = jnp.argsort(~deferred, stable=True)
-    take = lambda a: jnp.take(a, order)[:pending_cap]
+    order = sk.group_order(
+        jnp.where(deferred, _G_KEEP, _G_APPEND)[None, :], 2)[0]
+    take = lambda c: jnp.take(c, order[:pending_cap])
     n_def = deferred.sum().astype(jnp.int32)
     idx = jnp.arange(pending_cap)
     valid = idx < jnp.minimum(n_def, pending_cap)

@@ -1,0 +1,445 @@
+"""The PR-5 *scatter-based* job engine, frozen as a differential oracle.
+
+This module is a verbatim snapshot of `repro.core.jobs` as it stood
+before the sort-based rewrite (DESIGN.md §17): every multi-column table
+write goes through ONE scatter on a (..., 5)-packed array (int32 columns
+bitcast to float32 lanes). The live engine in `repro.core.jobs` replaced
+those scatters with fused key-sorts because XLA:CPU scatters dominated
+the rollout hot path; the two implementations are required to agree —
+**bitwise** on untagged tables and semantically (same completions,
+violations, preemption sets) on tagged ones.
+
+`tests/test_jobs_engine.py` runs randomized job tables through both
+engines side by side. Nothing in the simulator imports this module; it
+exists only as the executable specification the sort engine is diffed
+against. Do not "optimize" it — its value is that it stays exactly what
+shipped in PR 5.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import (
+    CLS_BEST_EFFORT, CLS_INTERACTIVE, NO_DEADLINE, NUM_CLASSES,
+    Arrivals, JobTable, PendingBuffer,
+)
+
+
+def _pack_cols(r, dur, prio, cls, deadline):
+    """Stack the five per-job columns on a trailing axis as float32 lanes.
+
+    Integer columns are bitcast, not converted — the bits round-trip
+    exactly through `_unpack_cols`, and nothing arithmetic ever touches
+    the packed array (only scatter/gather/copy), so packing is bit-exact.
+    """
+    b = lambda a: jax.lax.bitcast_convert_type(a, jnp.float32)
+    return jnp.stack([r, b(dur), b(prio), b(cls), b(deadline)], axis=-1)
+
+
+def _unpack_cols(packed):
+    bi = lambda a: jax.lax.bitcast_convert_type(a, jnp.int32)
+    return (packed[..., 0], bi(packed[..., 1]), bi(packed[..., 2]),
+            bi(packed[..., 3]), bi(packed[..., 4]))
+
+
+def _take_rows(table: JobTable, order) -> JobTable:
+    """Reorder every per-job column of `table` by `order` (count kept)."""
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)
+    return JobTable(
+        r=take(table.r), dur=take(table.dur), prio=take(table.prio),
+        cls=take(table.cls), deadline=take(table.deadline), count=table.count,
+    )
+
+
+def _compact(table: JobTable, keep, cap: int) -> JobTable:
+    """Stable-compact kept rows to the front; count = #kept. keep: (C,CAP) bool."""
+    order = jnp.argsort(~keep, axis=1, stable=True)  # kept rows first, FIFO kept
+    new_count = keep.sum(axis=1).astype(jnp.int32)
+    idx = jnp.arange(cap)[None, :]
+    valid = idx < new_count[:, None]
+    t = _take_rows(table, order)
+    return JobTable(
+        r=jnp.where(valid, t.r, 0.0),
+        dur=jnp.where(valid, t.dur, 0),
+        prio=jnp.where(valid, t.prio, 0),
+        cls=jnp.where(valid, t.cls, 0),
+        deadline=jnp.where(valid, t.deadline, 0),
+        count=new_count,
+    )
+
+
+class TickStats(NamedTuple):
+    """Per-class completion accounting for one `tick_running` call."""
+
+    n_done: jnp.ndarray           # i32 total completions
+    done_by_cls: jnp.ndarray      # (NUM_CLASSES,) i32 completions per class
+    violated_by_cls: jnp.ndarray  # (NUM_CLASSES,) i32 completions past deadline
+    slack_by_cls: jnp.ndarray     # (NUM_CLASSES,) f32 slack-at-completion sum
+                                  # (deadline - t, deadlined jobs only)
+
+
+def _tick_masks(running: JobTable, t):
+    """Shared tick core: decremented durations, the done mask, and the
+    per-class `TickStats` (masked reductions — NUM_CLASSES is static)."""
+    cap = running.r.shape[1]
+    idx = jnp.arange(cap)[None, :]
+    active = idx < running.count[:, None]
+    dur = jnp.where(active, running.dur - 1, running.dur)
+    done = active & (dur <= 0)
+
+    deadlined = done & (running.deadline < NO_DEADLINE)
+    late = deadlined & (t > running.deadline)
+    slack = (running.deadline - t).astype(jnp.float32)
+    cls = running.cls
+    count_by = lambda mask: jnp.stack(
+        [(mask & (cls == k)).sum() for k in range(NUM_CLASSES)]
+    ).astype(jnp.int32)
+    stats = TickStats(
+        n_done=done.sum().astype(jnp.int32),
+        done_by_cls=count_by(done),
+        violated_by_cls=count_by(late),
+        slack_by_cls=jnp.stack([
+            jnp.where(deadlined & (cls == k), slack, 0.0).sum()
+            for k in range(NUM_CLASSES)
+        ]),
+    )
+    return active, dur, done, stats
+
+
+def tick_running(running: JobTable, t) -> Tuple[JobTable, TickStats]:
+    """Decrement remaining durations; remove completed jobs.
+
+    `t` is the current step index: a job completing now is on time iff
+    ``t <= deadline``. Returns ``(table', TickStats)``; violation and
+    slack sums only count jobs with a real deadline (``< NO_DEADLINE``).
+    """
+    cap = running.r.shape[1]
+    active, dur, done, stats = _tick_masks(running, t)
+    table = JobTable(
+        running.r, dur, running.prio, running.cls, running.deadline,
+        running.count,
+    )
+    return _compact(table, active & ~done, cap), stats
+
+
+def promote_interactive(queues: JobTable, window: int | None = None) -> JobTable:
+    """Stable-reorder each cluster queue so interactive jobs admit first.
+
+    FIFO order is preserved within each class (stable sort on the
+    "is interactive" key), so on a single-class queue this is an exact
+    identity — the class-blind bitwise contract.
+
+    `window` bounds the sort to the first `window` queue positions (None
+    = whole queue). `env.step` passes `admit_depth`: admission never
+    looks past it, so sorting deeper buys nothing this step — a full
+    argsort over `queue_cap` columns was the single largest class-layer
+    hot-path cost. Interactive jobs deeper than the window bubble
+    forward as the queue drains (the sort re-runs every step).
+    """
+    cap = queues.r.shape[1]
+    w = cap if window is None else min(window, cap)
+    idx = jnp.arange(w)[None, :]
+    active = idx < queues.count[:, None]
+    cls_w = queues.cls[:, :w]
+    # inactive rows sort last; interactive first among the active rows
+    key = jnp.where(active, jnp.where(cls_w == CLS_INTERACTIVE, 0, 1), 2)
+    order = jnp.argsort(key, axis=1, stable=True)
+    take = lambda a: jnp.concatenate(
+        [jnp.take_along_axis(a[:, :w], order, axis=1), a[:, w:]], axis=1
+    )
+    return JobTable(
+        r=take(queues.r), dur=take(queues.dur), prio=take(queues.prio),
+        cls=take(queues.cls), deadline=take(queues.deadline),
+        count=queues.count,
+    )
+
+
+#: Max best-effort evictions per cluster per step. Bounds the preemption
+#: *throughput*, not the total: sustained pressure keeps evicting on
+#: subsequent steps (thermal throttling develops over minutes, so a few
+#: steps of lag is physical). The bound is what makes the eviction
+#: append cheap — a (C, PREEMPT_CAP) top-k gather + scatter instead of a
+#: full (C, run_cap)-wide scatter on the per-step hot path.
+PREEMPT_CAP = 8
+
+
+def _evict_best_effort(running: JobTable, alive, c_eff):
+    """Eviction mask over `alive` rows: newest best-effort jobs, just
+    enough to close the utilization-over-capacity gap per cluster, at
+    most `PREEMPT_CAP` of them per cluster this step."""
+    r_alive = jnp.where(alive, running.r, 0.0)
+    over = jnp.maximum(r_alive.sum(axis=1) - c_eff, 0.0)       # (C,)
+    be = alive & (running.cls == CLS_BEST_EFFORT)
+    r_be = jnp.where(be, running.r, 0.0)
+    # newer_sum[k] = best-effort demand strictly newer than slot k; evict
+    # slot k iff the newer evictions alone cannot close the gap
+    newer_sum = r_be.sum(axis=1, keepdims=True) - jnp.cumsum(r_be, axis=1)
+    evict = be & (newer_sum < over[:, None])
+    # keep only the PREEMPT_CAP newest: # of evicted strictly newer < cap
+    newer_evicted = evict.sum(axis=1, keepdims=True) - jnp.cumsum(evict, axis=1)
+    return evict & (newer_evicted < PREEMPT_CAP)
+
+
+def _append_evicted(queues: JobTable, src: JobTable, evict) -> Tuple[JobTable, jnp.ndarray]:
+    """Append the (<= PREEMPT_CAP per cluster) `evict`-masked rows of
+    `src` to each cluster's queue tail, oldest first. top-k gathers the
+    evicted rows so the scatter touches PREEMPT_CAP slots per cluster,
+    not the whole running width. Returns (queues', n_dropped)."""
+    num_clusters, rcap = src.r.shape
+    qcap = queues.r.shape[1]
+    k = min(PREEMPT_CAP, rcap)
+    # indices of evicted rows, newest-first via top_k, reversed to
+    # oldest-first; non-evicted lanes read -1
+    key = jnp.where(evict, jnp.arange(rcap, dtype=jnp.int32)[None, :], -1)
+    top, _ = jax.lax.top_k(key, k)                       # (C, k) descending
+    ord_idx = top[:, ::-1]                               # oldest first, -1s lead
+    real = ord_idx >= 0
+    gidx = jnp.clip(ord_idx, 0, rcap - 1)
+    packed_src = _pack_cols(src.r, src.dur, src.prio, src.cls, src.deadline)
+    rows = jnp.take_along_axis(packed_src, gidx[:, :, None], axis=1)  # (C,k,5)
+    rank = jnp.cumsum(real, axis=1) - real.astype(jnp.int32)
+    slot = jnp.where(real, queues.count[:, None] + rank, qcap)
+    rowc = jnp.where(real, jnp.arange(num_clusters)[:, None], num_clusters)
+    packed_q = _pack_cols(queues.r, queues.dur, queues.prio,
+                          queues.cls, queues.deadline)
+    packed_q = packed_q.at[rowc, slot].set(rows, mode="drop")
+    q_r, q_d, q_p, q_c, q_dl = _unpack_cols(packed_q)
+    n_mv = real.sum(axis=1).astype(jnp.int32)
+    new_count = jnp.minimum(queues.count + n_mv, qcap)
+    n_dropped = (queues.count + n_mv - new_count).sum().astype(jnp.int32)
+    return JobTable(q_r, q_d, q_p, q_c, q_dl, new_count), n_dropped
+
+
+def preempt_best_effort(
+    queues: JobTable, running: JobTable, c_eff
+) -> Tuple[JobTable, JobTable, jnp.ndarray, jnp.ndarray]:
+    """Evict best-effort running jobs while utilization exceeds capacity.
+
+    When thermal throttling (or a cooling derate) pushes a cluster's
+    active demand above its effective capacity, the *newest* best-effort
+    jobs are preempted — just enough of them to close the gap, at most
+    `PREEMPT_CAP` per cluster per step — and re-queued at their
+    cluster's queue tail with their remaining duration.
+    Queue overflow drops the evicted job (counted). With no best-effort
+    jobs in the running set this is an exact identity.
+
+    Returns ``(queues', running', n_preempted, n_dropped)``. `env.step`
+    uses the fused `tick_and_preempt` (one compaction for completions +
+    evictions); this standalone form is the unit-testable building block.
+    """
+    rcap = running.r.shape[1]
+    idx = jnp.arange(rcap)[None, :]
+    active = idx < running.count[:, None]
+    evict = _evict_best_effort(running, active, c_eff)
+    new_running = _compact(running, active & ~evict, rcap)
+    new_queues, n_dropped = _append_evicted(queues, running, evict)
+    return new_queues, new_running, evict.sum().astype(jnp.int32), n_dropped
+
+
+def tick_and_preempt(
+    queues: JobTable, running: JobTable, c_eff, t
+) -> Tuple[JobTable, JobTable, TickStats, jnp.ndarray, jnp.ndarray]:
+    """Fused `tick_running` + `preempt_best_effort` (one compaction).
+
+    Completion removal and best-effort eviction are disjoint row drops on
+    the same table, so a single stable compaction implements both at
+    nearly half the hot-path cost. Semantics match the two-pass form —
+    same jobs ticked, same eviction rule — but the capacity-pressure
+    sums reduce over pre-compaction positions, so the eviction threshold
+    can differ from the two-pass form by float round-off exactly at the
+    boundary. On single-class (untagged) tables eviction is identically
+    false either way: the legacy path stays bitwise. Returns
+    ``(queues', running', TickStats, n_preempted, n_dropped)``.
+    """
+    cap = running.r.shape[1]
+    active, dur, done, stats = _tick_masks(running, t)
+    ticked = JobTable(
+        running.r, dur, running.prio, running.cls, running.deadline,
+        running.count,
+    )
+    alive = active & ~done
+    evict = _evict_best_effort(ticked, alive, c_eff)
+    new_running = _compact(ticked, alive & ~evict, cap)
+    new_queues, n_dropped = _append_evicted(queues, ticked, evict)
+    return (new_queues, new_running, stats,
+            evict.sum().astype(jnp.int32), n_dropped)
+
+
+def fault_capacity(c_eff, faults, params):
+    """(C,) effective capacity masked by the active compute-fault envelope.
+
+    A PDU/host fault scales every cluster in the afflicted DC by that DC's
+    `cap_mult` (DESIGN.md §16). The reduced capacity feeds the same
+    admission and best-effort-preemption machinery as thermal throttling,
+    so capacity faults shed load through the existing pathways. Identity
+    when fault_mode=0 (bitwise).
+    """
+    masked = c_eff * faults.cap_mult[params.dc_id]
+    return jnp.where(params.fault_mode > 0, masked, c_eff)
+
+
+def block_partitioned(assign, faults, params):
+    """Bounce placements routed into a network-partitioned DC (-> defer).
+
+    A partitioned DC is unreachable for *new* work: any job the policy
+    assigned to one of its clusters is rewritten to -1 this step, so it
+    lands in the pending buffer and is re-offered once the partition
+    heals (already-running jobs keep executing). Identity when
+    fault_mode=0 (bitwise).
+    """
+    part_cl = faults.partition[params.dc_id]                   # (C,)
+    safe = jnp.clip(assign, 0, part_cl.shape[0] - 1)
+    blocked = (assign >= 0) & (part_cl[safe] > 0.0) & (params.fault_mode > 0)
+    return jnp.where(blocked, jnp.int32(-1), assign)
+
+
+def admission_gate(power_ok, faults, params):
+    """(C,) admission gate: positive power budget AND no network partition.
+
+    `admit_backfill` already gates on the power budget; a partition fault
+    additionally closes backfill admission into the partitioned DC's
+    clusters (queued work holds in place rather than starting under a
+    partition). Identity when fault_mode=0 (bitwise).
+    """
+    open_cl = 1.0 - faults.partition[params.dc_id]
+    return jnp.where(params.fault_mode > 0, power_ok * open_cl, power_ok)
+
+
+def insert_arrivals(
+    queues: JobTable, jobs: Arrivals, assign, num_clusters: int
+) -> Tuple[JobTable, jnp.ndarray]:
+    """Append jobs with assign in [0, C) to their cluster queue (FIFO order).
+
+    Returns (queues', n_dropped) where drops are queue-capacity overflows.
+    """
+    cap = queues.r.shape[1]
+    placed = jobs.valid & (assign >= 0)
+    cl = jnp.where(placed, assign, num_clusters)  # C = out-of-range -> dropped
+    onehot = (cl[:, None] == jnp.arange(num_clusters)[None, :])
+    rank = jnp.cumsum(onehot, axis=0) - onehot.astype(jnp.int32)  # arrivals FIFO rank
+    rank_j = jnp.take_along_axis(
+        rank, jnp.clip(cl, 0, num_clusters - 1)[:, None], axis=1
+    )[:, 0]
+    slot = jnp.where(placed, queues.count[jnp.clip(cl, 0, num_clusters - 1)] + rank_j, cap)
+    row = jnp.where(placed, cl, num_clusters)
+
+    packed_q = _pack_cols(queues.r, queues.dur, queues.prio,
+                          queues.cls, queues.deadline)
+    packed_jobs = _pack_cols(jobs.r, jobs.dur, jobs.prio,
+                             jobs.cls, jobs.deadline)
+    packed_q = packed_q.at[row, slot].set(packed_jobs, mode="drop")
+    q_r, q_d, q_p, q_c, q_dl = _unpack_cols(packed_q)
+
+    n_assigned = onehot.sum(axis=0).astype(jnp.int32)
+    new_count = jnp.minimum(queues.count + n_assigned, cap)
+    n_dropped = (queues.count + n_assigned - new_count).sum().astype(jnp.int32)
+    return JobTable(q_r, q_d, q_p, q_c, q_dl, new_count), n_dropped
+
+
+def admit_backfill(
+    queues: JobTable,
+    running: JobTable,
+    c_eff,
+    power_ok,
+    admit_depth: int,
+) -> Tuple[JobTable, JobTable]:
+    """FIFO + backfill admission: greedy pass over the first `admit_depth`
+    queue positions (vectorized across clusters).
+
+    A job at position k starts iff r <= remaining headroom, the running table
+    has a free slot, and the cluster's power budget is positive. Class
+    priority is positional: run `promote_interactive` first so interactive
+    jobs occupy the front of the scan window.
+    """
+    num_clusters, qcap = queues.r.shape
+    rcap = running.r.shape[1]
+    depth = min(admit_depth, qcap)
+    cidx = jnp.arange(num_clusters)
+
+    util0 = job_utilization(running)
+    rem0 = jnp.maximum(c_eff - util0, 0.0) * power_ok
+    packed_queues = _pack_cols(queues.r, queues.dur, queues.prio,
+                               queues.cls, queues.deadline)  # (C, qcap, 5)
+    packed_run0 = _pack_cols(running.r, running.dur, running.prio,
+                             running.cls, running.deadline)  # (C, rcap, 5)
+
+    def body(carry, xs):
+        packed_run, run_cnt, rem = carry
+        k, = xs
+        job_r = queues.r[:, k]
+        in_queue = k < queues.count
+        fits = in_queue & (job_r <= rem) & (job_r > 0.0) & (run_cnt < rcap)
+        rem = rem - jnp.where(fits, job_r, 0.0)
+        slot = jnp.where(fits, run_cnt, rcap)  # rcap = OOB -> dropped write
+        packed_run = packed_run.at[cidx, slot].set(
+            packed_queues[:, k, :], mode="drop"
+        )
+        run_cnt = run_cnt + fits.astype(jnp.int32)
+        return (packed_run, run_cnt, rem), fits
+
+    carry0 = (packed_run0, running.count, rem0)
+    (packed_run, run_cnt, _), admitted = jax.lax.scan(
+        body, carry0, (jnp.arange(depth),)
+    )
+    admitted = admitted.T  # (C, depth)
+    admitted_full = jnp.zeros((num_clusters, qcap), bool).at[:, :depth].set(admitted)
+
+    idx = jnp.arange(qcap)[None, :]
+    keep = (idx < queues.count[:, None]) & ~admitted_full
+    queues = _compact(queues, keep, qcap)
+    run_r, run_d, run_p, run_c, run_dl = _unpack_cols(packed_run)
+    running = JobTable(run_r, run_d, run_p, run_c, run_dl, run_cnt)
+    return queues, running
+
+
+def job_utilization(running: JobTable):
+    """(C,) active demand u_i = sum of r over running jobs."""
+    cap = running.r.shape[1]
+    active = jnp.arange(cap)[None, :] < running.count[:, None]
+    return jnp.where(active, running.r, 0.0).sum(axis=1)
+
+
+def merge_offered(pending: PendingBuffer, arrivals: Arrivals) -> Arrivals:
+    """Concatenate deferred jobs (FIFO-first) with fresh arrivals into the
+    batch offered to the policy this step."""
+    return Arrivals(
+        r=jnp.concatenate([pending.r, arrivals.r]),
+        dur=jnp.concatenate([pending.dur, arrivals.dur]),
+        prio=jnp.concatenate([pending.prio, arrivals.prio]),
+        cls=jnp.concatenate([pending.cls, arrivals.cls]),
+        deadline=jnp.concatenate([pending.deadline, arrivals.deadline]),
+        is_gpu=jnp.concatenate([pending.is_gpu, arrivals.is_gpu]),
+        valid=jnp.concatenate([pending.valid, arrivals.valid]),
+    )
+
+
+def refill_pending(
+    offered: Arrivals, assign, pending_cap: int
+) -> Tuple[PendingBuffer, jnp.ndarray]:
+    """Jobs the policy deferred (assign == -1) form the next pending buffer.
+
+    Stable order keeps older jobs first. Overflow beyond pending_cap drops
+    (counted).
+    """
+    deferred = offered.valid & (assign < 0)
+    order = jnp.argsort(~deferred, stable=True)
+    take = lambda a: jnp.take(a, order)[:pending_cap]
+    n_def = deferred.sum().astype(jnp.int32)
+    idx = jnp.arange(pending_cap)
+    valid = idx < jnp.minimum(n_def, pending_cap)
+    dropped = jnp.maximum(n_def - pending_cap, 0).astype(jnp.int32)
+    return (
+        PendingBuffer(
+            r=jnp.where(valid, take(offered.r), 0.0),
+            dur=jnp.where(valid, take(offered.dur), 0),
+            prio=jnp.where(valid, take(offered.prio), 0),
+            cls=jnp.where(valid, take(offered.cls), 0),
+            deadline=jnp.where(valid, take(offered.deadline), 0),
+            is_gpu=valid & take(offered.is_gpu),
+            valid=valid,
+        ),
+        dropped,
+    )

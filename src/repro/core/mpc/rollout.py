@@ -266,6 +266,7 @@ def temporal_defer_mask(
     re-offers them next step.
     """
     from repro.core import power as power_mod
+    from repro.core import sortkeys as sk
     from repro.core.state import CLS_INTERACTIVE
 
     eff_now = carbon_adjusted(
@@ -286,7 +287,7 @@ def temporal_defer_mask(
     budget = jnp.maximum(
         jnp.int32(max_pending_frac * pending_cap) - pending_n, 0
     )
-    hold_rank = jnp.cumsum(candidate) - candidate.astype(jnp.int32)
+    hold_rank = sk.fifo_rank(candidate)
     return candidate & (hold_rank < budget)
 
 

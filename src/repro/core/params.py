@@ -45,6 +45,12 @@ class EnvDims:
     pending_cap: int = 2048       # globally deferred (unadmitted) jobs
     admit_depth: int = 256        # FIFO+backfill scheduler pass depth / step
     policy_depth: int = 1024      # offered jobs a sequential policy scores / step
+    #: Job-engine tick backend: "ref" (fused sort engine), "pallas" (VMEM
+    #: per-cluster kernel), or "auto" (pallas on TPU). Static like every
+    #: other dim, so the choice is baked into the compiled step
+    #: (DESIGN.md §17). The pallas kernel requires queue_cap/run_cap small
+    #: enough that W x W one-hot permutation matrices fit VMEM (~<= 1024).
+    jobs_backend: str = "auto"
 
     @property
     def obs_dim(self) -> int:

@@ -314,12 +314,14 @@ def _counts_to_assign(offered, rho0, weights, pol, params, num_clusters: int):
 
     Interactive jobs claim the quota slots first (the policy-level face
     of the engine's backfilling bypass, DESIGN.md §15): within each
-    hardware type, ranks run interactive-FIFO then everything-else-FIFO,
-    so when the stage-1 quotas bind it is batch/best-effort load that
-    defers, never latency-sensitive work. On a single-class batch the
-    interactive count is zero and the ranking reduces bitwise to plain
-    FIFO — the legacy contract.
+    hardware type, ranks run interactive-FIFO then everything-else-FIFO
+    (`sortkeys.class_fifo_rank`, the same composite-key ordering the
+    engine sorts tables by), so when the stage-1 quotas bind it is
+    batch/best-effort load that defers, never latency-sensitive work. On
+    a single-class batch the interactive count is zero and the ranking
+    reduces bitwise to plain FIFO — the legacy contract.
     """
+    from repro.core import sortkeys as sk
     from repro.core.state import CLS_INTERACTIVE
 
     assign = jnp.full(offered.r.shape, -1, jnp.int32)
@@ -334,12 +336,7 @@ def _counts_to_assign(offered, rho0, weights, pol, params, num_clusters: int):
         counts = jnp.floor(per_cl + 1e-6)
         # distribute floor remainders to the largest weights (stable greedy)
         cum = jnp.cumsum(counts)
-        m_int = mask & is_int
-        n_int = m_int.sum()
-        rank = jnp.where(
-            m_int, jnp.cumsum(m_int) - 1,
-            n_int + jnp.cumsum(mask & ~is_int) - 1,
-        )
+        rank = sk.class_fifo_rank(mask, is_int)
         idx = jnp.searchsorted(cum, rank.astype(cum.dtype), side="right")
         ok = mask & (rank < cum[-1])
         assign = jnp.where(ok, jnp.minimum(idx, num_clusters - 1).astype(jnp.int32), assign)

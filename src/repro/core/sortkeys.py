@@ -1,0 +1,156 @@
+"""Composite sort keys + linear-time key-order computation — the
+sort-based engine core (DESIGN.md §17).
+
+Every table write in the job engine is a permutation: compaction moves
+kept rows to the front, interactive promotion moves one class ahead of
+the others, admission and eviction append rows behind a FIFO prefix.
+The engine encodes each row's *target order* as a composite integer key
+
+    ``group << POS_BITS | position``
+
+— high bits rank coarse groups (keep-bit, class rank, merge source), low
+bits carry the row's FIFO position — and reorders whole tables by that
+key in one fused pass. Keys are **unique**, so the key order is total
+and reproduces exactly what a stable argsort on the group alone would
+have produced. That equivalence is what keeps the sort engine bitwise
+identical to the PR-5 scatter engine (`repro.core.jobs_scatter`, kept
+as the differential-test oracle).
+
+Two interchangeable evaluators compute the permutation:
+
+- `sort_by_key`: the executable *specification* — one fused variadic
+  `lax.sort` carrying every column alongside the key. Bit-for-bit the
+  stable-argsort order, but XLA:CPU comparison sorts are comparator
+  calls in a scalar loop: ~4 ms for a (20, 1024) table on this class of
+  box, the single largest line in the engine profile.
+- `group_order`: the *fast path* — because the low key bits are the row
+  position itself, the key order is a **counting sort**: one cumsum per
+  group ranks the groups, one vectorized binary search per group finds
+  the i-th member, one gather applies the permutation. O(G·n) with ~6x
+  lower constants than the comparator sort (measured 0.6 ms vs 3.8 ms
+  for the same compaction), and bitwise equal to `sort_by_key` — the
+  property tests in `tests/test_properties.py` pin that equivalence.
+
+The engine's hot loops use `group_order` + one packed gather; the fused
+`lax.sort` form remains the oracle the fast path is tested against.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: Low-order bits of a composite key reserved for the FIFO position.
+#: Bounds every sortable table width (queue/run/pending caps *plus* any
+#: merge extension) — checked statically in `order_key`.
+POS_BITS = 16
+MAX_POS = 1 << POS_BITS
+
+
+def order_key(group, pos):
+    """Composite int32 key: lexicographic (group, position) order.
+
+    `group` ranks the coarse class of a row (0 sorts first); `pos` is its
+    FIFO position *within* the group. Both must be int32 arrays (or
+    broadcastable); positions must stay below `MAX_POS` — static widths
+    in this repo top out at queue_cap + pending_cap + max_arrivals.
+    """
+    return (group.astype(jnp.int32) << POS_BITS) | pos.astype(jnp.int32)
+
+
+def sort_by_key(key, cols: Sequence, dimension: int = -1) -> Tuple:
+    """ONE fused variadic sort: reorder every array in `cols` by `key`.
+
+    All operands ride the same sort pass (`lax.sort` with `num_keys=1`).
+    Keys built via `order_key` are unique per row, so the unstable sort
+    is deterministic and reproduces the stable-argsort order
+    bit-for-bit. This is the executable specification of the engine's
+    table order; the hot path computes the same permutation in linear
+    time via `group_order`.
+    """
+    width = key.shape[dimension]
+    assert width <= MAX_POS, (
+        f"table width {width} exceeds the {POS_BITS}-bit position field")
+    out = jax.lax.sort(
+        (key, *cols), dimension=dimension, num_keys=1, is_stable=False
+    )
+    return out[1:]
+
+
+def _first_geq(cs, q):
+    """Row-batched binary search: first index i with ``cs[b, i] >= q[b, i]``
+    (`cs` non-decreasing along the last axis). Returns the row length for
+    queries beyond ``cs[b, -1]`` — callers mask those lanes out."""
+    return jax.vmap(jnp.searchsorted, (0, 0))(cs, q)
+
+
+def group_order(groups, num_groups: int):
+    """Forward order of the composite key ``order_key(groups, position)``,
+    in linear time: ``order[..., j]`` is the source index of the row that
+    a stable argsort of `groups` would place at position j.
+
+    Counting sort over the (static, tiny) group alphabet: for each group
+    g, a cumsum ranks its members in position order and a vectorized
+    binary search (`searchsorted` over the cumsum) locates its i-th
+    member; group spans are stitched by their offsets. Every row's group
+    must lie in [0, num_groups). Bitwise equal to
+    ``argsort(groups, stable=True)`` — and 6x cheaper than any
+    comparator sort on XLA:CPU. Apply with `take_along_axis` (one packed
+    gather for a five-column table).
+    """
+    shape = groups.shape
+    n = shape[-1]
+    g2 = groups.reshape(-1, n)
+    j = jnp.arange(n, dtype=jnp.int32)[None, :]
+    order = jnp.zeros_like(g2)
+    offset = jnp.zeros((g2.shape[0], 1), jnp.int32)
+    for g in range(num_groups):
+        m = g2 == g
+        cs = jnp.cumsum(m, axis=-1)
+        n_g = cs[:, -1:]
+        # i-th member of group g = first position whose running count hits i+1
+        o_g = _first_geq(cs, jnp.broadcast_to(j + 1 - offset, cs.shape))
+        span = (j >= offset) & (j < offset + n_g)
+        order = jnp.where(span, o_g.astype(jnp.int32), order)
+        offset = offset + n_g
+    return order.reshape(shape)
+
+
+def class_rank(cls):
+    """Service-class priority rank: interactive < batch < best_effort.
+
+    Class ids (`repro.core.state.CLS_*`) are already assigned in
+    SLO-priority order, so this is the identity map — kept as a named
+    function so key builders document intent and the property tests pin
+    the ordering contract independently of the id assignment.
+    """
+    return cls.astype(jnp.int32)
+
+
+def fifo_rank(mask):
+    """0-based FIFO rank of each True row of `mask` (arbitrary elsewhere).
+
+    Shared by the engine's append paths and the MPC temporal-shift hold
+    budget (`mpc.rollout.temporal_defer_mask`): rank = number of True
+    rows strictly earlier in the array.
+    """
+    return jnp.cumsum(mask) - mask.astype(jnp.int32)
+
+
+def class_fifo_rank(mask, is_priority):
+    """Rank `mask` rows priority-class-FIFO-first, then the rest FIFO.
+
+    The policy-level face of interactive promotion (DESIGN.md §15), used
+    by `h_mpc._counts_to_assign`: priority rows take ranks [0, n_p) in
+    FIFO order, remaining rows continue from n_p. On a batch with no
+    priority rows this reduces bitwise to plain FIFO — the legacy
+    contract.
+    """
+    m_p = mask & is_priority
+    n_p = m_p.sum()
+    return jnp.where(
+        m_p,
+        jnp.cumsum(m_p) - 1,
+        n_p + jnp.cumsum(mask & ~is_priority) - 1,
+    )

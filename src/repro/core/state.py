@@ -52,6 +52,17 @@ class JobTable:
         )
 
 
+def table_active_mask(table: JobTable):
+    """(C, CAP) bool mask of valid rows: position < count.
+
+    The single definition of "row is live" shared by the job engine, the
+    Pallas `jobs_tick` kernel wrapper, and the tests — every masked
+    reduction and compaction keep-mask starts from this.
+    """
+    cap = table.r.shape[1]
+    return jnp.arange(cap, dtype=jnp.int32)[None, :] < table.count[:, None]
+
+
 @dataclasses.dataclass(frozen=True)
 class PendingBuffer:
     """Globally deferred jobs (unadmitted by the policy), re-offered next step."""

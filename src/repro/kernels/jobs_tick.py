@@ -1,0 +1,307 @@
+"""Pallas TPU kernel: fused per-cluster job-engine tick (DESIGN.md §17).
+
+One `engine_tick` of the job engine — completion tick + best-effort
+preemption, interactive promotion, FIFO+backfill admission — runs four
+table permutations and one sequential admission scan per cluster. The
+pure-jnp engine keeps the (C, CAP) tables in HBM between those stages;
+this kernel assigns one cluster per grid program and runs the whole
+stage pipeline on that cluster's queue/running tables resident in VMEM,
+writing each table back exactly once.
+
+Permutations in-kernel are one-hot matmuls: a row's destination slot is
+a counting rank (cumsums evaluated as triangular-ones matmuls), and the
+permutation matrix ``P[i, j] = mask_i & (dest_i == j)`` applies to every
+column in one MXU pass per 16-bit half. Integer columns are split into
+16-bit halves so the f32 matmul stays exact out to the `NO_DEADLINE`
+sentinel (2^29 >> the 2^24 f32 integer limit); f32 demand rides the
+matmul directly (multiply by one and sum with zeros is exact). The
+greedy admission recurrence reads queue lanes through one-hot masked
+reductions — no dynamic lane indexing — carrying only three scalars and
+the admitted mask.
+
+VMEM budget: the one-hot matrices are W x W f32, so queue/run caps above
+~1024 blow the ~16 MB VMEM budget — the dispatcher default
+(`EnvDims.jobs_backend = "auto"`) only selects this kernel on TPU, and
+fleet-scale caps should stay on the "ref" engine. Table widths are
+zero-padded to LANE (128) multiples; padded lanes sit past every row
+count, park at the permutation tail, and stay exactly zero.
+
+Parity: bitwise identical tables/counts/int stats vs `engine_tick`
+(`kernels.ref.jobs_tick_ref` delegates there); the f32 slack sums
+reduce per cluster then across clusters, so they may differ from the
+ref's single global reduction by float association — the parity tests
+in tests/test_kernels.py pin tables exactly and slack to allclose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.state import (
+    CLS_BEST_EFFORT, CLS_INTERACTIVE, NO_DEADLINE, NUM_CLASSES, JobTable,
+)
+from repro.core.jobs import PREEMPT_CAP, TickStats
+
+LANE = 128  # TPU lane width: table caps are padded up to a multiple
+
+#: Lane layout of the per-cluster scalar input vector (f32, exact for
+#: every integer it carries).
+_IN_QCOUNT, _IN_RCOUNT, _IN_CEFF, _IN_POWER, _IN_T = range(5)
+#: Lane layout of the per-cluster stats output vector.
+_ST_NDONE = 0
+_ST_DONE = 1                    # 3 lanes
+_ST_VIOL = _ST_DONE + NUM_CLASSES
+_ST_SLACK = _ST_VIOL + NUM_CLASSES
+_ST_NEVICT = _ST_SLACK + NUM_CLASSES
+_ST_NDROP = _ST_NEVICT + 1
+_ST_QCOUNT = _ST_NDROP + 1
+_ST_RCOUNT = _ST_QCOUNT + 1
+
+
+def _iota(w):
+    return jax.lax.broadcasted_iota(jnp.float32, (1, w), 1)
+
+
+def _cumsum(v):
+    """Inclusive cumsum of a (1, W) f32 vector as a triangular matmul."""
+    w = v.shape[1]
+    i = jax.lax.broadcasted_iota(jnp.float32, (w, w), 0)
+    j = jax.lax.broadcasted_iota(jnp.float32, (w, w), 1)
+    tri = (i <= j).astype(jnp.float32)
+    return jax.lax.dot(v, tri, preferred_element_type=jnp.float32)
+
+
+def _permute(cols, dest, mask, w):
+    """Route row i of each (1, W) column to lane dest_i (rows with mask=0
+    or dest >= w vanish; unrouted lanes read 0). One one-hot matrix
+    serves every column; int32 columns go through as two exact 16-bit
+    halves."""
+    lanes = jax.lax.broadcasted_iota(jnp.float32, (dest.shape[1], w), 1)
+    p = (mask.reshape(-1, 1) * (dest.reshape(-1, 1) == lanes)).astype(
+        jnp.float32)
+    out = []
+    for c in cols:
+        if c.dtype == jnp.int32:
+            hi = jax.lax.dot((c >> 16).astype(jnp.float32), p,
+                             preferred_element_type=jnp.float32)
+            lo = jax.lax.dot((c & 0xFFFF).astype(jnp.float32), p,
+                             preferred_element_type=jnp.float32)
+            out.append((hi.astype(jnp.int32) << 16) | lo.astype(jnp.int32))
+        else:
+            out.append(jax.lax.dot(c, p, preferred_element_type=jnp.float32))
+    return out
+
+
+def _kernel(q_r_ref, q_dur_ref, q_prio_ref, q_cls_ref, q_dl_ref,
+            r_r_ref, r_dur_ref, r_prio_ref, r_cls_ref, r_dl_ref, scal_ref,
+            oq_r_ref, oq_dur_ref, oq_prio_ref, oq_cls_ref, oq_dl_ref,
+            or_r_ref, or_dur_ref, or_prio_ref, or_cls_ref, or_dl_ref,
+            stats_ref, *, qcap: int, rcap: int, depth: int):
+    wq = q_r_ref.shape[1]
+    wr = r_r_ref.shape[1]
+    f32 = jnp.float32
+
+    q_count = scal_ref[0, _IN_QCOUNT]
+    r_count = scal_ref[0, _IN_RCOUNT]
+    c_eff = scal_ref[0, _IN_CEFF]
+    power_ok = scal_ref[0, _IN_POWER]
+    t = scal_ref[0, _IN_T]
+
+    q_cols = [q_r_ref[...], q_dur_ref[...], q_prio_ref[...],
+              q_cls_ref[...], q_dl_ref[...]]
+    r_cols = [r_r_ref[...], r_dur_ref[...], r_prio_ref[...],
+              r_cls_ref[...], r_dl_ref[...]]
+
+    # ---- 1. tick: decrement durations, find completions (elementwise)
+    pos_r = _iota(wr)
+    active = (pos_r < r_count).astype(f32)
+    dur = jnp.where(active > 0, r_cols[1] - 1, r_cols[1])
+    done = active * (dur <= 0)
+    r_cols[1] = dur
+
+    r_dl = r_cols[4]
+    r_cls = r_cols[3]
+    deadlined = done * (r_dl < NO_DEADLINE)
+    late = deadlined * (t > r_dl.astype(f32))
+    slack = r_dl.astype(f32) - t
+    # stats accumulate into (lane, value) pairs; the whole (1, LANE) row
+    # is composed and stored once at the end (no partial block writes)
+    stats = [(_ST_NDONE, jnp.sum(done))]
+    for k in range(NUM_CLASSES):
+        is_k = (r_cls == k).astype(f32)
+        stats.append((_ST_DONE + k, jnp.sum(done * is_k)))
+        stats.append((_ST_VIOL + k, jnp.sum(late * is_k)))
+        stats.append((_ST_SLACK + k, jnp.sum(deadlined * is_k * slack)))
+
+    # ---- 2. best-effort eviction mask (newest first, capped)
+    alive = active * (1.0 - done)
+    r_alive = r_cols[0] * alive
+    over = jnp.maximum(jnp.sum(r_alive) - c_eff, 0.0)
+    be = alive * (r_cls == CLS_BEST_EFFORT)
+    r_be = r_cols[0] * be
+    newer_sum = jnp.sum(r_be) - _cumsum(r_be)
+    evict = be * (newer_sum < over)
+    newer_evicted = jnp.sum(evict) - _cumsum(evict)
+    evict = evict * (newer_evicted < PREEMPT_CAP)
+    n_evict = jnp.sum(evict)
+    stats.append((_ST_NEVICT, n_evict))
+
+    # ---- 3. compact running: alive & not evicted, FIFO order
+    keep_r = alive * (1.0 - evict)
+    dest = _cumsum(keep_r) - keep_r
+    r_cols = _permute(r_cols, dest, keep_r, wr)
+    r_count_new = jnp.sum(keep_r)
+
+    # ---- 4. append evicted rows (pre-compaction table) to queue tail
+    ev_rank = _cumsum(evict) - evict
+    ev_dest = q_count + ev_rank
+    placed = evict * (ev_dest < qcap)
+    ev_cols = _permute([r_r_ref[...], dur, r_prio_ref[...], r_cls_ref[...],
+                        r_dl_ref[...]], ev_dest, placed, wq)
+    q_cols = [q + e for q, e in zip(q_cols, ev_cols)]
+    q_count = q_count + jnp.sum(placed)
+    stats.append((_ST_NDROP, n_evict - jnp.sum(placed)))
+
+    # ---- 5. promote interactive within the admission window
+    pos_q = _iota(wq)
+    in_win = (pos_q < depth).astype(f32)
+    act_q = (pos_q < q_count).astype(f32) * in_win
+    is_int = act_q * (q_cols[3] == CLS_INTERACTIVE)
+    is_oth = act_q * (1.0 - (q_cols[3] == CLS_INTERACTIVE))
+    is_park = in_win * (1.0 - act_q)
+    n_int = jnp.sum(is_int)
+    n_oth = jnp.sum(is_oth)
+    dest = (is_int * (_cumsum(is_int) - is_int)
+            + is_oth * (n_int + _cumsum(is_oth) - is_oth)
+            + is_park * (n_int + n_oth + _cumsum(is_park) - is_park))
+    head = _permute(q_cols, dest, in_win, wq)
+    q_cols = [jnp.where(pos_q < depth, h, q).astype(q.dtype)
+              for h, q in zip(head, q_cols)]
+
+    # ---- 6. greedy FIFO+backfill admission over the window
+    rem0 = jnp.maximum(c_eff - jnp.sum(r_cols[0]), 0.0) * power_ok
+    q_r_now = q_cols[0]
+
+    def body(k, carry):
+        rem, run_cnt, adm = carry
+        onehot = (pos_q == k).astype(f32)
+        job_r = jnp.sum(q_r_now * onehot)
+        fits = ((k < q_count) & (job_r <= rem) & (job_r > 0.0)
+                & (run_cnt < rcap)).astype(f32)
+        return (rem - fits * job_r, run_cnt + fits, adm + fits * onehot)
+
+    _, _, admitted = jax.lax.fori_loop(
+        0, depth, body, (rem0, r_count_new, jnp.zeros((1, wq), f32)))
+
+    # ---- 7. merge admitted rows into running, compact the queue
+    adm_rank = _cumsum(admitted) - admitted
+    adm_cols = _permute(q_cols, r_count_new + adm_rank, admitted, wr)
+    r_cols = [r + a if r.dtype == jnp.int32 else r + a
+              for r, a in zip(r_cols, adm_cols)]
+    r_count_new = r_count_new + jnp.sum(admitted)
+
+    keep_q = (pos_q < q_count).astype(f32) * (1.0 - admitted)
+    dest = _cumsum(keep_q) - keep_q
+    q_cols = _permute(q_cols, dest, keep_q, wq)
+    q_count = jnp.sum(keep_q)
+
+    stats.append((_ST_QCOUNT, q_count))
+    stats.append((_ST_RCOUNT, r_count_new))
+    lane = _iota(stats_ref.shape[1])
+    row = jnp.zeros((1, stats_ref.shape[1]), f32)
+    for idx, val in stats:
+        row = row + val * (lane == idx)
+    stats_ref[...] = row
+    oq_r_ref[...] = q_cols[0]
+    oq_dur_ref[...] = q_cols[1].astype(jnp.int32)
+    oq_prio_ref[...] = q_cols[2].astype(jnp.int32)
+    oq_cls_ref[...] = q_cols[3].astype(jnp.int32)
+    oq_dl_ref[...] = q_cols[4].astype(jnp.int32)
+    or_r_ref[...] = r_cols[0]
+    or_dur_ref[...] = r_cols[1].astype(jnp.int32)
+    or_prio_ref[...] = r_cols[2].astype(jnp.int32)
+    or_cls_ref[...] = r_cols[3].astype(jnp.int32)
+    or_dl_ref[...] = r_cols[4].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("admit_depth",))
+def jobs_tick(queues: JobTable, running: JobTable, c_eff, power_ok, t,
+              admit_depth: int):
+    """Pallas backend of `repro.core.jobs.jobs_tick`: one fused engine
+    tick, one cluster per grid program, tables resident in VMEM.
+
+    Same signature/returns as `jobs.engine_tick` (which is also the CPU
+    fallback — `kernels.ref.jobs_tick_ref`). Runs in interpret mode off
+    TPU, so parity tests exercise the same program on CPU.
+    """
+    num_clusters, qcap = queues.r.shape
+    rcap = running.r.shape[1]
+    depth = min(admit_depth, qcap)
+    wq = qcap + (-qcap) % LANE
+    wr = rcap + (-rcap) % LANE
+    f32 = jnp.float32
+
+    padq = lambda x: jnp.pad(x, ((0, 0), (0, wq - qcap)))
+    padr = lambda x: jnp.pad(x, ((0, 0), (0, wr - rcap)))
+    scal = jnp.stack([
+        queues.count.astype(f32), running.count.astype(f32),
+        c_eff.astype(f32), power_ok.astype(f32),
+        jnp.broadcast_to(jnp.asarray(t, f32), (num_clusters,)),
+    ], axis=1)
+    scal = jnp.pad(scal, ((0, 0), (0, LANE - scal.shape[1])))
+
+    spec_q = pl.BlockSpec((1, wq), lambda i: (i, 0))
+    spec_r = pl.BlockSpec((1, wr), lambda i: (i, 0))
+    spec_s = pl.BlockSpec((1, LANE), lambda i: (i, 0))
+    i32 = jnp.int32
+    out_shape = (
+        [jax.ShapeDtypeStruct((num_clusters, wq), d)
+         for d in (f32, i32, i32, i32, i32)]
+        + [jax.ShapeDtypeStruct((num_clusters, wr), d)
+           for d in (f32, i32, i32, i32, i32)]
+        + [jax.ShapeDtypeStruct((num_clusters, LANE), f32)]
+    )
+    kern = functools.partial(_kernel, qcap=qcap, rcap=rcap, depth=depth)
+    outs = pl.pallas_call(
+        kern,
+        grid=(num_clusters,),
+        in_specs=[spec_q] * 5 + [spec_r] * 5 + [spec_s],
+        out_specs=[spec_q] * 5 + [spec_r] * 5 + [spec_s],
+        out_shape=out_shape,
+        interpret=_interpret_default(),
+    )(
+        padq(queues.r.astype(f32)), padq(queues.dur), padq(queues.prio),
+        padq(queues.cls), padq(queues.deadline),
+        padr(running.r.astype(f32)), padr(running.dur), padr(running.prio),
+        padr(running.cls), padr(running.deadline),
+        scal,
+    )
+    q_cols, r_cols, stats = outs[:5], outs[5:10], outs[10]
+    new_queues = JobTable(
+        *(c[:, :qcap] for c in q_cols),
+        count=stats[:, _ST_QCOUNT].astype(i32),
+    )
+    new_running = JobTable(
+        *(c[:, :rcap] for c in r_cols),
+        count=stats[:, _ST_RCOUNT].astype(i32),
+    )
+    tick = TickStats(
+        n_done=stats[:, _ST_NDONE].sum().astype(i32),
+        done_by_cls=stats[:, _ST_DONE:_ST_DONE + NUM_CLASSES]
+        .sum(axis=0).astype(i32),
+        violated_by_cls=stats[:, _ST_VIOL:_ST_VIOL + NUM_CLASSES]
+        .sum(axis=0).astype(i32),
+        slack_by_cls=stats[:, _ST_SLACK:_ST_SLACK + NUM_CLASSES].sum(axis=0),
+    )
+    n_preempted = stats[:, _ST_NEVICT].sum().astype(i32)
+    n_dropped = stats[:, _ST_NDROP].sum().astype(i32)
+    return new_queues, new_running, tick, n_preempted, n_dropped
+
+
+def _interpret_default() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -62,3 +62,18 @@ def ssm_update_ref(state, x, dt, a_log, b_vec, c_vec, d_skip):
     y = jnp.einsum("bhpn,bn->bhp", new_state, c_vec.astype(jnp.float32))
     y = y + d_skip.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
     return y, new_state
+
+
+def jobs_tick_ref(queues, running, c_eff, power_ok, t, admit_depth: int):
+    """Oracle for kernels.jobs_tick: the fused sort-engine composition
+    (tick + preempt, interactive promotion, FIFO+backfill admission).
+
+    Delegates to `repro.core.jobs.engine_tick` — the kernel's CPU
+    fallback IS the production engine, so parity against this oracle is
+    parity against what `env.step` runs. Tables/counts/integer stats are
+    bit-exact between the two; the f32 slack sums may differ by float
+    association (per-cluster partials vs one global reduction).
+    """
+    from repro.core.jobs import engine_tick
+
+    return engine_tick(queues, running, c_eff, power_ok, t, admit_depth)

@@ -198,6 +198,37 @@ def test_guide_documents_fault_catalogue():
         assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor}"
 
 
+def test_guide_documents_kernel_catalogue():
+    """The SIMULATOR_GUIDE's fast-path chapters must catalogue every
+    simulator Pallas kernel that ships a `kernels/ref.py` oracle, plus
+    the backend flag that dispatches each — so a new kernel cannot land
+    without its decision row."""
+    from repro.kernels import ref
+
+    # simulator-side kernels (the training-stack kernels are documented
+    # in their own modules, not the simulator guide)
+    sim_kernels = [
+        n[: -len("_ref")] for n in dir(ref)
+        if n.endswith("_ref") and n[: -len("_ref")] in
+        ("thermal_rollout", "jobs_tick")
+    ]
+    assert set(sim_kernels) == {"thermal_rollout", "jobs_tick"}, (
+        "kernels/ref.py lost a simulator oracle — update this list and "
+        "the SIMULATOR_GUIDE decision table together"
+    )
+    text = _read("SIMULATOR_GUIDE.md")
+    for name in sim_kernels:
+        assert f"{name}`" in text, (
+            f"SIMULATOR_GUIDE.md must catalogue the `{name}` kernel"
+        )
+    for flag in ("`EnvDims.jobs_backend`", "`HMPCConfig.thermal_backend`"):
+        assert flag in text, (
+            f"SIMULATOR_GUIDE.md must document the {flag} dispatch flag"
+        )
+    for anchor in ("`jobs_tick` fast path", "`core/jobs_scatter.py`"):
+        assert anchor in text, f"SIMULATOR_GUIDE.md must mention {anchor}"
+
+
 def test_guide_maps_experiments_to_paper_artifacts():
     """The SIMULATOR_GUIDE's experiment chapter must name the paper
     table/figure each spec reproduces."""

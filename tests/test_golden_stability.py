@@ -1,17 +1,24 @@
-"""Golden-stability regression: with the fault subsystem compiled into
-every rollout but disabled (`fault_mode=0`, the default), the four
-pre-existing smoke experiments must reproduce their committed goldens
-*bitwise* — not merely within the 2% gate band. This guards the identity
-claim the fault tentpole rests on (DESIGN.md §16): every fault hook in
-power/thermal/jobs/env routes through `jnp.where(params.fault_mode > 0,
-faulted, nominal)` and the fault schedule spends no rollout randomness,
-so a disabled fault subsystem is invisible down to the last ulp.
+"""Golden-stability regression: every committed smoke golden must
+reproduce *bitwise* — not merely within the 2% gate band. Two identity
+claims rest on this file:
 
-Backend coverage: vmap and chunked for all four experiments, plus scan
-in-process and shard in an 8-device subprocess for `nominal` (the other
-tiers are class-tagged or grid-driven supersets of the same code paths;
-scan/shard reduction-order flips on tagged tables are covered with
-tolerances in test_experiments.py / test_multidevice.py)."""
+- the fault subsystem (DESIGN.md §16): with `fault_mode=0` every fault
+  hook routes through `jnp.where(params.fault_mode > 0, ...)` and spends
+  no rollout randomness, so a disabled fault subsystem is invisible down
+  to the last ulp;
+- the sort-based job engine (DESIGN.md §17): every table write computes
+  the same composite key order the PR-5 scatter engine materialized, so
+  swapping the engine changed no golden — tagged or untagged — by a
+  single bit. All five goldens (nominal/sensitivity/carbon/slo/
+  resilience) re-verify here against the artifacts frozen *before* the
+  engine swap.
+
+Backend coverage: vmap and chunked for all five experiments; scan
+in-process and shard in an 8-device subprocess for the *untagged*
+experiments (nominal/sensitivity/carbon). On class-tagged tables
+(slo/resilience), scan/shard change XLA's reduction associations enough
+to flip threshold-guarded scheduling decisions — those combinations are
+covered with tolerances in test_experiments.py / test_multidevice.py."""
 import json
 import os
 import subprocess
@@ -28,6 +35,11 @@ RESULTS = os.path.join(REPO, "results")
 #: The smoke goldens that predate the fault subsystem. `resilience` is
 #: deliberately absent — it runs with fault_mode=1 and has its own gate.
 PRE_FAULT_EXPERIMENTS = ("nominal", "sensitivity", "carbon", "slo")
+
+#: Experiments whose workloads carry no class tags (all-batch,
+#: NO_DEADLINE): reduction-order changes cannot flip any scheduling
+#: decision, so even scan/shard reproduce their goldens bitwise.
+UNTAGGED_EXPERIMENTS = ("nominal", "sensitivity", "carbon")
 
 
 def _committed_golden(name):
@@ -70,19 +82,33 @@ def test_smoke_goldens_bitwise_with_faults_disabled(name):
     _assert_bitwise(res_c, gold, f"{name}/chunked")
 
 
-def test_nominal_smoke_golden_bitwise_under_scan():
+def test_resilience_smoke_golden_bitwise_with_sort_engine():
+    """The resilience golden was frozen with the scatter engine under
+    fault_mode=1 (tagged tables, faults active) — the hardest identity
+    cell for the engine swap, covered under vmap + chunked (scan/shard
+    flip its threshold decisions, see module docstring)."""
+    spec = registry.get("resilience")
+    gold = _committed_golden("resilience")
+    res_v = run_experiment(spec, smoke=True, batch_mode="vmap")
+    _assert_bitwise(res_v, gold, "resilience/vmap")
+    res_c = run_experiment(spec, smoke=True, batch_mode="chunked",
+                           chunk_size=4)
+    _assert_bitwise(res_c, gold, "resilience/chunked")
+
+
+@pytest.mark.parametrize("name", UNTAGGED_EXPERIMENTS)
+def test_untagged_smoke_goldens_bitwise_under_scan(name):
     """scan reorders the metric reductions inside `lax.map`, but the
-    runner aggregates raw StepInfo on the host in float64, so even scan
-    reproduces the untagged nominal golden bitwise."""
-    res = run_experiment(registry.get("nominal"), smoke=True,
-                         batch_mode="scan")
-    _assert_bitwise(res, _committed_golden("nominal"), "nominal/scan")
+    runner aggregates raw StepInfo on the host in float64, so scan
+    reproduces every untagged golden bitwise."""
+    res = run_experiment(registry.get(name), smoke=True, batch_mode="scan")
+    _assert_bitwise(res, _committed_golden(name), f"{name}/scan")
 
 
-def test_nominal_smoke_golden_bitwise_under_shard():
-    """shard needs >1 device, so it runs in an 8-device subprocess (same
-    pattern as test_multidevice.py) and compares against the committed
-    golden in there."""
+def test_untagged_smoke_goldens_bitwise_under_shard():
+    """shard needs >1 device, so the untagged experiments run in one
+    8-device subprocess (same pattern as test_multidevice.py) and compare
+    against their committed goldens in there."""
     script = """
 import warnings; warnings.filterwarnings("ignore")
 import jax
@@ -90,20 +116,22 @@ from repro.experiments import golden as golden_mod
 from repro.experiments import registry, run_experiment
 
 assert len(jax.devices()) == 8
-gold = golden_mod.load_golden(golden_mod.golden_path(
-    "nominal", "smoke", {results!r}))
-res = run_experiment(registry.get("nominal"), smoke=True,
-                     batch_mode="shard")
-for pol in gold["policies"]:
-    for scen in gold["scenarios"]:
-        for m in gold["metrics"]:
-            want = gold["table"][pol][scen][m]
-            got = res.table[pol][scen][m]
-            assert got["mean"] == want["mean"], (pol, scen, m, got, want)
-            assert list(got["per_seed"]) == list(want["per_seed"]), (
-                pol, scen, m)
+for name in {names!r}:
+    gold = golden_mod.load_golden(golden_mod.golden_path(
+        name, "smoke", {results!r}))
+    res = run_experiment(registry.get(name), smoke=True,
+                         batch_mode="shard")
+    for pol in gold["policies"]:
+        for scen in gold["scenarios"]:
+            for m in gold["metrics"]:
+                want = gold["table"][pol][scen][m]
+                got = res.table[pol][scen][m]
+                assert got["mean"] == want["mean"], (
+                    name, pol, scen, m, got, want)
+                assert list(got["per_seed"]) == list(want["per_seed"]), (
+                    name, pol, scen, m)
 print("GOLDEN-SHARD-OK")
-""".format(results=RESULTS)
+""".format(names=UNTAGGED_EXPERIMENTS, results=RESULTS)
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")

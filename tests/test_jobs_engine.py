@@ -1,0 +1,208 @@
+"""Differential fuzz: sort-based job engine vs the frozen PR-5 scatter
+engine (`repro.core.jobs_scatter`, the oracle).
+
+Every hypothesis example drives BOTH engines through one full step's worth
+of table writes — fused tick+preempt, interactive promotion, backfill
+admission, arrival insertion, standalone preemption, pending refill — on
+the same random tables and asserts the results agree **bitwise on the
+valid region** (the scatter engine leaves stale rows beyond `count`; the
+sort engine zeroes them — `_norm` masks both to the contract surface).
+
+Bitwise, not just semantic, on *tagged* tables too: both engines compute
+identical masks with identical float arithmetic and order rows by the
+same composite (group, position) keys, so their outputs are the same
+bits, not merely the same schedule. Untagged (all-batch, `NO_DEADLINE`)
+is the golden contract; the four class mixes mirror `benchmarks/bench_jobs`.
+
+Shapes are fixed across examples so each engine jits once per mix.
+Demands are multiples of 0.25, so capacity sums are exact in f32 and the
+eviction/admission thresholds cannot sit on a rounding knife-edge.
+
+With hypothesis installed, each mix draws 50 shrinkable random seeds
+(200 examples across the four mixes). Without it the same battery runs
+over 50 fixed seeds per mix — the differential contract is the point,
+not the example source, so the fuzz never silently skips.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import jobs as sort_engine
+from repro.core import jobs_scatter as scatter_engine
+from repro.core.state import (
+    CLS_BATCH, NO_DEADLINE, Arrivals, JobTable, PendingBuffer,
+    table_active_mask,
+)
+
+#: Class mixes (interactive, batch, best_effort) — same four cells as
+#: benchmarks/bench_jobs.py. None = untagged legacy traces.
+MIXES = {
+    "untagged": None,
+    "mixed": (0.3, 0.5, 0.2),
+    "interactive_heavy": (0.7, 0.2, 0.1),
+    "best_effort_heavy": (0.1, 0.2, 0.7),
+}
+
+C, QCAP, RCAP, J = 3, 16, 12, 8
+EXAMPLES_PER_MIX = 50
+
+
+def _fuzz(fn):
+    """50 examples per mix: hypothesis-drawn seeds when available,
+    a fixed seed sweep otherwise."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=EXAMPLES_PER_MIX, deadline=None)(
+            given(seed=st.integers(0, 2**31 - 1))(fn))
+    return pytest.mark.parametrize("seed", range(EXAMPLES_PER_MIX))(fn)
+
+
+def _rand_cls(rng, shape, mix):
+    if mix is None:
+        return np.full(shape, CLS_BATCH, np.int32)
+    return rng.choice(3, size=shape, p=mix).astype(np.int32)
+
+
+def _rand_deadline(rng, shape, mix):
+    if mix is None:
+        return np.full(shape, NO_DEADLINE, np.int32)
+    return np.where(
+        rng.random(shape) < 0.5, rng.integers(0, 50, shape), NO_DEADLINE
+    ).astype(np.int32)
+
+
+def _rand_table(rng, cap, mix, maxcount):
+    count = rng.integers(0, maxcount + 1, size=C).astype(np.int32)
+    valid = np.arange(cap)[None, :] < count[:, None]
+    z = lambda a: np.where(valid, a, 0)
+    return JobTable(
+        r=jnp.asarray(z(rng.integers(1, 16, (C, cap)) * 0.25), jnp.float32),
+        dur=jnp.asarray(z(rng.integers(1, 6, (C, cap))), jnp.int32),
+        prio=jnp.asarray(z(rng.integers(0, 3, (C, cap))), jnp.int32),
+        cls=jnp.asarray(z(_rand_cls(rng, (C, cap), mix)), jnp.int32),
+        deadline=jnp.asarray(z(_rand_deadline(rng, (C, cap), mix)), jnp.int32),
+        count=jnp.asarray(count),
+    )
+
+
+def _rand_arrivals(rng, mix):
+    return Arrivals(
+        r=jnp.asarray(rng.integers(1, 16, J) * 0.25, jnp.float32),
+        dur=jnp.asarray(rng.integers(1, 6, J), jnp.int32),
+        prio=jnp.asarray(rng.integers(0, 3, J), jnp.int32),
+        cls=jnp.asarray(_rand_cls(rng, (J,), mix)),
+        deadline=jnp.asarray(_rand_deadline(rng, (J,), mix)),
+        is_gpu=jnp.asarray(rng.random(J) < 0.5),
+        valid=jnp.asarray(rng.random(J) < 0.9),
+    )
+
+
+def _norm(t: JobTable) -> JobTable:
+    """Mask a table to its contract surface (rows below `count`)."""
+    v = table_active_mask(t)
+    return JobTable(
+        jnp.where(v, t.r, 0), jnp.where(v, t.dur, 0), jnp.where(v, t.prio, 0),
+        jnp.where(v, t.cls, 0), jnp.where(v, t.deadline, 0), t.count,
+    )
+
+
+def _assert_tables_equal(a: JobTable, b: JobTable, label: str):
+    a, b = _norm(a), _norm(b)
+    for f in ("r", "dur", "prio", "cls", "deadline", "count"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{label}.{f}",
+        )
+
+
+@pytest.mark.parametrize("mix_name", list(MIXES))
+@_fuzz
+def test_engines_agree_bitwise(mix_name, seed):
+    mix = MIXES[mix_name]
+    rng = np.random.default_rng(seed)
+    q = _rand_table(rng, QCAP, mix, maxcount=QCAP - 6)
+    run = _rand_table(rng, RCAP, mix, maxcount=RCAP - 3)
+    c_eff = jnp.asarray(rng.integers(2, 16, C) * 0.25, jnp.float32)
+    power_ok = jnp.asarray(rng.random(C) < 0.8, jnp.float32)
+    t = jnp.int32(rng.integers(0, 40))
+    depth = 8
+
+    # fused completion tick + best-effort preemption
+    oq, orun, ost, on_pre, on_drop = scatter_engine.tick_and_preempt(
+        q, run, c_eff, t)
+    nq, nrun, nst, nn_pre, nn_drop = sort_engine.tick_and_preempt(
+        q, run, c_eff, t)
+    _assert_tables_equal(oq, nq, "tick.queues")
+    _assert_tables_equal(orun, nrun, "tick.running")
+    for f, o, n in zip(ost._fields, ost, nst):
+        np.testing.assert_array_equal(
+            np.asarray(o), np.asarray(n), err_msg=f"stats.{f}")
+    assert int(on_pre) == int(nn_pre) and int(on_drop) == int(nn_drop)
+
+    # interactive promotion within the admission window
+    op = scatter_engine.promote_interactive(oq, window=depth)
+    np_ = sort_engine.promote_interactive(nq, window=depth)
+    _assert_tables_equal(op, np_, "promote")
+
+    # FIFO + backfill admission
+    oq2, orun2 = scatter_engine.admit_backfill(op, orun, c_eff, power_ok, depth)
+    nq2, nrun2 = sort_engine.admit_backfill(np_, nrun, c_eff, power_ok, depth)
+    _assert_tables_equal(oq2, nq2, "admit.queues")
+    _assert_tables_equal(orun2, nrun2, "admit.running")
+
+    # arrival insertion at policy-chosen clusters
+    jobs = _rand_arrivals(rng, mix)
+    assign = jnp.asarray(rng.integers(-1, C, J), jnp.int32)
+    oq3, od = scatter_engine.insert_arrivals(oq2, jobs, assign, C)
+    nq3, nd = sort_engine.insert_arrivals(nq2, jobs, assign, C)
+    _assert_tables_equal(oq3, nq3, "insert")
+    assert int(od) == int(nd)
+
+    # standalone preemption under a capacity squeeze
+    oq4, orun4, opn, opd = scatter_engine.preempt_best_effort(
+        oq3, orun2, c_eff * 0.5)
+    nq4, nrun4, npn, npd = sort_engine.preempt_best_effort(
+        nq3, nrun2, c_eff * 0.5)
+    _assert_tables_equal(oq4, nq4, "preempt.queues")
+    _assert_tables_equal(orun4, nrun4, "preempt.running")
+    assert int(opn) == int(npn) and int(opd) == int(npd)
+
+    # pending-buffer refill from deferred offers
+    offered = scatter_engine.merge_offered(PendingBuffer.zeros(6), jobs)
+    assign2 = jnp.asarray(rng.integers(-1, C, J + 6), jnp.int32)
+    opb, opd2 = scatter_engine.refill_pending(offered, assign2, 5)
+    npb, npd2 = sort_engine.refill_pending(offered, assign2, 5)
+    for f in ("r", "dur", "prio", "cls", "deadline", "is_gpu", "valid"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(opb, f)), np.asarray(getattr(npb, f)),
+            err_msg=f"pending.{f}")
+    assert int(opd2) == int(npd2)
+
+
+def test_jobs_tick_ref_backend_is_engine_tick():
+    """The dispatcher's "ref" backend is `engine_tick` itself (bitwise)."""
+    rng = np.random.default_rng(11)
+    q = _rand_table(rng, QCAP, MIXES["mixed"], QCAP - 4)
+    run = _rand_table(rng, RCAP, MIXES["mixed"], RCAP - 2)
+    c_eff = jnp.full((C,), 6.0)
+    power_ok = jnp.ones((C,))
+    a = sort_engine.engine_tick(q, run, c_eff, power_ok, jnp.int32(3), 8)
+    b = sort_engine.jobs_tick(
+        q, run, c_eff, power_ok, jnp.int32(3), 8, backend="ref")
+    _assert_tables_equal(a[0], b[0], "queues")
+    _assert_tables_equal(a[1], b[1], "running")
+    for o, n in zip(a[2], b[2]):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(n))
+
+
+def test_jobs_tick_rejects_unknown_backend():
+    q = JobTable.zeros(C, QCAP)
+    run = JobTable.zeros(C, RCAP)
+    with pytest.raises(ValueError, match="backend"):
+        sort_engine.jobs_tick(
+            q, run, jnp.ones(C), jnp.ones(C), jnp.int32(0), 8, backend="cuda")

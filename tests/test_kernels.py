@@ -94,6 +94,96 @@ def test_thermal_rollout_matches_ref(bsz, horizon, d, block_b):
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-2, rtol=1e-5)
 
 
+def _rand_table(rng, clusters, cap, tagged, maxcount):
+    from repro.core.state import CLS_BATCH, NO_DEADLINE, JobTable
+
+    count = rng.integers(0, maxcount + 1, size=clusters).astype(np.int32)
+    pos = np.arange(cap)[None, :]
+    valid = pos < count[:, None]
+    r = np.where(valid, rng.integers(1, 16, (clusters, cap)) * 0.25, 0)
+    dur = np.where(valid, rng.integers(1, 6, (clusters, cap)), 0)
+    prio = np.where(valid, rng.integers(0, 3, (clusters, cap)), 0)
+    if tagged:
+        cls = np.where(valid, rng.integers(0, 3, (clusters, cap)), 0)
+        dl = np.where(
+            valid,
+            np.where(rng.random((clusters, cap)) < 0.5,
+                     rng.integers(0, 50, (clusters, cap)), NO_DEADLINE),
+            0,
+        )
+    else:
+        cls = np.where(valid, CLS_BATCH, 0)
+        dl = np.where(valid, NO_DEADLINE, 0)
+    return JobTable(
+        jnp.asarray(r, jnp.float32), jnp.asarray(dur, jnp.int32),
+        jnp.asarray(prio, jnp.int32), jnp.asarray(cls, jnp.int32),
+        jnp.asarray(dl, jnp.int32), jnp.asarray(count),
+    )
+
+
+def _assert_jobs_tick_parity(q, run, c_eff, power_ok, t, depth):
+    """Tables, counts and integer stats bit-exact; f32 slack sums allclose
+    (the kernel reduces per-cluster partials, the engine reduces globally —
+    same terms, different association)."""
+    from repro.core.jobs import engine_tick
+    from repro.kernels.jobs_tick import jobs_tick as jobs_tick_kernel
+
+    ref_out = engine_tick(q, run, c_eff, power_ok, t, depth)
+    ker_out = jobs_tick_kernel(q, run, c_eff, power_ok, t, depth)
+    for a, b in ((ref_out[0], ker_out[0]), (ref_out[1], ker_out[1])):
+        for f in ("r", "dur", "prio", "cls", "deadline", "count"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+            )
+    rs, ks = ref_out[2], ker_out[2]
+    assert int(rs.n_done) == int(ks.n_done)
+    np.testing.assert_array_equal(np.asarray(rs.done_by_cls), np.asarray(ks.done_by_cls))
+    np.testing.assert_array_equal(
+        np.asarray(rs.violated_by_cls), np.asarray(ks.violated_by_cls))
+    np.testing.assert_allclose(
+        np.asarray(rs.slack_by_cls), np.asarray(ks.slack_by_cls), atol=1e-4)
+    assert int(ref_out[3]) == int(ker_out[3])   # n_preempted
+    assert int(ref_out[4]) == int(ker_out[4])   # n_dropped
+
+
+@pytest.mark.parametrize("clusters,qcap,rcap", [
+    (3, 16, 12),      # sub-lane caps (pad to one 128-lane block)
+    (5, 128, 64),     # lane-aligned queue, sub-lane run buffer
+    (2, 256, 128),    # multi-lane queue blocks
+])
+@pytest.mark.parametrize("tagged", [False, True])
+def test_jobs_tick_kernel_matches_engine(clusters, qcap, rcap, tagged):
+    rng = np.random.default_rng(hash((clusters, qcap, tagged)) % 2**31)
+    for trial in range(4):
+        q = _rand_table(rng, clusters, qcap, tagged, qcap - 2)
+        run = _rand_table(rng, clusters, rcap, tagged, rcap - 2)
+        c_eff = jnp.asarray(rng.integers(2, 30, clusters) * 0.25, jnp.float32)
+        power_ok = jnp.asarray((rng.random(clusters) < 0.8), jnp.float32)
+        t = jnp.int32(rng.integers(0, 40))
+        depth = (8, 16, qcap, 32)[trial]
+        _assert_jobs_tick_parity(q, run, c_eff, power_ok, t, depth)
+
+
+def test_jobs_tick_kernel_empty_tables():
+    from repro.core.state import JobTable
+
+    q = JobTable.zeros(4, 32)
+    run = JobTable.zeros(4, 16)
+    c_eff = jnp.full((4,), 8.0)
+    power_ok = jnp.ones((4,))
+    _assert_jobs_tick_parity(q, run, c_eff, power_ok, jnp.int32(0), 16)
+
+
+def test_jobs_tick_kernel_full_run_buffer():
+    """Admission must stall bitwise-identically when the run buffer is full."""
+    rng = np.random.default_rng(7)
+    q = _rand_table(rng, 3, 32, True, 30)
+    run = _rand_table(rng, 3, 16, True, 16)   # every run row occupied
+    c_eff = jnp.full((3,), 100.0)             # capacity is not the binding limit
+    power_ok = jnp.ones((3,))
+    _assert_jobs_tick_parity(q, run, c_eff, power_ok, jnp.int32(5), 32)
+
+
 def test_thermal_rollout_throttle_engages():
     """Above theta_soft the throttle must reduce effective heat."""
     d = 128

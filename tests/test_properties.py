@@ -1,15 +1,34 @@
-"""Hypothesis property tests on system invariants."""
+"""Property tests on system invariants.
+
+Hypothesis-driven where available; the sort-key/engine-order properties
+at the bottom are seed-parametrized so they run even without hypothesis
+(they pin the sort engine's correctness contract — DESIGN.md §17 — and
+must not silently skip).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade: skip @given tests, keep seeded ones running
+    def given(*_a, **_k):
+        return lambda fn: pytest.mark.skip("hypothesis not installed")(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
 
 from repro.core import make_params
 from repro.core import thermal as T
 from repro.core import jobs as J
+from repro.core import sortkeys as sk
 from repro.core.state import JobTable
 from repro.distributed.compression import quantize_int8, dequantize_int8
 from repro.optim.adamw import OptConfig, schedule_lr
@@ -180,6 +199,118 @@ def test_int8_quantization_error_bound(vals):
     q, scale = quantize_int8(x)
     err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
     assert (err <= float(scale) * 0.5 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Sort-key / engine-order properties (DESIGN.md §17). Seed-parametrized —
+# they run with or without hypothesis.
+# ---------------------------------------------------------------------------
+
+SEEDS = range(10)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("num_groups", [2, 3])
+def test_group_order_matches_stable_argsort(seed, num_groups):
+    """The counting-sort fast path IS the stable argsort of the groups."""
+    rng = np.random.default_rng(seed)
+    g = rng.integers(0, num_groups, (4, 33)).astype(np.int32)
+    got = np.asarray(sk.group_order(jnp.asarray(g), num_groups))
+    want = np.argsort(g, axis=-1, kind="stable")
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_group_order_matches_fused_key_sort(seed):
+    """`group_order` == the permutation the executable spec computes:
+    one fused `sort_by_key` on `order_key(group, position)` carrying the
+    source positions."""
+    rng = np.random.default_rng(seed + 100)
+    g = jnp.asarray(rng.integers(0, 3, (2, 64)), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32)[None, :], g.shape)
+    (perm,) = sk.sort_by_key(sk.order_key(g, pos), [pos])
+    np.testing.assert_array_equal(
+        np.asarray(perm), np.asarray(sk.group_order(g, 3)))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_class_key_orders_slo_priority_fifo_stable(seed):
+    """Sorting by the class composite key yields interactive < batch <
+    best_effort, FIFO-stable within each class."""
+    rng = np.random.default_rng(seed + 200)
+    cls = jnp.asarray(rng.integers(0, 3, 64), jnp.int32)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    s_cls, s_pos = sk.sort_by_key(sk.order_key(sk.class_rank(cls), pos),
+                                  [cls, pos])
+    s_cls, s_pos = np.asarray(s_cls), np.asarray(s_pos)
+    assert (np.diff(s_cls) >= 0).all()          # class-priority ordering
+    for k in range(3):
+        assert (np.diff(s_pos[s_cls == k]) > 0).all()  # FIFO within class
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_class_fifo_rank_reduces_to_fifo_without_priority(seed):
+    rng = np.random.default_rng(seed + 300)
+    mask = jnp.asarray(rng.random(32) < 0.6)
+    none = jnp.zeros(32, bool)
+    np.testing.assert_array_equal(
+        np.asarray(sk.class_fifo_rank(mask, none))[np.asarray(mask)],
+        np.asarray(sk.fifo_rank(mask))[np.asarray(mask)])
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_preempt_cap_per_cluster_bound(seed):
+    """Under arbitrary capacity pressure, at most PREEMPT_CAP best-effort
+    jobs leave each cluster's running set in one step."""
+    rng = np.random.default_rng(seed + 400)
+    clusters, rcap = 4, 32
+    count = rng.integers(rcap // 2, rcap + 1, clusters).astype(np.int32)
+    valid = np.arange(rcap)[None, :] < count[:, None]
+    run = JobTable(
+        r=jnp.asarray(np.where(valid, rng.integers(1, 8, (clusters, rcap)) * 0.5, 0),
+                      jnp.float32),
+        dur=jnp.asarray(np.where(valid, 5, 0), jnp.int32),  # nothing completes
+        prio=jnp.zeros((clusters, rcap), jnp.int32),
+        cls=jnp.asarray(np.where(valid, 2, 0), jnp.int32),  # all best-effort
+        deadline=jnp.asarray(np.where(valid, J.NO_DEADLINE, 0), jnp.int32),
+        count=jnp.asarray(count),
+    )
+    q = JobTable.zeros(clusters, 64)
+    c_eff = jnp.asarray(rng.uniform(0.0, 2.0, clusters), jnp.float32)  # squeeze
+    for fn in (
+        lambda: J.preempt_best_effort(q, run, c_eff)[:2],
+        lambda: J.tick_and_preempt(q, run, c_eff, jnp.int32(0))[:2],
+    ):
+        _, run2 = fn()
+        evicted = np.asarray(run.count) - np.asarray(run2.count)
+        assert (evicted >= 0).all() and (evicted <= J.PREEMPT_CAP).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_compact_conserves_mass_multicluster(seed):
+    """Per-cluster job mass (sum of r) is exactly partitioned by `_compact`:
+    kept mass survives at the front, nothing is duplicated or invented."""
+    rng = np.random.default_rng(seed + 500)
+    clusters, cap = 5, 24
+    count = rng.integers(0, cap + 1, clusters).astype(np.int32)
+    valid = np.arange(cap)[None, :] < count[:, None]
+    r = np.where(valid, rng.integers(1, 16, (clusters, cap)) * 0.25, 0)
+    table = JobTable(
+        r=jnp.asarray(r, jnp.float32),
+        dur=jnp.asarray(valid, jnp.int32), prio=jnp.zeros((clusters, cap), jnp.int32),
+        cls=jnp.zeros((clusters, cap), jnp.int32),
+        deadline=jnp.asarray(np.where(valid, J.NO_DEADLINE, 0), jnp.int32),
+        count=jnp.asarray(count),
+    )
+    keep = valid & (rng.random((clusters, cap)) < 0.5)
+    out = J._compact(table, jnp.asarray(keep), cap)
+    np.testing.assert_array_equal(np.asarray(out.count), keep.sum(axis=1))
+    # exact mass partition (0.25-multiples sum exactly in f32)
+    np.testing.assert_array_equal(
+        np.asarray(out.r.sum(axis=1)), np.where(keep, r, 0).sum(axis=1))
+    # zeroed tail
+    tail = ~(np.arange(cap)[None, :] < keep.sum(axis=1)[:, None])
+    assert float(np.abs(np.asarray(out.r))[tail].sum()) == 0.0
 
 
 @given(st.integers(1, 64), st.integers(1, 8))
