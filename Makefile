@@ -21,7 +21,7 @@ test:            ## tier-1 test suite (slow tests deselected)
 docs:            ## docs consistency: §-citations, scenario/experiment tables, artifact schema, md links
 	$(PY) -m pytest -q tests/test_docs.py
 
-smoke:           ## CI-sized experiments (nominal+sensitivity+carbon+slo) vs their golden baselines
+smoke:           ## CI-sized experiments (every registered spec, fleet included) vs their golden baselines
 	$(PY) -m repro.experiments run --exp all --smoke
 
 bench-gate:      ## fresh steps/sec vs committed BENCH_*.json (±30%; warn-only when $$CI is set)

@@ -1,0 +1,208 @@
+"""Fleet-scale benchmark (DESIGN.md §18): rollout throughput vs fleet size
+D and vs device count on the DC-axis (cells, dcs) mesh, written to
+BENCH_fleet.latest.json at the repo root (the committed BENCH_fleet.json
+baseline is updated via benchmarks.check_regression --update).
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet
+  PYTHONPATH=src python -m benchmarks.run --only fleet
+
+Two sections:
+
+- ``per_fleet_size`` — greedy rollouts over generated fleets at D = 32 /
+  64 / 128 under the vmap backend, second-call timing (compile excluded).
+  DC-steps/sec (env steps x D) is the scaling figure of merit: it should
+  stay roughly flat if per-DC cost is O(1) in fleet size.
+- ``per_device_count`` — the D=128 fleet carved into 8 self-contained
+  blocks (`generate_fleet_blocks`), rolled out under ``batch_mode=
+  "shard_dc"`` in subprocesses forcing 1/2/4/8 host devices (the same
+  harness as the shard-parity test in tests/test_multidevice.py).
+  `speedup_vs_1dev` is reported against `ideal_speedup = min(devices,
+  host_cores)`: forced host-platform devices are threads, so on a
+  single-core host the honest ideal is 1.0 and `parallel_efficiency`
+  near 1.0 means sharding adds no overhead; on a multi-core host the
+  same numbers show near-linear scaling up to the core count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.core import EnvDims, metrics
+from repro.core.env import rollout_params
+from repro.core.policies import make_policy
+from repro.plant import fleet_dims, fleet_spec
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_fleet.json")
+BENCH_LATEST = os.path.join(REPO_ROOT, "BENCH_fleet.latest.json")
+
+FLEET_SIZES = (32, 64, 128)
+DEVICE_LADDER = (1, 2, 4, 8)
+_BLOCKS = 8  # D=128 carved into 8 blocks of 16 DCs for the device ladder
+
+
+def _bench_overrides(fast: bool) -> Dict[str, int]:
+    return dict(
+        horizon=24 if fast else 96,
+        max_arrivals=64, queue_cap=256, run_cap=256,
+        pending_cap=128, admit_depth=64, policy_depth=128,
+    )
+
+
+def per_fleet_size(fast: bool = False, seeds: int = 2) -> Dict[str, Dict[str, float]]:
+    """Greedy vmap throughput vs fleet size, compile excluded."""
+    from repro.core.workload import synthesize_trace
+    from repro.core.params import stack_params
+
+    sizes = (FLEET_SIZES[0], FLEET_SIZES[-1]) if fast else FLEET_SIZES
+    out: Dict[str, Dict[str, float]] = {}
+    for D in sizes:
+        spec = fleet_spec(D, seed=0)
+        dims = fleet_dims(spec, **_bench_overrides(fast))
+        params = spec.build()
+        pol = make_policy("greedy", dims)
+        traces = stack_params([
+            synthesize_trace(k, dims, params, cap_per_step=48)
+            for k in range(seeds)
+        ])
+        stacked = (
+            stack_params([params] * seeds),
+            traces,
+            jax.numpy.stack([jax.random.PRNGKey(k) for k in range(seeds)]),
+        )
+
+        def cell(p, t, r, pol=pol, dims=dims):
+            _, infos = rollout_params(dims, pol, p, t, r)
+            return metrics.summarize(infos)
+
+        run_fn = jax.jit(jax.vmap(cell))
+        t0 = time.time()
+        jax.block_until_ready(run_fn(*stacked))
+        compile_s = time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(run_fn(*stacked))
+        wall = time.time() - t0
+        out[f"D_{D}"] = {
+            "num_dcs": D,
+            "num_clusters": dims.num_clusters,
+            "wall_s": wall,
+            "steps_per_s": seeds * dims.horizon / wall,
+            "dc_steps_per_s": seeds * dims.horizon * D / wall,
+            "first_call_s": compile_s,
+        }
+    return out
+
+
+_LADDER_SCRIPT = """
+import warnings; warnings.filterwarnings("ignore")
+import dataclasses, json, time
+import jax
+from repro.core import metrics, rollout_params
+from repro.core.policies import make_policy
+from repro.plant import generate_fleet_blocks
+from repro.scenarios.suite import build_fleet_cells, make_runner
+
+fast = {fast}
+block_params, dims, _ = generate_fleet_blocks(128, blocks={blocks}, seed=0)
+dims = dataclasses.replace(dims, horizon=24 if fast else 96, max_arrivals=64,
+                           queue_cap=256, run_cap=256, pending_cap=128,
+                           admit_depth=64, policy_depth=128)
+ps, ts, rs = build_fleet_cells(block_params, seeds=1, dims=dims,
+                               trace_overrides={{"cap_per_step": 16}})
+pol = make_policy("greedy", dims)
+def cell(p, t, r):
+    _, infos = rollout_params(dims, pol, p, t, r)
+    return metrics.summarize(infos)
+run = make_runner(cell, 1, "shard_dc", dims=dims)
+jax.block_until_ready(run(ps, ts, rs))
+t0 = time.time()
+jax.block_until_ready(run(ps, ts, rs))
+wall = time.time() - t0
+print(json.dumps({{"wall_s": wall, "devices": len(jax.devices())}}))
+"""
+
+
+def per_device_count(fast: bool = False) -> Dict[str, Dict[str, float]]:
+    """shard_dc throughput at D=128 vs forced host device count."""
+    ladder = (DEVICE_LADDER[0], DEVICE_LADDER[-1]) if fast else DEVICE_LADDER
+    host_cores = os.cpu_count() or 1
+    out: Dict[str, Dict[str, float]] = {}
+    base_steps = None
+    horizon = 24 if fast else 96
+    for n in ladder:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+        script = _LADDER_SCRIPT.format(fast=fast, blocks=_BLOCKS)
+        proc = subprocess.run(
+            [sys.executable, "-c", script], env=env, capture_output=True,
+            text=True, timeout=1200,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"device-ladder run (n={n}) failed:\n{proc.stdout}\n{proc.stderr}"
+            )
+        meas = json.loads(proc.stdout.strip().splitlines()[-1])
+        assert meas["devices"] == n, meas
+        # one cell of 8 blocks x 16 DCs: fleet env steps delivered per sec
+        steps_per_s = horizon / meas["wall_s"]
+        if base_steps is None:
+            base_steps = steps_per_s
+        speedup = steps_per_s / base_steps
+        ideal = float(min(n, host_cores))
+        out[f"devices_{n}"] = {
+            "devices": n,
+            "wall_s": meas["wall_s"],
+            "steps_per_s": steps_per_s,
+            "dc_steps_per_s": steps_per_s * 128,
+            "speedup_vs_1dev": speedup,
+            "ideal_speedup": ideal,
+            "parallel_efficiency": speedup / ideal,
+            "host_cpu_count": host_cores,
+        }
+    return out
+
+
+def main(fast: bool = False, out_path: str = BENCH_LATEST):
+    """Writes to `BENCH_fleet.latest.json` by default; the committed
+    `BENCH_fleet.json` baseline is only (re)written by the
+    bench-regression gate (`--update`)."""
+    sizes = per_fleet_size(fast=fast)
+    print(f"# fleet-size scaling (greedy, vmap, fast={fast})")
+    print("fleet,wall_s,steps_per_s,dc_steps_per_s")
+    for name, r in sizes.items():
+        print(f"{name},{r['wall_s']:.3f},{r['steps_per_s']:.1f},"
+              f"{r['dc_steps_per_s']:.0f}")
+
+    ladder = per_device_count(fast=fast)
+    print(f"\n# device ladder (D=128, {_BLOCKS} blocks, shard_dc, "
+          f"host_cores={os.cpu_count()})")
+    print("devices,wall_s,steps_per_s,speedup,ideal,efficiency")
+    for name, r in ladder.items():
+        print(f"{r['devices']},{r['wall_s']:.3f},{r['steps_per_s']:.1f},"
+              f"{r['speedup_vs_1dev']:.2f},{r['ideal_speedup']:.0f},"
+              f"{r['parallel_efficiency']:.2f}")
+
+    payload = {
+        "bench": "fleet",
+        "fast": fast,
+        "jax_backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "host_cpu_count": os.cpu_count(),
+        "per_fleet_size": sizes,
+        "per_device_count": ladder,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {out_path}")
+    return sizes, ladder
+
+
+if __name__ == "__main__":
+    main(fast="--fast" in sys.argv[1:])

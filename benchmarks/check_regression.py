@@ -54,6 +54,7 @@ BASELINES = {
     "grid": os.path.join(REPO_ROOT, "BENCH_grid.json"),
     "jobs": os.path.join(REPO_ROOT, "BENCH_jobs.json"),
     "faults": os.path.join(REPO_ROOT, "BENCH_faults.json"),
+    "fleet": os.path.join(REPO_ROOT, "BENCH_fleet.json"),
 }
 BAND = 0.30  # fresh/baseline throughput ratio must stay within [0.7, 1.3]
 
@@ -120,6 +121,24 @@ def faults_pairs(baseline: Dict, fresh: Dict) -> Pairs:
     return pairs
 
 
+def fleet_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for name, b in baseline.get("per_fleet_size", {}).items():
+        f = fresh.get("per_fleet_size", {}).get(name)
+        if f:
+            pairs.append((f"fleet/size/{name}",
+                          b["dc_steps_per_s"], f["dc_steps_per_s"]))
+    # Device-ladder wall-clock is only comparable between runs with the
+    # same amount of real parallelism underneath the forced devices.
+    if baseline.get("host_cpu_count") == fresh.get("host_cpu_count"):
+        for name, b in baseline.get("per_device_count", {}).items():
+            f = fresh.get("per_device_count", {}).get(name)
+            if f:
+                pairs.append((f"fleet/ladder/{name}",
+                              b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
 def kernel_pairs(baseline: Dict, fresh: Dict) -> Pairs:
     pairs: Pairs = []
     bt, ft = baseline.get("thermal_rollout", {}), fresh.get("thermal_rollout", {})
@@ -174,7 +193,9 @@ def _merge_payload_best(a: Dict, b: Dict) -> Dict:
                 "per_generator": "traces_per_s", "carbon_rollout": "steps_per_s",
                 "per_mix": "jobs_per_s",
                 "per_fault_schedule": "schedules_per_s",
-                "fault_rollout": "steps_per_s"}
+                "fault_rollout": "steps_per_s",
+                "per_fleet_size": "dc_steps_per_s",
+                "per_device_count": "steps_per_s"}
     for sect, tkey in sections.items():
         for key, cell in a.get(sect, {}).items():
             tgt = out.get(sect, {}).get(key)
@@ -229,7 +250,8 @@ def main(argv=None) -> int:
     warn_only = args.warn_only or bool(os.environ.get("CI"))
 
     from benchmarks import (
-        bench_faults, bench_grid, bench_jobs, bench_kernels, bench_scenarios,
+        bench_faults, bench_fleet, bench_grid, bench_jobs, bench_kernels,
+        bench_scenarios,
     )
 
     suites = (
@@ -238,6 +260,7 @@ def main(argv=None) -> int:
         ("grid", bench_grid, grid_pairs),
         ("jobs", bench_jobs, jobs_pairs),
         ("faults", bench_faults, faults_pairs),
+        ("fleet", bench_fleet, fleet_pairs),
     )
     if args.only:
         suites = tuple(s for s in suites if s[0] in args.only)
@@ -249,7 +272,7 @@ def main(argv=None) -> int:
             for name, mod, _ in suites:
                 base_path = BASELINES[name]
                 fast = bool(_load(base_path).get("fast")) if os.path.exists(base_path) \
-                    else (name in ("scenarios", "grid", "jobs", "faults"))
+                    else (name in ("scenarios", "grid", "jobs", "faults", "fleet"))
                 merged = _measure_best(name, mod, fast, runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
@@ -268,7 +291,7 @@ def main(argv=None) -> int:
                 print(f"note: no committed baseline at {base_path}; "
                       f"emitting one (best of {runs} runs)")
                 merged = _measure_best(
-                    name, mod, name in ("scenarios", "grid", "jobs", "faults"), runs, tmp)
+                    name, mod, name in ("scenarios", "grid", "jobs", "faults", "fleet"), runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
                 continue

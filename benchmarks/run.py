@@ -52,7 +52,7 @@ def main() -> None:
                     help="tiny scenario suite + nominal smoke experiment, then exit")
     ap.add_argument("--only", default="",
                     help="comma list: rq1,rq2,complexity,throughput,kernels,"
-                         "scenarios,grid,jobs,faults")
+                         "scenarios,grid,jobs,faults,fleet")
     args, _ = ap.parse_known_args()
     if args.smoke:
         sys.exit(smoke())
@@ -141,6 +141,17 @@ def main() -> None:
         rows.append(("faults", time.time() - t0,
                      f"armed_sps={roll['faults_on']['steps_per_s']:.0f} "
                      f"armed/stripped={ratio:.2f}x"))
+
+    if want("fleet"):
+        from benchmarks import bench_fleet
+
+        print("\n=== Fleet scaling: steps/sec vs D + DC-axis device ladder ===")
+        t0 = time.time()
+        sizes, ladder = bench_fleet.main(fast=args.fast)
+        top = max(ladder.values(), key=lambda r: r["devices"])
+        rows.append(("fleet", time.time() - t0,
+                     f"dc_sps_D128={sizes['D_128']['dc_steps_per_s']:.0f} "
+                     f"eff@{top['devices']}dev={top['parallel_efficiency']:.2f}"))
 
     if want("kernels"):
         from benchmarks import bench_kernels

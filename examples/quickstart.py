@@ -5,24 +5,23 @@ the greedy scheduler, print Table-II metrics.
 """
 import jax
 
-from repro.core import DataCenterGym, EnvDims, make_params, metrics, rollout, synthesize_trace
-from repro.core.policies import make_policy
+from repro import api as dcg
 
 
 def main():
-    dims = EnvDims(horizon=288)          # 24 h at 5-minute steps
-    params = make_params()               # 20 clusters x 4 DCs (paper Table I)
-    trace = synthesize_trace(seed=0, dims=dims, params=params)  # Alibaba-like
-    env = DataCenterGym(dims, params)
-    policy = make_policy("greedy", dims)
+    dims = dcg.EnvDims(horizon=288)      # 24 h at 5-minute steps
+    params = dcg.make_params()           # 20 clusters x 4 DCs (paper Table I)
+    trace = dcg.synthesize_trace(seed=0, dims=dims, params=params)  # Alibaba-like
+    env = dcg.DataCenterGym(dims, params)
+    policy = dcg.make_policy("greedy", dims)
 
     # the whole episode (policy + physics) is ONE jitted XLA program
-    state, infos = jax.jit(lambda rng: rollout(env, policy, trace, rng))(
+    state, infos = jax.jit(lambda rng: dcg.rollout(env, policy, trace, rng))(
         jax.random.PRNGKey(0)
     )
 
     print("Table-II metrics (greedy, nominal 200 jobs/step):")
-    for k, v in metrics.summarize(infos).items():
+    for k, v in dcg.metrics.summarize(infos).items():
         print(f"  {k:18s} {float(v):12.2f}")
     print("\nper-DC final temperatures (C):", [f"{t:.1f}" for t in infos.theta[-1]])
 

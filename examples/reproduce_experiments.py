@@ -13,15 +13,15 @@ from __future__ import annotations
 
 import sys
 
-from repro.experiments import (
-    check_margins, compare_to_golden, golden_path, load_golden,
-    registry, run_experiment,
+from repro.api import (
+    check_margins, compare_to_golden, experiments, golden_path, load_golden,
+    run_experiment,
 )
 
 
 def main(smoke: bool = True) -> int:
     failures = 0
-    for spec in registry.all_experiments():
+    for spec in experiments.all_experiments():
         tier = spec.tier_name(smoke)
         print(f"\n=== {spec.name} ({tier}): reproduces paper {spec.paper_ref} ===")
         result = run_experiment(spec, smoke=smoke)

@@ -13,9 +13,8 @@ See SIMULATOR_GUIDE.md for the backend decision table.
 import argparse
 import time
 
-from repro.core import EnvDims
-from repro.scenarios import evaluate_suite, get
-from repro.scenarios.suite import BATCH_MODES
+from repro import api as dcg
+from repro.api import BATCH_MODES, EnvDims, evaluate_suite
 
 SCENARIOS = ("nominal", "heatwave", "flash_crowd", "oversubscribed",
              "cooling_degraded", "price_spike")
@@ -35,7 +34,7 @@ def main():
 
     print("Scenario suite:")
     for name in SCENARIOS:
-        print(f"  {name:17s} {get(name).description}")
+        print(f"  {name:17s} {dcg.scenarios.get(name).description}")
 
     t0 = time.time()
     res = evaluate_suite(POLICIES, scenarios=SCENARIOS, seeds=4, dims=dims,

@@ -1,0 +1,70 @@
+"""Single-import facade over the simulator's public surface.
+
+    from repro import api as dcg
+
+    params = dcg.make_params()                      # Table-I plant
+    fleet = dcg.generate_fleet(128, seed=0)         # 128-DC fleet (§18)
+    policy = dcg.make_policy("h_mpc", dcg.EnvDims())
+    res = dcg.evaluate_suite(["greedy"], scenarios=["nominal"], seeds=4)
+    result = dcg.run_experiment(dcg.experiments.get("nominal"), smoke=True)
+
+Everything re-exported here keeps its original home (`repro.core`,
+`repro.plant`, `repro.scenarios`, `repro.experiments`) — deep imports
+stay supported; this module only collects the names a typical user
+script needs so examples and notebooks import one module. Registries
+are exposed as namespaced modules (`api.plants`, `api.scenarios`,
+`api.experiments`) rather than flattened, since their `get`/`names`
+would collide.
+"""
+from __future__ import annotations
+
+# -- core: plant, env, rollout, metrics -------------------------------------
+from repro.core import metrics
+from repro.core.env import (
+    DataCenterGym, GymAdapter, StepInfo, observe, rollout, rollout_params,
+)
+from repro.core.params import (
+    DC_NAMES, EnvDims, EnvParams, make_params, perturb, stack_params,
+)
+from repro.core.policies import ALL_POLICIES, make_policy
+from repro.core.workload import Trace, synthesize_trace
+
+# -- plant: declarative specs, region catalogue, fleet generation (§18) -----
+from repro.plant import (
+    DCSpec, PlantSpec, RegionSpec,
+    DEFAULT_REGION_MIX, REGIONS, REGION_NAMES, get_region,
+    fleet_dims, fleet_spec, generate_fleet, generate_fleet_blocks,
+)
+from repro.plant import registry as plants
+
+# -- scenarios: named operating conditions + batched evaluation -------------
+from repro.scenarios import Scenario, evaluate_suite
+from repro.scenarios import registry as scenarios
+from repro.scenarios.suite import BATCH_MODES, SuiteResult, evaluate_infos
+
+# -- experiments: paper tables as executable specs --------------------------
+from repro.experiments import (
+    ExperimentResult, ExperimentSpec,
+    check_bounds, check_margins, compare_to_golden,
+    golden_path, load_golden, run_experiment, write_artifacts,
+)
+from repro.experiments import registry as experiments
+
+__all__ = [
+    # core
+    "ALL_POLICIES", "DC_NAMES", "DataCenterGym", "EnvDims", "EnvParams",
+    "GymAdapter", "StepInfo", "Trace", "make_params", "make_policy",
+    "metrics", "observe", "perturb", "rollout", "rollout_params",
+    "stack_params", "synthesize_trace",
+    # plant
+    "DCSpec", "PlantSpec", "RegionSpec", "DEFAULT_REGION_MIX", "REGIONS",
+    "REGION_NAMES", "get_region", "fleet_dims", "fleet_spec",
+    "generate_fleet", "generate_fleet_blocks", "plants",
+    # scenarios
+    "BATCH_MODES", "Scenario", "SuiteResult", "evaluate_infos",
+    "evaluate_suite", "scenarios",
+    # experiments
+    "ExperimentResult", "ExperimentSpec", "check_bounds", "check_margins",
+    "compare_to_golden", "golden_path", "load_golden", "run_experiment",
+    "write_artifacts", "experiments",
+]

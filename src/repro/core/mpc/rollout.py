@@ -291,6 +291,113 @@ def temporal_defer_mask(
     return candidate & (hold_rank < budget)
 
 
+# ---------------------------------------------------------------------------
+# Region decomposition of the stage-1 solve (DESIGN.md §18).
+#
+# At fleet scale (D = 64-256) the supervisory solve's (H1, D+1, 2) routing
+# softmax dominates H-MPC cost. `region_reduce` folds the plant onto its
+# R regions (`EnvParams.region_id`) once per solve — the cheap global
+# coordination pass exchanging region-level capacity/price/thermal
+# aggregates — so the Adam program runs at dimension R; `region_distribute`
+# then solves each region's subproblem in closed form, splitting the
+# region quota over member DCs by effective (throttle- and fault-
+# discounted) capacity share. Total cost O(iters1*H1*R) + O(D): sub-
+# quadratic in D, versus the joint solve's O(iters1*H1*D).
+# ---------------------------------------------------------------------------
+
+
+def region_reduce(params: EnvParams, agg: AggregateParams, num_regions: int):
+    """Fold plant params + aggregates onto regions.
+
+    Returns (params_r, agg_r, w) where `params_r` has every (D,) leaf and
+    (S, D) trace reduced to dimension R (extensive quantities — thermal
+    mass, cooling, capacity — sum; intensive ones — ambient, tariffs,
+    carbon, gains — average weighted by DC capacity; thermal resistances
+    combine in parallel) and `w` is the (D,) within-region capacity
+    weight used for the matching state reduction. Cluster-level and
+    fault leaves are left untouched: the stage-1 program never reads
+    them.
+    """
+    rid = params.region_id
+    R = num_regions
+    rsum = lambda x: jax.ops.segment_sum(x, rid, num_segments=R)
+    cap_dc = agg.c_max.sum(-1)                           # (D,)
+    cap_r = rsum(cap_dc)                                 # (R,)
+    w = cap_dc / jnp.maximum(cap_r[rid], 1.0)            # (D,)
+    wmean = lambda x: rsum(w * x)
+    tracemean = lambda tr: rsum((tr * w[None, :]).T).T   # (S, D) -> (S, R)
+
+    cap2 = rsum(agg.c_max)                               # (R, 2)
+    safe = jnp.maximum(cap2, 1.0)
+    agg_r = AggregateParams(
+        c_max=cap2,
+        alpha_bar=rsum(agg.alpha_bar * agg.c_max) / safe,
+        phi_bar=rsum(agg.phi_bar * agg.c_max) / safe,
+        gain=rsum(agg.gain),
+    )
+    # Parallel thermal resistance; singleton regions take the exact sum so
+    # the double reciprocal cannot perturb the value — on a plant whose
+    # regions are all singletons (e.g. paper4) the reduction is then the
+    # identity reindexing, bitwise.
+    members = rsum(jnp.ones_like(params.r_th))
+    r_parallel = 1.0 / jnp.maximum(
+        rsum(1.0 / jnp.maximum(params.r_th, 1e-9)), 1e-9
+    )
+    params_r = dataclasses.replace(
+        params,
+        r_th=jnp.where(members <= 1.0, rsum(params.r_th), r_parallel),
+        c_th=rsum(params.c_th),
+        kp=wmean(params.kp),
+        ki=wmean(params.ki),
+        kd=wmean(params.kd),
+        cool_max=rsum(params.cool_max),
+        g_min=wmean(params.g_min),
+        setpoint_fixed=wmean(params.setpoint_fixed),
+        price_peak=wmean(params.price_peak),
+        price_off=wmean(params.price_off),
+        amb_base=wmean(params.amb_base),
+        amb_amp=wmean(params.amb_amp),
+        amb_sigma=wmean(params.amb_sigma),
+        carbon_base=wmean(params.carbon_base),
+        price_trace=tracemean(params.price_trace),
+        carbon_trace=tracemean(params.carbon_trace),
+        region_id=jnp.arange(R, dtype=jnp.int32),
+    )
+    return params_r, agg_r, w
+
+
+def region_reduce_state(
+    st: PlantState, region_id, w, num_regions: int
+) -> PlantState:
+    """Fold a (D,)-dim PlantState onto regions: extensive util/backlog
+    sum, temperature averages with the capacity weights from
+    `region_reduce`, global defer passes through."""
+    rsum = lambda x: jax.ops.segment_sum(x, region_id, num_segments=num_regions)
+    return PlantState(
+        util=rsum(st.util),
+        backlog=rsum(st.backlog),
+        defer=st.defer,
+        theta=rsum(w * st.theta),
+    )
+
+
+def region_distribute(
+    rho0_r, target_r, theta, params: EnvParams, agg: AggregateParams,
+    num_regions: int,
+):
+    """Closed-form per-region subproblem: split each region's admission
+    quota over its DCs proportional to effective capacity (throttle- and,
+    when the caller discounted `agg`, fault-aware), and broadcast the
+    region setpoint plan to member DCs. Returns (rho0 (D, 2), target
+    (H, D))."""
+    rid = params.region_id
+    g = thermal.throttle_factor(theta, params)           # (D,)
+    c_eff = agg.c_max * g[:, None]                       # (D, 2)
+    denom = jax.ops.segment_sum(c_eff, rid, num_segments=num_regions)
+    share = c_eff / jnp.maximum(denom[rid], 1.0)
+    return rho0_r[rid] * share, target_r[:, rid]
+
+
 def plant_state_from_env(env_state, params: EnvParams, num_dcs: int) -> PlantState:
     """Project the full simulator state onto the aggregate plant state."""
     seg = params.dc_id * NUM_TYPES + params.is_gpu.astype(jnp.int32)

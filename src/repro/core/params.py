@@ -10,13 +10,16 @@ All physical quantities are SI unless noted:
 OCR fixes relative to the paper's Table I are documented in DESIGN.md §6:
 Phoenix is 2 CPU / 3 GPU clusters; Seattle capacity split is 157K CPU +
 95K GPU (= 252K total); the second alpha range per row is the GPU range.
+
+The Table-I data itself lives on the registered `paper4` `PlantSpec`
+(`repro.plant.registry`, DESIGN.md §18); `make_params()` is a bitwise
+thin wrapper over `paper4.build()`.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Tuple
 
-import numpy as np
 import jax.numpy as jnp
 
 HEAT_FRACTION = 0.95  # fraction of electrical power converted to heat
@@ -32,12 +35,31 @@ GRID_STEPS = 288
 # ---------------------------------------------------------------------------
 
 
+def _default_num_clusters() -> int:
+    from repro.plant import registry as _plant_registry
+
+    return _plant_registry.get("paper4").num_clusters
+
+
+def _default_num_dcs() -> int:
+    from repro.plant import registry as _plant_registry
+
+    return _plant_registry.get("paper4").num_dcs
+
+
 @dataclasses.dataclass(frozen=True)
 class EnvDims:
-    """Static shape configuration (hashable; safe to close over in jit)."""
+    """Static shape configuration (hashable; safe to close over in jit).
 
-    num_clusters: int = 20
-    num_dcs: int = 4
+    `num_clusters` / `num_dcs` default to the registered `paper4`
+    `PlantSpec` (the single source of plant truth, DESIGN.md §18); use
+    `repro.plant.fleet.fleet_dims` to derive dims for a generated fleet.
+    `num_regions = 0` means "derive": it resolves to `num_dcs` (every DC
+    its own region) unless set explicitly from a spec's region count.
+    """
+
+    num_clusters: int = dataclasses.field(default_factory=_default_num_clusters)
+    num_dcs: int = dataclasses.field(default_factory=_default_num_dcs)
     horizon: int = 288            # timesteps per episode (24 h at 5 min)
     max_arrivals: int = 256       # arrival slots per step (>= 200 nominal)
     queue_cap: int = 4096         # waiting jobs per cluster
@@ -51,6 +73,13 @@ class EnvDims:
     #: (DESIGN.md §17). The pallas kernel requires queue_cap/run_cap small
     #: enough that W x W one-hot permutation matrices fit VMEM (~<= 1024).
     jobs_backend: str = "auto"
+    #: Planning regions for the region-decomposed H-MPC (DESIGN.md §18).
+    #: 0 = derive as num_dcs in __post_init__.
+    num_regions: int = 0
+
+    def __post_init__(self):
+        if self.num_regions == 0:
+            object.__setattr__(self, "num_regions", self.num_dcs)
 
     @property
     def obs_dim(self) -> int:
@@ -175,6 +204,7 @@ class EnvParams:
     amb_amp: Any        # degC diurnal amplitude
     amb_sigma: Any      # degC noise std
     carbon_base: Any    # gCO2/kWh grid carbon intensity (grid_mode=0 value)
+    region_id: Any      # int32: index into the plant spec's region catalogue
 
     # --- grid-signal traces (DESIGN.md §14) ---
     # grid_mode 0: prices from the TOU formula, carbon = carbon_base (the
@@ -212,35 +242,9 @@ class EnvParams:
         return dataclasses.astuple(self), None
 
 
+# Display names of the paper4 sites; physics lives on the registered
+# spec (tests/test_plant.py asserts these match paper4.dc_names()).
 DC_NAMES = ("Seattle", "Phoenix", "Chicago", "Dallas")
-
-# Per-DC cluster layout: (n_cpu, n_gpu, cpu_cap_total, gpu_cap_total,
-#                         alpha_cpu_range, alpha_gpu_range)
-_DC_CLUSTERS = (
-    (3, 2, 157_000.0, 95_000.0, (0.3, 0.7), (4.0, 5.0)),   # Seattle
-    (2, 3, 65_000.0, 170_000.0, (0.6, 0.8), (6.5, 8.0)),   # Phoenix
-    (3, 2, 144_000.0, 60_000.0, (0.4, 0.6), (3.5, 4.5)),   # Chicago
-    (2, 3, 90_000.0, 280_000.0, (0.5, 0.7), (6.0, 9.0)),   # Dallas
-)
-
-_DC_PHYS = {
-    "r_th": (0.003, 0.004, 0.005, 0.002),
-    "c_th": (700e6, 600e6, 550e6, 520e6),
-    "kp": (4000.0, 7000.0, 5000.0, 6000.0),
-    "ki": (100.0, 150.0, 80.0, 120.0),
-    "kd": (1000.0, 1500.0, 800.0, 1200.0),
-    "cool_max": (0.68e6, 1.22e6, 0.30e6, 1.97e6),
-    "g_min": (0.2, 0.7, 0.4, 0.3),
-    "setpoint_fixed": (23.0, 25.0, 24.0, 24.0),
-    "price_peak": (0.08, 0.22, 0.13, 0.19),
-    "price_off": (0.06, 0.14, 0.09, 0.11),
-    "amb_base": (10.0, 38.0, 16.0, 30.0),
-    "amb_amp": (5.0, 12.0, 10.0, 11.0),
-    "amb_sigma": (0.5, 0.5, 0.5, 0.5),
-    # annual-average grid carbon intensity, gCO2/kWh: hydro-heavy Seattle,
-    # gas+solar Phoenix, coal-leaning Chicago, ERCOT gas/wind Dallas
-    "carbon_base": (90.0, 450.0, 520.0, 470.0),
-}
 
 
 def make_params(
@@ -252,74 +256,22 @@ def make_params(
     power_margin: float = 1.2,
     inflow_frac: float = 1.05,
 ) -> EnvParams:
-    """Build the Table-I plant. Deterministic (alphas via linspace in-range)."""
-    dc_id, is_gpu, c_max, alpha = [], [], [], []
-    for d, (n_cpu, n_gpu, cap_c, cap_g, a_c, a_g) in enumerate(_DC_CLUSTERS):
-        for k in range(n_cpu):
-            dc_id.append(d)
-            is_gpu.append(False)
-            c_max.append(cap_c / n_cpu)
-            alpha.append(np.linspace(a_c[0], a_c[1], n_cpu)[k])
-        for k in range(n_gpu):
-            dc_id.append(d)
-            is_gpu.append(True)
-            c_max.append(cap_g / n_gpu)
-            alpha.append(np.linspace(a_g[0], a_g[1], n_gpu)[k])
-    dc_id = np.asarray(dc_id, np.int32)
-    is_gpu = np.asarray(is_gpu)
-    c_max = np.asarray(c_max, np.float32)
-    alpha = np.asarray(alpha, np.float32)
-    phi = alpha / HEAT_FRACTION
+    """Build the Table-I plant (the registered `paper4` `PlantSpec`).
 
-    cool_max = np.asarray(_DC_PHYS["cool_max"], np.float32)
-    dc_cap = np.zeros(len(_DC_CLUSTERS), np.float32)
-    np.add.at(dc_cap, dc_id, c_max)
-    kappa = c_max / dc_cap[dc_id]
+    Thin wrapper over `repro.plant.registry.get("paper4").build(...)`;
+    output is bitwise-identical to the historical in-module construction
+    (tests/test_plant.py locks the parity leaf by leaf).
+    """
+    from repro.plant import registry as _plant_registry
 
-    rated = phi * c_max + kappa * cool_max[dc_id]
-    p_max = power_margin * rated
-    w_in = inflow_frac * rated
-
-    f32 = lambda key: jnp.asarray(_DC_PHYS[key], jnp.float32)
-    return EnvParams(
-        dc_id=jnp.asarray(dc_id),
-        is_gpu=jnp.asarray(is_gpu),
-        c_max=jnp.asarray(c_max),
-        alpha=jnp.asarray(alpha),
-        phi=jnp.asarray(phi),
-        kappa=jnp.asarray(kappa),
-        p_max=jnp.asarray(p_max),
-        w_in=jnp.asarray(w_in),
-        r_th=f32("r_th"),
-        c_th=f32("c_th"),
-        kp=f32("kp"),
-        ki=f32("ki"),
-        kd=f32("kd"),
-        cool_max=f32("cool_max"),
-        g_min=f32("g_min"),
-        setpoint_fixed=f32("setpoint_fixed"),
-        price_peak=f32("price_peak"),
-        price_off=f32("price_off"),
-        amb_base=f32("amb_base"),
-        amb_amp=f32("amb_amp"),
-        amb_sigma=f32("amb_sigma"),
-        carbon_base=f32("carbon_base"),
-        grid_mode=jnp.int32(0),
-        price_trace=jnp.zeros((GRID_STEPS, len(_DC_CLUSTERS)), jnp.float32),
-        carbon_trace=jnp.zeros((GRID_STEPS, len(_DC_CLUSTERS)), jnp.float32),
-        fault_mode=jnp.int32(0),
-        fault_arrival=jnp.zeros((GRID_STEPS, len(_DC_CLUSTERS)), jnp.float32),
-        fault_cool_eff=jnp.ones((len(_DC_CLUSTERS),), jnp.float32),
-        fault_cap_eff=jnp.ones((len(_DC_CLUSTERS),), jnp.float32),
-        fault_partition=jnp.zeros((len(_DC_CLUSTERS),), jnp.float32),
-        fault_duration=jnp.zeros((len(_DC_CLUSTERS),), jnp.int32),
-        dt=jnp.float32(dt),
-        theta_soft=jnp.float32(theta_soft),
-        theta_max=jnp.float32(theta_max),
-        setpoint_lo=jnp.float32(setpoint_lo),
-        setpoint_hi=jnp.float32(setpoint_hi),
-        peak_start_h=jnp.float32(8.0),
-        peak_end_h=jnp.float32(20.0),
+    return _plant_registry.get("paper4").build(
+        dt=dt,
+        theta_soft=theta_soft,
+        theta_max=theta_max,
+        setpoint_lo=setpoint_lo,
+        setpoint_hi=setpoint_hi,
+        power_margin=power_margin,
+        inflow_frac=inflow_frac,
     )
 
 
@@ -332,7 +284,7 @@ def make_params(
 # `Scenario.attach_grid` through the repro.grid generators, never perturbed;
 # likewise the fault schedule/severity fields owned by `Scenario.attach_faults`.
 _STRUCTURAL_FIELDS = (
-    "dc_id", "is_gpu", "grid_mode", "price_trace", "carbon_trace",
+    "dc_id", "is_gpu", "region_id", "grid_mode", "price_trace", "carbon_trace",
     "fault_mode", "fault_arrival", "fault_cool_eff", "fault_cap_eff",
     "fault_partition", "fault_duration",
 )

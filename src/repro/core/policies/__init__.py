@@ -11,6 +11,7 @@ from repro.core.policies.h_mpc import (
     HMPCConfig,
     h_mpc_carbon_policy,
     h_mpc_policy,
+    h_mpc_regional_policy,
     h_mpc_resilient_policy,
     h_mpc_slo_policy,
 )
@@ -18,7 +19,7 @@ from repro.core.policies.h_mpc import (
 
 def make_policy(name: str, dims, **kw) -> Policy:
     """Factory: random | greedy | thermal | power_cool | sc_mpc | h_mpc |
-    h_mpc_carbon | h_mpc_slo | h_mpc_resilient."""
+    h_mpc_carbon | h_mpc_slo | h_mpc_resilient | h_mpc_regional."""
     table = {
         "random": random_policy,
         "greedy": greedy_policy,
@@ -29,6 +30,7 @@ def make_policy(name: str, dims, **kw) -> Policy:
         "h_mpc_carbon": h_mpc_carbon_policy,
         "h_mpc_slo": h_mpc_slo_policy,
         "h_mpc_resilient": h_mpc_resilient_policy,
+        "h_mpc_regional": h_mpc_regional_policy,
     }
     try:
         factory = table[name]

@@ -83,6 +83,15 @@ class HMPCConfig:
     # False (default) skips the branch at trace time — the fault-blind
     # programs stay bitwise unchanged.
     fault_aware: bool = False
+    # region-decomposed stage 1 (DESIGN.md §18): solve the supervisory
+    # program over the plant's R regions (`EnvParams.region_id`) instead
+    # of its D sites — one cheap global coordination pass exchanges
+    # region-level capacity/price/thermal aggregates (`region_reduce`),
+    # and each region's quota splits over member DCs in closed form by
+    # effective-capacity share (`region_distribute`). Keeps the solve
+    # sub-quadratic in D at fleet scale. False (default) takes the joint
+    # per-DC solve at trace time — bitwise unchanged.
+    regional: bool = False
 
 
 jax.tree_util.register_dataclass(
@@ -124,10 +133,18 @@ def _offered_stats(state, offered):
     return count * fresh_frac, rsum / safe, 1.0 / jnp.maximum(dsum / safe, 1.0)
 
 
-def _stage1(state, params, agg, cfg: HMPCConfig, pol: HMPCState, num_dcs: int):
-    """Supervisory MPC (Eq. 25-26): returns (rho0 (D,2), target (H1,D), z's)."""
+def _stage1(
+    state, params, agg, cfg: HMPCConfig, pol: HMPCState, num_dcs: int, st0=None
+):
+    """Supervisory MPC (Eq. 25-26): returns (rho0 (D,2), target (H1,D), z's).
+
+    Dimension-generic: the regional path passes region-reduced
+    (params, agg, st0) and num_dcs = R, and the same program plans over
+    regions instead of sites (DESIGN.md §18).
+    """
     H = cfg.h1
-    st0 = plant.plant_state_from_env(state, params, num_dcs)
+    if st0 is None:
+        st0 = plant.plant_state_from_env(state, params, num_dcs)
     amb = plant.ambient_forecast(state.t, H, params)
     price = plant.effective_price(state.t, H, params, cfg.w_carbon)
     offered_load = pol.ema_count * pol.ema_rbar            # (2,) CU/step
@@ -186,7 +203,7 @@ def _stage1(state, params, agg, cfg: HMPCConfig, pol: HMPCState, num_dcs: int):
 
 def _refine_targets(
     state, params, agg, cfg: HMPCConfig, pol: HMPCState, rho, defer, target,
-    num_dcs: int,
+    num_dcs: int, st0=None,
 ):
     """Stage-1.5: candidate-batched setpoint refinement (DESIGN.md §12).
 
@@ -199,7 +216,8 @@ def _refine_targets(
     only, so the non-differentiable kernel path is fine here.
     """
     H, B = cfg.h1, cfg.refine_candidates
-    st0 = plant.plant_state_from_env(state, params, num_dcs)
+    if st0 is None:
+        st0 = plant.plant_state_from_env(state, params, num_dcs)
     amb = plant.ambient_forecast(state.t, H, params)
     price = plant.effective_price(state.t, H, params, cfg.w_carbon)
     offered_load = pol.ema_count * pol.ema_rbar
@@ -422,18 +440,34 @@ def h_mpc_resilient_policy(dims: EnvDims, cfg: HMPCConfig | None = None) -> Poli
     return h_mpc_policy(dims, cfg, name="h_mpc_resilient")
 
 
+def h_mpc_regional_policy(dims: EnvDims, cfg: HMPCConfig | None = None) -> Policy:
+    """Region-decomposed H-MPC (DESIGN.md §18): stage 1 plans over the
+    plant's R regions with one global coordination pass over region
+    aggregates, and region quotas split over member DCs in closed form —
+    solve cost stays sub-quadratic in D at fleet scale. Like the other
+    named factories, a cfg without the defining knob gets it forced on.
+    """
+    if cfg is None:
+        cfg = HMPCConfig(regional=True)
+    elif not cfg.regional:
+        cfg = dataclasses.replace(cfg, regional=True)
+    return h_mpc_policy(dims, cfg, name="h_mpc_regional")
+
+
 def h_mpc_policy(
     dims: EnvDims, cfg: HMPCConfig = HMPCConfig(), name: str = "h_mpc"
 ) -> Policy:
     D, C = dims.num_dcs, dims.num_clusters
+    # stage-1 planning dimension: R regions when regional, D sites otherwise
+    S1 = dims.num_regions if cfg.regional else D
 
     def init(dims_, params):
         return HMPCState(
             ema_count=jnp.array([80.0, 120.0]),
             ema_rbar=jnp.array([100.0, 100.0]),
             ema_mu=jnp.array([0.12, 0.12]),
-            z_route=jnp.zeros((cfg.h1, D + 1, 2)),
-            z_target=jnp.zeros((cfg.h1, D)),
+            z_route=jnp.zeros((cfg.h1, S1 + 1, 2)),
+            z_target=jnp.zeros((cfg.h1, S1)),
             z_alloc=jnp.zeros((C,)),
         )
 
@@ -466,15 +500,35 @@ def h_mpc_policy(
             ema_rbar=(1 - e) * pol_state.ema_rbar + e * rbar,
             ema_mu=(1 - e) * pol_state.ema_mu + e * mu,
         )
-        rho0, target, z_route, z_target = _stage1(
-            state, params, agg, cfg, pol_state, D
-        )
-        if cfg.refine_candidates > 0:
-            w = jax.nn.softmax(z_route, axis=1)
-            target = _refine_targets(
-                state, params, agg, cfg, pol_state,
-                w[:, :-1, :], w[:, -1, :], target, D,
+        if cfg.regional:
+            # one coordination pass: fold plant + state onto R regions,
+            # run the same stage-1 program at dimension R, then split
+            # each region's quota by effective-capacity share.
+            params_r, agg_r, wcap = plant.region_reduce(params, agg, S1)
+            st0 = plant.plant_state_from_env(state, params, D)
+            st0_r = plant.region_reduce_state(st0, params.region_id, wcap, S1)
+            rho0_r, target_r, z_route, z_target = _stage1(
+                state, params_r, agg_r, cfg, pol_state, S1, st0=st0_r
             )
+            if cfg.refine_candidates > 0:
+                w = jax.nn.softmax(z_route, axis=1)
+                target_r = _refine_targets(
+                    state, params_r, agg_r, cfg, pol_state,
+                    w[:, :-1, :], w[:, -1, :], target_r, S1, st0=st0_r,
+                )
+            rho0, target = plant.region_distribute(
+                rho0_r, target_r, state.theta, params, agg, S1
+            )
+        else:
+            rho0, target, z_route, z_target = _stage1(
+                state, params, agg, cfg, pol_state, D
+            )
+            if cfg.refine_candidates > 0:
+                w = jax.nn.softmax(z_route, axis=1)
+                target = _refine_targets(
+                    state, params, agg, cfg, pol_state,
+                    w[:, :-1, :], w[:, -1, :], target, D,
+                )
         weights, z_alloc = _stage2(state, params, agg, cfg, pol_state, rho0, D)
         assign = _counts_to_assign(offered, rho0, weights, pol_state, params, C)
         if cfg.temporal_shift:

@@ -46,6 +46,36 @@ def make_cells_mesh(n_devices: int | None = None):
     return jax.sharding.Mesh(np.asarray(devices[:n]), ("cells",))
 
 
+def make_fleet_mesh(n_cells: int | None = None, n_dcs: int | None = None):
+    """2-D (cells, dcs) mesh for DC-axis sharded fleet rollouts (DESIGN.md §18).
+
+    The scenario suite's `batch_mode="shard_dc"` lays blocked-fleet cell
+    pytrees — leaves shaped (cells, blocks, ...) from
+    `plant.generate_fleet_blocks` — over this mesh: the "cells" axis
+    splits the Monte-Carlo grid exactly like `make_cells_mesh`, and the
+    "dcs" axis splits the fleet's self-contained DC blocks, so one
+    rollout at D=128 spreads its DC state (thermal, grid traces, fault
+    state, job tables) across devices. Blocks share no physics, so the
+    rollout stays collective-free. Defaults: every visible device on the
+    "dcs" axis, one cell row.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    if n_dcs is None:
+        n_dcs = len(devices) if n_cells is None else len(devices) // n_cells
+    if n_cells is None:
+        n_cells = len(devices) // n_dcs
+    n = n_cells * n_dcs
+    if n < 1 or len(devices) < n:
+        raise RuntimeError(
+            f"fleet mesh ({n_cells}, {n_dcs}) needs {n} devices, have {len(devices)}"
+        )
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(n_cells, n_dcs), ("cells", "dcs")
+    )
+
+
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Tiny mesh for unit tests (requires >= data*model local devices)."""
     import numpy as np

@@ -1,0 +1,36 @@
+"""Declarative plant layer: specs, regions, registry, fleet generation.
+
+See DESIGN.md §18 and the SIMULATOR_GUIDE "Fleets & regions" chapter.
+"""
+from repro.plant.spec import DCSpec, PlantSpec, RegionSpec
+from repro.plant.regions import (
+    DEFAULT_REGION_MIX,
+    REGION_NAMES,
+    REGIONS,
+    get_region,
+)
+from repro.plant.registry import get, names, paper4, register
+from repro.plant.fleet import (
+    fleet_dims,
+    fleet_spec,
+    generate_fleet,
+    generate_fleet_blocks,
+)
+
+__all__ = [
+    "DCSpec",
+    "PlantSpec",
+    "RegionSpec",
+    "REGIONS",
+    "REGION_NAMES",
+    "DEFAULT_REGION_MIX",
+    "get_region",
+    "register",
+    "get",
+    "names",
+    "paper4",
+    "fleet_spec",
+    "fleet_dims",
+    "generate_fleet",
+    "generate_fleet_blocks",
+]

@@ -1,0 +1,184 @@
+"""Seeded fleet generation: D=64-256 plants from region priors (DESIGN.md §18).
+
+`fleet_spec(D, region_mix, seed)` allocates D datacenters across the
+region catalogue by largest-remainder apportionment and draws each DC's
+physics from its region's priors with an independent
+`np.random.default_rng(seed)` stream — same (D, region_mix, seed) in,
+bitwise-same `PlantSpec` out. `generate_fleet` is the one-call version
+returning `EnvParams` directly, and `fleet_dims` derives the matching
+`EnvDims`.
+
+`generate_fleet_blocks` carves a fleet into B self-contained sub-plants
+(each with local dc_id/cluster numbering) and stacks their `EnvParams`
+leaf-wise into (B, ...) pytrees. Blocks share no cross-DC coupling in
+the simulator's physics (thermal RC, PID, chillers, job tables are all
+per-DC or per-cluster), which is what makes the `shard_dc` rollout
+backend collective-free: each device integrates its block of DCs
+independently (see `scenarios/suite.make_runner`).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.params import EnvDims, EnvParams, stack_params
+from repro.plant import regions as regions_mod
+from repro.plant.spec import DCSpec, PlantSpec, RegionSpec
+
+# Cluster-count draw range per generated DC (CPU and GPU independently).
+_N_CPU_RANGE = (1, 3)
+_N_GPU_RANGE = (1, 3)
+
+
+def _apportion(D: int, region_mix: Dict[str, float]) -> List[Tuple[str, int]]:
+    """Largest-remainder apportionment of D DCs over region weights."""
+    names = [n for n in region_mix if region_mix[n] > 0.0]
+    if not names:
+        raise ValueError("region_mix has no positive weights")
+    for n in names:
+        regions_mod.get_region(n)  # validate early
+    total = sum(region_mix[n] for n in names)
+    quotas = [D * region_mix[n] / total for n in names]
+    counts = [int(q) for q in quotas]
+    remainders = [q - c for q, c in zip(quotas, counts)]
+    short = D - sum(counts)
+    # Stable: ties broken by catalogue order via sort stability.
+    for i in sorted(range(len(names)), key=lambda i: -remainders[i])[:short]:
+        counts[i] += 1
+    return [(n, c) for n, c in zip(names, counts) if c > 0]
+
+
+def _draw_dc(name: str, region: RegionSpec, rng: np.random.Generator) -> DCSpec:
+    u = lambda lo_hi: float(rng.uniform(lo_hi[0], lo_hi[1]))
+    n_cpu = int(rng.integers(_N_CPU_RANGE[0], _N_CPU_RANGE[1] + 1))
+    n_gpu = int(rng.integers(_N_GPU_RANGE[0], _N_GPU_RANGE[1] + 1))
+    cap_cpu = u(region.cap_cpu_range)
+    cap_gpu = u(region.cap_gpu_range)
+    a_cpu_lo = u(region.alpha_cpu_range)
+    a_cpu_hi = u((a_cpu_lo, region.alpha_cpu_range[1]))
+    a_gpu_lo = u(region.alpha_gpu_range)
+    a_gpu_hi = u((a_gpu_lo, region.alpha_gpu_range[1]))
+    # Size the chiller against the design heat load so cool_max scales
+    # with what the site can actually dissipate.
+    alpha_bar_cpu = 0.5 * (a_cpu_lo + a_cpu_hi)
+    alpha_bar_gpu = 0.5 * (a_gpu_lo + a_gpu_hi)
+    design_heat = alpha_bar_cpu * cap_cpu + alpha_bar_gpu * cap_gpu
+    cool_max = u(region.cool_frac_range) * design_heat
+    return DCSpec(
+        name=name,
+        region=region.name,
+        n_cpu=n_cpu,
+        n_gpu=n_gpu,
+        cap_cpu_total=cap_cpu,
+        cap_gpu_total=cap_gpu,
+        alpha_cpu=(a_cpu_lo, a_cpu_hi),
+        alpha_gpu=(a_gpu_lo, a_gpu_hi),
+        r_th=u(region.r_th_range),
+        c_th=u(region.c_th_range),
+        kp=u(region.kp_range),
+        ki=u(region.ki_range),
+        kd=u(region.kd_range),
+        cool_max=cool_max,
+        g_min=u(region.g_min_range),
+        setpoint_fixed=u(region.setpoint_range),
+        price_peak=u(region.price_peak_range),
+        price_off=u(region.price_off_range),
+        amb_base=u(region.amb_base_range),
+        amb_amp=u(region.amb_amp_range),
+        amb_sigma=region.amb_sigma,
+        carbon_base=u(region.carbon_range),
+    )
+
+
+def fleet_spec(
+    D: int,
+    region_mix: Optional[Dict[str, float]] = None,
+    seed: int = 0,
+    name: Optional[str] = None,
+) -> PlantSpec:
+    """Generate a deterministic D-datacenter `PlantSpec` from region priors."""
+    if D < 1:
+        raise ValueError(f"D must be >= 1, got {D}")
+    mix = dict(regions_mod.DEFAULT_REGION_MIX if region_mix is None else region_mix)
+    alloc = _apportion(D, mix)
+    rng = np.random.default_rng(seed)
+    dcs = []
+    for region_name, count in alloc:
+        region = regions_mod.get_region(region_name)
+        for j in range(count):
+            dcs.append(_draw_dc(f"{region_name}_{j:03d}", region, rng))
+    return PlantSpec(
+        name=name or f"fleet_{D}",
+        description=(
+            f"Generated {D}-DC fleet (seed={seed}) over regions "
+            + ", ".join(n for n, _ in alloc)
+        ),
+        dcs=tuple(dcs),
+        regions=tuple(n for n, _ in alloc),
+    )
+
+
+def generate_fleet(
+    D: int,
+    region_mix: Optional[Dict[str, float]] = None,
+    seed: int = 0,
+    **build_kwargs,
+) -> EnvParams:
+    """One-call fleet construction: `fleet_spec(...).build(...)`."""
+    return fleet_spec(D, region_mix=region_mix, seed=seed).build(**build_kwargs)
+
+
+def fleet_dims(spec: PlantSpec, **overrides) -> EnvDims:
+    """Derive `EnvDims` sized for `spec` (override any other dim by kwarg)."""
+    overrides.setdefault("num_clusters", spec.num_clusters)
+    overrides.setdefault("num_dcs", spec.num_dcs)
+    overrides.setdefault("num_regions", spec.num_regions)
+    return EnvDims(**overrides)
+
+
+def generate_fleet_blocks(
+    D: int,
+    blocks: int,
+    region_mix: Optional[Dict[str, float]] = None,
+    seed: int = 0,
+    **build_kwargs,
+) -> Tuple[EnvParams, EnvDims, Tuple[PlantSpec, ...]]:
+    """Carve a D-DC fleet into `blocks` equal self-contained sub-plants.
+
+    Returns (stacked (B, ...) `EnvParams`, per-block `EnvDims`, block
+    specs). Every block draws the same region mix with a derived seed,
+    so blocks are independent sub-fleets with identical shapes — the
+    unit of work one device owns under the `shard_dc` backend. Requires
+    D % blocks == 0.
+    """
+    if blocks < 1 or D % blocks != 0:
+        raise ValueError(f"blocks={blocks} must divide D={D}")
+    per = D // blocks
+    specs = tuple(
+        fleet_spec(per, region_mix=region_mix, seed=seed + 1000 * b,
+                   name=f"fleet_{D}_block{b}")
+        for b in range(blocks)
+    )
+    shapes = {(s.num_clusters, s.num_dcs) for s in specs}
+    if len(shapes) > 1:
+        # Cluster counts are drawn per DC; re-draw blocks that miss the
+        # modal cluster count so leaves stack. Deterministic: bump the
+        # derived seed until shapes agree.
+        target = max(shapes, key=lambda sh: sum(
+            1 for s in specs if (s.num_clusters, s.num_dcs) == sh))
+        fixed = []
+        for b, s in enumerate(specs):
+            attempt = 0
+            while (s.num_clusters, s.num_dcs) != target:
+                attempt += 1
+                s = fleet_spec(per, region_mix=region_mix,
+                               seed=seed + 1000 * b + attempt,
+                               name=f"fleet_{D}_block{b}")
+                if attempt > 200:
+                    raise RuntimeError("could not equalize block shapes")
+            fixed.append(s)
+        specs = tuple(fixed)
+    params = stack_params([s.build(**build_kwargs) for s in specs])
+    dims = fleet_dims(specs[0])
+    return params, dims, specs

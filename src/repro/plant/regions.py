@@ -1,0 +1,149 @@
+"""Region catalogue: named climate/price/carbon siting priors (DESIGN.md §18).
+
+Six regions spanning the real-world envelope the fleet generator draws
+from. The first four are calibrated so the paper's Table-I sites fall
+inside their priors (Seattle→`pnw_hydro`, Phoenix→`desert_solar`,
+Chicago→`midwest_coal`, Dallas→`texas_gas`); `nordics` and `singapore`
+extend the envelope to free-cooling-cold and tropical-humid extremes.
+Numbers are priors, not measurements: ambient statistics follow the
+Eq. 7 sinusoid fit per climate, tariffs bracket published TOU rates,
+and carbon intensities bracket annual grid averages (gCO2/kWh).
+
+The catalogue is ordered and append-only — `EnvParams.region_id`
+indexes into a `PlantSpec.regions` tuple drawn from these names, and
+the SIMULATOR_GUIDE region table is checked against `REGION_NAMES` by
+`tests/test_docs.py`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.plant.spec import RegionSpec
+
+REGIONS: Dict[str, RegionSpec] = {}
+
+
+def _register(spec: RegionSpec) -> RegionSpec:
+    if spec.name in REGIONS:
+        raise ValueError(f"duplicate region {spec.name!r}")
+    REGIONS[spec.name] = spec
+    return spec
+
+
+pnw_hydro = _register(RegionSpec(
+    name="pnw_hydro",
+    description="Pacific Northwest: mild marine climate, cheap hydro, very low carbon",
+    amb_base_range=(8.0, 14.0),
+    amb_amp_range=(4.0, 7.0),
+    price_peak_range=(0.07, 0.10),
+    price_off_range=(0.05, 0.07),
+    carbon_range=(60.0, 140.0),
+    r_th_range=(0.0025, 0.0040),
+    c_th_range=(600e6, 750e6),
+    g_min_range=(0.15, 0.30),
+    setpoint_range=(22.0, 24.0),
+    cool_frac_range=(0.7, 1.0),
+    phase_h=0.0,
+))
+
+desert_solar = _register(RegionSpec(
+    name="desert_solar",
+    description="Desert Southwest: extreme diurnal heat, solar duck curve, high peak tariffs",
+    amb_base_range=(32.0, 40.0),
+    amb_amp_range=(10.0, 14.0),
+    price_peak_range=(0.18, 0.26),
+    price_off_range=(0.11, 0.16),
+    carbon_range=(350.0, 500.0),
+    r_th_range=(0.0030, 0.0050),
+    c_th_range=(550e6, 650e6),
+    g_min_range=(0.55, 0.80),
+    setpoint_range=(24.0, 26.0),
+    cool_frac_range=(1.1, 1.5),
+    phase_h=-1.0,
+))
+
+midwest_coal = _register(RegionSpec(
+    name="midwest_coal",
+    description="Upper Midwest: continental swings, coal-heavy grid, moderate tariffs",
+    amb_base_range=(10.0, 20.0),
+    amb_amp_range=(8.0, 12.0),
+    price_peak_range=(0.10, 0.15),
+    price_off_range=(0.07, 0.11),
+    carbon_range=(450.0, 600.0),
+    r_th_range=(0.0035, 0.0055),
+    c_th_range=(500e6, 620e6),
+    g_min_range=(0.30, 0.50),
+    setpoint_range=(23.0, 25.0),
+    cool_frac_range=(0.8, 1.1),
+    phase_h=2.0,
+))
+
+texas_gas = _register(RegionSpec(
+    name="texas_gas",
+    description="Texas triangle: hot summers, volatile gas-fired ERCOT prices",
+    amb_base_range=(24.0, 32.0),
+    amb_amp_range=(9.0, 13.0),
+    price_peak_range=(0.14, 0.22),
+    price_off_range=(0.09, 0.13),
+    carbon_range=(400.0, 520.0),
+    r_th_range=(0.0018, 0.0032),
+    c_th_range=(480e6, 580e6),
+    g_min_range=(0.25, 0.40),
+    setpoint_range=(23.0, 25.0),
+    cool_frac_range=(1.0, 1.4),
+    phase_h=1.0,
+))
+
+nordics = _register(RegionSpec(
+    name="nordics",
+    description="Nordic interior: year-round free cooling, hydro/wind grid, lowest carbon",
+    amb_base_range=(2.0, 8.0),
+    amb_amp_range=(3.0, 6.0),
+    price_peak_range=(0.06, 0.11),
+    price_off_range=(0.04, 0.08),
+    carbon_range=(30.0, 90.0),
+    r_th_range=(0.0025, 0.0045),
+    c_th_range=(620e6, 780e6),
+    g_min_range=(0.10, 0.25),
+    setpoint_range=(22.0, 24.0),
+    cool_frac_range=(0.6, 0.9),
+    phase_h=9.0,
+))
+
+singapore = _register(RegionSpec(
+    name="singapore",
+    description="Equatorial Southeast Asia: flat hot-humid ambient, LNG grid, land-constrained",
+    amb_base_range=(27.0, 31.0),
+    amb_amp_range=(1.5, 3.0),
+    price_peak_range=(0.16, 0.24),
+    price_off_range=(0.12, 0.17),
+    carbon_range=(380.0, 470.0),
+    r_th_range=(0.0030, 0.0048),
+    c_th_range=(520e6, 640e6),
+    g_min_range=(0.60, 0.85),
+    setpoint_range=(25.0, 27.0),
+    cool_frac_range=(1.2, 1.6),
+    phase_h=15.0,
+))
+
+REGION_NAMES: Tuple[str, ...] = tuple(REGIONS)
+
+# Default fleet composition when no region_mix is given: weighted toward
+# the cheap-and-cool regions the way hyperscale siting actually skews.
+DEFAULT_REGION_MIX: Dict[str, float] = {
+    "pnw_hydro": 0.25,
+    "desert_solar": 0.10,
+    "midwest_coal": 0.15,
+    "texas_gas": 0.20,
+    "nordics": 0.20,
+    "singapore": 0.10,
+}
+
+
+def get_region(name: str) -> RegionSpec:
+    try:
+        return REGIONS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown region {name!r}; available: {', '.join(REGION_NAMES)}"
+        ) from None

@@ -1,0 +1,100 @@
+"""Plant registry: the single source of plant truth (DESIGN.md §18).
+
+Every plant the repo can simulate is a registered `PlantSpec`. The
+paper's Table-I four-site plant is `paper4` — its numbers moved here
+from the retired `_DC_PHYS` dict in `core/params.py`, and
+`make_params()` delegates to `get("paper4").build(...)` bitwise. The
+canonical generated fleet backing the committed `fleet_128` scenario is
+registered as `fleet_128` (seed 0, default region mix).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.plant.spec import DCSpec, PlantSpec
+
+_REGISTRY: Dict[str, PlantSpec] = {}
+
+
+def register(spec: PlantSpec) -> PlantSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"plant {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> PlantSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown plant {name!r}; available: {', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --- paper4: the Table-I plant, verbatim -------------------------------
+# Cluster layouts (n_cpu, n_gpu, cap totals, per-cluster alpha ranges)
+# and per-DC physics are the exact values `make_params` has always
+# used; tests/test_plant.py locks the bitwise parity.
+
+paper4 = register(PlantSpec(
+    name="paper4",
+    description="The paper's Table-I plant: four US sites, twenty clusters",
+    dcs=(
+        DCSpec(
+            name="Seattle", region="pnw_hydro",
+            n_cpu=3, n_gpu=2,
+            cap_cpu_total=157_000.0, cap_gpu_total=95_000.0,
+            alpha_cpu=(0.3, 0.7), alpha_gpu=(4.0, 5.0),
+            r_th=0.003, c_th=700e6, kp=4000.0, ki=100.0, kd=1000.0,
+            cool_max=0.68e6, g_min=0.2, setpoint_fixed=23.0,
+            price_peak=0.08, price_off=0.06,
+            amb_base=10.0, amb_amp=5.0, amb_sigma=0.5, carbon_base=90.0,
+        ),
+        DCSpec(
+            name="Phoenix", region="desert_solar",
+            n_cpu=2, n_gpu=3,
+            cap_cpu_total=65_000.0, cap_gpu_total=170_000.0,
+            alpha_cpu=(0.6, 0.8), alpha_gpu=(6.5, 8.0),
+            r_th=0.004, c_th=600e6, kp=7000.0, ki=150.0, kd=1500.0,
+            cool_max=1.22e6, g_min=0.7, setpoint_fixed=25.0,
+            price_peak=0.22, price_off=0.14,
+            amb_base=38.0, amb_amp=12.0, amb_sigma=0.5, carbon_base=450.0,
+        ),
+        DCSpec(
+            name="Chicago", region="midwest_coal",
+            n_cpu=3, n_gpu=2,
+            cap_cpu_total=144_000.0, cap_gpu_total=60_000.0,
+            alpha_cpu=(0.4, 0.6), alpha_gpu=(3.5, 4.5),
+            r_th=0.005, c_th=550e6, kp=5000.0, ki=80.0, kd=800.0,
+            cool_max=0.30e6, g_min=0.4, setpoint_fixed=24.0,
+            price_peak=0.13, price_off=0.09,
+            amb_base=16.0, amb_amp=10.0, amb_sigma=0.5, carbon_base=520.0,
+        ),
+        DCSpec(
+            name="Dallas", region="texas_gas",
+            n_cpu=2, n_gpu=3,
+            cap_cpu_total=90_000.0, cap_gpu_total=280_000.0,
+            alpha_cpu=(0.5, 0.7), alpha_gpu=(6.0, 9.0),
+            r_th=0.002, c_th=520e6, kp=6000.0, ki=120.0, kd=1200.0,
+            cool_max=1.97e6, g_min=0.3, setpoint_fixed=24.0,
+            price_peak=0.19, price_off=0.11,
+            amb_base=30.0, amb_amp=11.0, amb_sigma=0.5, carbon_base=470.0,
+        ),
+    ),
+    regions=("pnw_hydro", "desert_solar", "midwest_coal", "texas_gas"),
+))
+
+
+def _register_canonical_fleets() -> None:
+    # Deferred import: fleet.py imports core.params which delegates here.
+    from repro.plant.fleet import fleet_spec
+
+    register(fleet_spec(128, seed=0, name="fleet_128"))
+
+
+_register_canonical_fleets()

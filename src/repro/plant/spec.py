@@ -1,0 +1,236 @@
+"""Declarative plant specification API (DESIGN.md §18).
+
+Three layers, all frozen pure-data dataclasses:
+
+- `RegionSpec`  — a named climate/price/carbon region with *priors*: the
+  physical ranges a datacenter sited in that region draws its concrete
+  parameters from (ambient statistics, tariffs, grid carbon intensity,
+  thermal plant, sizing). The catalogue lives in `repro.plant.regions`.
+- `DCSpec`      — one concrete datacenter: cluster layout plus the
+  fourteen per-DC physical fields of `EnvParams`, fully resolved (no
+  ranges). The paper's Table-I rows are four `DCSpec`s.
+- `PlantSpec`   — an ordered tuple of `DCSpec`s plus the region
+  catalogue they reference. `PlantSpec.build()` emits the `EnvParams`
+  pytree and is the single construction path for every plant in the
+  repo: `repro.core.params.make_params()` delegates to the registered
+  `paper4` spec bitwise-identically, and `repro.plant.fleet` emits
+  generated `PlantSpec`s for D=64-256 fleets.
+
+`build()` reproduces the historical `make_params` arithmetic operation
+for operation (np.linspace alphas, `phi = alpha / HEAT_FRACTION`, kappa
+via `np.add.at`, rated power from phi/kappa/cool_max) so that specs
+carrying the Table-I numbers rebuild the pre-registry plant down to the
+last bit — the five committed smoke goldens gate exactly this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.params import EnvParams, GRID_STEPS, HEAT_FRACTION
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """Climate/price/carbon priors of a named siting region.
+
+    Every ``*_range`` field is an inclusive (lo, hi) draw range for
+    `repro.plant.fleet.generate_fleet`; scalar fields apply to every DC
+    sited in the region. `cool_frac_range` sizes the chiller plant as a
+    multiple of the DC's design heat load (alpha-weighted capacity), so
+    generated plants always satisfy cool_max > 0 and hot regions can
+    overprovision cooling the way real sites do.
+    """
+
+    name: str
+    description: str
+    # climate (Eq. 7 ambient sinusoid)
+    amb_base_range: Tuple[float, float]    # degC diurnal mean
+    amb_amp_range: Tuple[float, float]     # degC diurnal amplitude
+    amb_sigma: float = 0.5                 # degC noise std
+    # tariffs ($/kWh, Eq. 9 TOU) and grid carbon (gCO2/kWh)
+    price_peak_range: Tuple[float, float] = (0.10, 0.20)
+    price_off_range: Tuple[float, float] = (0.06, 0.12)
+    carbon_range: Tuple[float, float] = (300.0, 500.0)
+    # thermal plant (Eq. 4-7 RC + PID + chiller)
+    r_th_range: Tuple[float, float] = (0.002, 0.005)
+    c_th_range: Tuple[float, float] = (500e6, 700e6)
+    kp_range: Tuple[float, float] = (4000.0, 7000.0)
+    ki_range: Tuple[float, float] = (80.0, 150.0)
+    kd_range: Tuple[float, float] = (800.0, 1500.0)
+    cool_frac_range: Tuple[float, float] = (0.8, 1.3)
+    g_min_range: Tuple[float, float] = (0.2, 0.7)
+    setpoint_range: Tuple[float, float] = (23.0, 25.0)
+    # sizing (CU totals per DC and per-CU heat coefficients)
+    cap_cpu_range: Tuple[float, float] = (60_000.0, 160_000.0)
+    cap_gpu_range: Tuple[float, float] = (50_000.0, 280_000.0)
+    alpha_cpu_range: Tuple[float, float] = (0.3, 0.8)
+    alpha_gpu_range: Tuple[float, float] = (3.5, 9.0)
+    # solar-noon offset vs the fleet reference (hours); feeds grid-signal
+    # phase when a fleet scenario attaches trace-driven markets
+    phase_h: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DCSpec:
+    """One concrete datacenter: cluster layout + resolved physics.
+
+    `alpha_cpu` / `alpha_gpu` are (lo, hi) ranges spread across the DC's
+    clusters by `np.linspace` (heterogeneous hardware generations within
+    a site — exactly Table I's per-row alpha ranges)."""
+
+    name: str
+    region: str                       # RegionSpec name (region_id source)
+    # cluster layout
+    n_cpu: int
+    n_gpu: int
+    cap_cpu_total: float              # CU, split evenly over n_cpu clusters
+    cap_gpu_total: float
+    alpha_cpu: Tuple[float, float]    # W/CU range across CPU clusters
+    alpha_gpu: Tuple[float, float]
+    # per-DC physical fields of EnvParams, fully resolved
+    r_th: float
+    c_th: float
+    kp: float
+    ki: float
+    kd: float
+    cool_max: float
+    g_min: float
+    setpoint_fixed: float
+    price_peak: float
+    price_off: float
+    amb_base: float
+    amb_amp: float
+    amb_sigma: float
+    carbon_base: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PlantSpec:
+    """A complete geo-distributed plant: the single source of plant truth.
+
+    `regions` is the ordered region catalogue the DCs reference;
+    `region_ids` maps each DC to its index in it, which `build()` stores
+    on `EnvParams.region_id` (the structural leaf the region-decomposed
+    H-MPC plans over, DESIGN.md §18)."""
+
+    name: str
+    description: str
+    dcs: Tuple[DCSpec, ...]
+    regions: Tuple[str, ...]
+
+    @property
+    def num_dcs(self) -> int:
+        return len(self.dcs)
+
+    @property
+    def num_clusters(self) -> int:
+        return sum(dc.n_cpu + dc.n_gpu for dc in self.dcs)
+
+    @property
+    def num_regions(self) -> int:
+        return len(self.regions)
+
+    @property
+    def region_ids(self) -> Tuple[int, ...]:
+        index = {name: i for i, name in enumerate(self.regions)}
+        return tuple(index[dc.region] for dc in self.dcs)
+
+    def dc_names(self) -> Tuple[str, ...]:
+        return tuple(dc.name for dc in self.dcs)
+
+    def build(
+        self,
+        dt: float = 300.0,
+        theta_soft: float = 32.0,
+        theta_max: float = 35.0,
+        setpoint_lo: float = 18.0,
+        setpoint_hi: float = 28.0,
+        power_margin: float = 1.2,
+        inflow_frac: float = 1.05,
+    ) -> EnvParams:
+        """Materialize the `EnvParams` pytree (deterministic).
+
+        Keeps the historical `make_params` arithmetic exactly: cluster
+        capacities split evenly, alphas via `np.linspace` over the DC's
+        range, `phi = alpha / HEAT_FRACTION`, kappa as the cluster's
+        capacity share of its DC (`np.add.at` accumulation), and rated
+        power `phi*c_max + kappa*cool_max` scaled by `power_margin` /
+        `inflow_frac`. A spec carrying the Table-I numbers therefore
+        rebuilds the legacy plant bitwise.
+        """
+        D = self.num_dcs
+        dc_id, is_gpu, c_max, alpha = [], [], [], []
+        for d, dc in enumerate(self.dcs):
+            for k in range(dc.n_cpu):
+                dc_id.append(d)
+                is_gpu.append(False)
+                c_max.append(dc.cap_cpu_total / dc.n_cpu)
+                alpha.append(np.linspace(dc.alpha_cpu[0], dc.alpha_cpu[1], dc.n_cpu)[k])
+            for k in range(dc.n_gpu):
+                dc_id.append(d)
+                is_gpu.append(True)
+                c_max.append(dc.cap_gpu_total / dc.n_gpu)
+                alpha.append(np.linspace(dc.alpha_gpu[0], dc.alpha_gpu[1], dc.n_gpu)[k])
+        dc_id = np.asarray(dc_id, np.int32)
+        is_gpu = np.asarray(is_gpu)
+        c_max = np.asarray(c_max, np.float32)
+        alpha = np.asarray(alpha, np.float32)
+        phi = alpha / HEAT_FRACTION
+
+        cool_max = np.asarray([dc.cool_max for dc in self.dcs], np.float32)
+        dc_cap = np.zeros(D, np.float32)
+        np.add.at(dc_cap, dc_id, c_max)
+        kappa = c_max / dc_cap[dc_id]
+
+        rated = phi * c_max + kappa * cool_max[dc_id]
+        p_max = power_margin * rated
+        w_in = inflow_frac * rated
+
+        f32 = lambda key: jnp.asarray(
+            tuple(getattr(dc, key) for dc in self.dcs), jnp.float32
+        )
+        return EnvParams(
+            dc_id=jnp.asarray(dc_id),
+            is_gpu=jnp.asarray(is_gpu),
+            c_max=jnp.asarray(c_max),
+            alpha=jnp.asarray(alpha),
+            phi=jnp.asarray(phi),
+            kappa=jnp.asarray(kappa),
+            p_max=jnp.asarray(p_max),
+            w_in=jnp.asarray(w_in),
+            r_th=f32("r_th"),
+            c_th=f32("c_th"),
+            kp=f32("kp"),
+            ki=f32("ki"),
+            kd=f32("kd"),
+            cool_max=f32("cool_max"),
+            g_min=f32("g_min"),
+            setpoint_fixed=f32("setpoint_fixed"),
+            price_peak=f32("price_peak"),
+            price_off=f32("price_off"),
+            amb_base=f32("amb_base"),
+            amb_amp=f32("amb_amp"),
+            amb_sigma=f32("amb_sigma"),
+            carbon_base=f32("carbon_base"),
+            region_id=jnp.asarray(self.region_ids, jnp.int32),
+            grid_mode=jnp.int32(0),
+            price_trace=jnp.zeros((GRID_STEPS, D), jnp.float32),
+            carbon_trace=jnp.zeros((GRID_STEPS, D), jnp.float32),
+            fault_mode=jnp.int32(0),
+            fault_arrival=jnp.zeros((GRID_STEPS, D), jnp.float32),
+            fault_cool_eff=jnp.ones((D,), jnp.float32),
+            fault_cap_eff=jnp.ones((D,), jnp.float32),
+            fault_partition=jnp.zeros((D,), jnp.float32),
+            fault_duration=jnp.zeros((D,), jnp.int32),
+            dt=jnp.float32(dt),
+            theta_soft=jnp.float32(theta_soft),
+            theta_max=jnp.float32(theta_max),
+            setpoint_lo=jnp.float32(setpoint_lo),
+            setpoint_hi=jnp.float32(setpoint_hi),
+            peak_start_h=jnp.float32(8.0),
+            peak_end_h=jnp.float32(20.0),
+        )

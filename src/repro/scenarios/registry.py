@@ -33,11 +33,24 @@ def get(name: str) -> Scenario:
 
 
 def names() -> Tuple[str, ...]:
+    """Names of the default-plant scenarios (the stackable 4-DC grid).
+
+    Scenarios pinned to a non-default plant (`Scenario.plant`, e.g. the
+    128-DC `fleet_128`) are excluded: their param shapes cannot stack
+    into the same batched grid. Use `all_names()` for the full catalogue
+    or `get(name)` to fetch any scenario directly.
+    """
+    return tuple(n for n, s in _REGISTRY.items() if s.plant is None)
+
+
+def all_names() -> Tuple[str, ...]:
+    """Every registered scenario name, non-default plants included."""
     return tuple(_REGISTRY)
 
 
 def all_scenarios() -> Tuple[Scenario, ...]:
-    return tuple(_REGISTRY.values())
+    """Default-plant scenarios only (see `names`)."""
+    return tuple(s for s in _REGISTRY.values() if s.plant is None)
 
 
 # ---------------------------------------------------------------------------
@@ -250,4 +263,14 @@ register(Scenario(
     faults=FaultParams(arrival="poisson", rate=0.01, heat_coupling=3.0,
                        duration=18, cool_eff=(0.5, 0.5, 0.5, 0.5),
                        cap_eff=(0.7, 0.7, 0.7, 0.7)),
+))
+
+register(Scenario(
+    name="fleet_128",
+    description="Fleet-scale plant (DESIGN.md §18): the registered "
+                "`fleet_128` PlantSpec — 128 generated DCs across all six "
+                "regions (seed 0, default mix) — under nominal load; "
+                "stresses fleet-dimension scaling of placement, thermal "
+                "state, and the region-decomposed H-MPC.",
+    plant="fleet_128",
 ))

@@ -40,6 +40,16 @@ class Scenario:
     with a seeded arrival trace and per-DC severities built by
     `repro.faults`; when None the plant stays fault-free (fault_mode 0,
     the bitwise legacy path).
+
+    `plant` optionally names a registered `PlantSpec` (DESIGN.md §18):
+    when set, `build_params` builds that plant and ignores any caller-
+    supplied base (the scenario *is* defined by its plant — e.g.
+    `fleet_128` runs the generated 128-DC fleet, whose shapes are
+    incompatible with the default 4-DC base). When None the scenario
+    runs on whatever base params the suite passes (the `paper4` plant by
+    default). Scenarios with a non-default plant are excluded from
+    `registry.names()` / `registry.all_scenarios()` so grid-wide
+    consumers never stack mixed-shape cells; fetch them by name.
     """
 
     name: str
@@ -50,10 +60,16 @@ class Scenario:
     param_replace: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     grid: Optional[GridParams] = None
     faults: Optional[FaultParams] = None
+    plant: Optional[str] = None
 
     def build_params(self, base: EnvParams | None = None) -> EnvParams:
         """Perturbed plant parameters (bounds enforced by `perturb`)."""
-        base = make_params() if base is None else base
+        if self.plant is not None:
+            from repro.plant import registry as plant_registry
+
+            base = plant_registry.get(self.plant).build()
+        elif base is None:
+            base = make_params()
         return perturb(
             base,
             scale=dict(self.param_scale),

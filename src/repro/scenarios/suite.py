@@ -16,6 +16,12 @@ cells (`make_runner`):
 - ``shard``   — `shard_map` over a 1-D device mesh (`launch.mesh.
                 make_cells_mesh`), vmap within each device's shard; the
                 grid is padded to a multiple of the device count.
+- ``shard_dc``— `shard_map` over the 2-D (cells, dcs) mesh
+                (`launch.mesh.make_fleet_mesh`): cells stacked as
+                (N, B, ...) blocked-fleet pytrees (`build_fleet_cells`)
+                split the Monte-Carlo axis *and* the fleet's DC-block
+                axis across devices, so a single D=128 rollout spreads
+                its per-DC state over the mesh (DESIGN.md §18).
 - ``scan``    — `lax.map` over single episodes; the sequential,
                 memory-minimal fallback.
 
@@ -46,7 +52,7 @@ from repro.scenarios.spec import Scenario
 
 SUMMARY_METRICS = ("cost_usd", "kwh_per_job", "throttle_pct", "dropped_jobs")
 
-BATCH_MODES = ("auto", "vmap", "chunked", "shard", "scan")
+BATCH_MODES = ("auto", "vmap", "chunked", "shard", "shard_dc", "scan")
 
 # Default accelerator-memory budget the auto-selector plans against. CPU
 # hosts usually have much more RAM than this; the budget is deliberately
@@ -127,6 +133,47 @@ def build_cells(
         stack_params(params_cells),
         stack_params(trace_cells),
         jnp.stack(rng_cells),
+    )
+
+
+def build_fleet_cells(
+    block_params: EnvParams,
+    seeds: int,
+    dims: EnvDims,
+    trace_overrides: Optional[dict] = None,
+):
+    """Stack (seed, block) cells for a blocked fleet (DESIGN.md §18).
+
+    `block_params` is the (B, ...) stacked output of
+    `plant.generate_fleet_blocks`: B self-contained sub-plants with
+    identical shapes and `dims` sized per block. Returns (params, traces,
+    rngs) pytrees with leaves shaped (seeds, B, ...) — the layout the
+    `shard_dc` backend lays over the (cells, dcs) mesh. Traces and
+    rollout keys are derived per (seed, block) with the deterministic
+    seed ``k * 10_000 + b``, so block b's workload is the same whatever
+    device count splits the B axis.
+    """
+    from repro.core.workload import synthesize_trace
+
+    overrides = trace_overrides or {}
+    B = jax.tree_util.tree_leaves(block_params)[0].shape[0]
+    per_block = [
+        jax.tree_util.tree_map(lambda l, b=b: l[b], block_params)
+        for b in range(B)
+    ]
+    trace_rows, rng_rows = [], []
+    for k in range(seeds):
+        trace_rows.append(stack_params([
+            synthesize_trace(k * 10_000 + b, dims, per_block[b], **overrides)
+            for b in range(B)
+        ]))
+        rng_rows.append(
+            jnp.stack([jax.random.PRNGKey(k * 10_000 + b) for b in range(B)])
+        )
+    return (
+        stack_params([block_params] * seeds),
+        stack_params(trace_rows),
+        jnp.stack(rng_rows),
     )
 
 
@@ -269,6 +316,36 @@ def make_runner(
 
         return sharded
 
+    if batch_mode == "shard_dc":
+        from repro.launch.mesh import make_fleet_mesh
+
+        mesh = make_fleet_mesh()
+        nc, nd = mesh.shape["cells"], mesh.shape["dcs"]
+        m = -(-n_cells // nc) * nc
+        run = jax.jit(
+            shard_map(
+                lambda ps, ts, rs: jax.vmap(jax.vmap(cell))(ps, ts, rs),
+                mesh=mesh,
+                in_specs=(P("cells", "dcs"),) * 3,
+                out_specs=P("cells", "dcs"),
+                check_rep=False,
+            )
+        )
+
+        def sharded_dc(ps, ts, rs):
+            n_blocks = jax.tree_util.tree_leaves(ps)[0].shape[1]
+            if n_blocks % nd != 0:
+                raise ValueError(
+                    f"shard_dc needs the block axis ({n_blocks}) divisible by "
+                    f"the mesh's dcs axis ({nd}); regenerate the fleet with "
+                    f"`generate_fleet_blocks(D, blocks=k*{nd})`"
+                )
+            ps, ts, rs = _pad_cells((ps, ts, rs), m - n_cells)
+            out = run(ps, ts, rs)
+            return jax.tree_util.tree_map(lambda l: l[:n_cells], out)
+
+        return sharded_dc
+
     raise ValueError(f"batch_mode must be one of {BATCH_MODES}, got {batch_mode!r}")
 
 
@@ -279,6 +356,12 @@ def _prepare_grid(policies, scenarios, seeds, dims, base_params,
     `evaluate_infos` so both paths run the exact same cells."""
     if batch_mode not in BATCH_MODES:
         raise ValueError(f"batch_mode must be one of {BATCH_MODES}, got {batch_mode!r}")
+    if batch_mode == "shard_dc":
+        raise ValueError(
+            "shard_dc runs blocked-fleet cells, not the scenario grid: build "
+            "them with plant.generate_fleet_blocks + build_fleet_cells and "
+            "compile with make_runner(cell, n_cells, 'shard_dc')"
+        )
     dims = dims or EnvDims()
     pols = _resolve_policies(policies, dims)
     scens = _resolve_scenarios(scenarios)

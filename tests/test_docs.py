@@ -60,13 +60,16 @@ def test_design_citations_exist_at_all():
 
 @pytest.mark.parametrize("doc", ["README.md", "SIMULATOR_GUIDE.md"])
 def test_every_registered_scenario_is_documented(doc):
-    from repro.scenarios import names
+    """all_names() so plant-pinned scenarios (excluded from `names()` /
+    `all_scenarios()` because they cannot stack with the Table-I grid,
+    e.g. `fleet_128`) still must appear in the docs tables."""
+    from repro.scenarios.registry import all_names
 
     text = _read(doc)
-    undocumented = [n for n in names() if f"`{n}`" not in text]
+    undocumented = [n for n in all_names() if f"`{n}`" not in text]
     assert not undocumented, (
         f"{doc} scenario table is missing: {undocumented} — every scenario "
-        "in registry.all_scenarios() must appear in the docs tables"
+        "in registry.all_names() must appear in the docs tables"
     )
 
 
@@ -195,6 +198,28 @@ def test_guide_documents_fault_catalogue():
         f"SIMULATOR_GUIDE.md fault-scenario table is missing: {undocumented}"
     )
     for anchor in ("`fault_mode`", "`h_mpc_resilient`", "`fault_aware`"):
+        assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor}"
+
+
+def test_guide_documents_region_catalogue():
+    """The SIMULATOR_GUIDE's "Fleets & regions" chapter must catalogue
+    every region prior in `repro.plant.REGION_NAMES` (backticked) and the
+    fleet machinery, like the scenario and fault catalogues — a new
+    region cannot land without its table row."""
+    from repro.plant import REGION_NAMES, REGIONS
+
+    assert set(REGION_NAMES) == set(REGIONS), "region catalogue out of sync"
+    text = _read("SIMULATOR_GUIDE.md")
+    assert "## Fleets & regions" in text, (
+        "SIMULATOR_GUIDE.md must have a 'Fleets & regions' chapter"
+    )
+    undocumented = [n for n in REGION_NAMES if f"`{n}`" not in text]
+    assert not undocumented, (
+        f"SIMULATOR_GUIDE.md region catalogue is missing: {undocumented}"
+    )
+    for anchor in ("`PlantSpec`", "`generate_fleet`", "`fleet_128`",
+                   "`shard_dc`", "`generate_fleet_blocks`", "`paper4`",
+                   "`repro.api`"):
         assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor}"
 
 

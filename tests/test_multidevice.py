@@ -193,6 +193,48 @@ print("SHARD-PARITY-OK")
 """)
 
 
+def test_suite_shard_dc_backend_matches_vmap():
+    """DC-axis sharded fleet rollout (DESIGN.md §18): `batch_mode="shard_dc"`
+    lays blocked-fleet cells over the 2-D (cells, dcs) mesh — 8 devices all
+    on the "dcs" axis here — and must reproduce the single-device vmap over
+    the flattened (seed, block) grid bitwise: blocks are self-contained
+    sub-plants, so splitting them across devices is collective-free."""
+    _run("""
+import warnings; warnings.filterwarnings("ignore")
+import dataclasses
+import jax, numpy as np
+from repro.core import metrics, rollout_params
+from repro.plant import generate_fleet_blocks
+from repro.scenarios.suite import build_fleet_cells, make_runner
+
+assert len(jax.devices()) == 8
+block_params, dims, _specs = generate_fleet_blocks(32, blocks=8, seed=0)
+dims = dataclasses.replace(dims, horizon=12, max_arrivals=32, queue_cap=64,
+                           run_cap=64, pending_cap=32, admit_depth=32,
+                           policy_depth=64)
+ps, ts, rs = build_fleet_cells(block_params, seeds=2, dims=dims,
+                               trace_overrides={"cap_per_step": 16})
+
+from repro.core.policies import make_policy
+pol = make_policy("greedy", dims)
+def cell(p, t, r):
+    _, infos = rollout_params(dims, pol, p, t, r)
+    return metrics.summarize(infos)
+
+run_dc = make_runner(cell, 2, "shard_dc", dims=dims)
+got = run_dc(ps, ts, rs)
+
+flat = jax.tree_util.tree_map(lambda l: l.reshape((-1,) + l.shape[2:]), (ps, ts, rs))
+run_v = make_runner(cell, 16, "vmap", dims=dims)
+want = run_v(*flat)
+for key in want:
+    np.testing.assert_array_equal(
+        np.asarray(got[key]).reshape(-1), np.asarray(want[key]),
+        err_msg=key)
+print("SHARD-DC-PARITY-OK")
+""")
+
+
 @pytest.mark.slow
 def test_dryrun_single_cell_end_to_end():
     """The real deliverable: one full dry-run cell (512 fake devices,

@@ -1,0 +1,321 @@
+"""Tests for the declarative plant layer (DESIGN.md §18).
+
+Covers the three contracts the PlantSpec refactor must honour:
+
+- **Bitwise legacy parity** — `make_params()` now delegates to the
+  registered `paper4` spec; every leaf must equal the pre-refactor
+  Table-I construction bit for bit (the five smoke goldens depend on it).
+- **Fleet generation** — `generate_fleet` is seed-deterministic,
+  respects the requested region mix (largest-remainder apportionment),
+  and emits physically sane plants for D from 8 to 256.
+- **Region decomposition** — `region_reduce` conserves extensive
+  quantities, and the region-decomposed H-MPC is bitwise identical to
+  the joint H-MPC on the paper plant, where every region is a singleton.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DC_NAMES, EnvDims, EnvParams, make_params, rollout_params,
+    synthesize_trace,
+)
+from repro.core.params import GRID_STEPS, HEAT_FRACTION
+from repro.core.policies import make_policy
+from repro.plant import (
+    DEFAULT_REGION_MIX, REGION_NAMES, REGIONS, fleet_dims, fleet_spec,
+    generate_fleet, generate_fleet_blocks, get_region,
+)
+from repro.plant import registry as plant_registry
+from repro.plant.fleet import _apportion
+
+# ---------------------------------------------------------------------------
+# Legacy Table-I construction, reproduced verbatim from the pre-PlantSpec
+# `make_params` so the parity test keeps failing if either side drifts.
+# ---------------------------------------------------------------------------
+
+_DC_CLUSTERS = (
+    (3, 2, 157_000.0, 95_000.0, (0.3, 0.7), (4.0, 5.0)),   # Seattle
+    (2, 3, 65_000.0, 170_000.0, (0.6, 0.8), (6.5, 8.0)),   # Phoenix
+    (3, 2, 144_000.0, 60_000.0, (0.4, 0.6), (3.5, 4.5)),   # Chicago
+    (2, 3, 90_000.0, 280_000.0, (0.5, 0.7), (6.0, 9.0)),   # Dallas
+)
+
+_DC_PHYS = {
+    "r_th": (0.003, 0.004, 0.005, 0.002),
+    "c_th": (700e6, 600e6, 550e6, 520e6),
+    "kp": (4000.0, 7000.0, 5000.0, 6000.0),
+    "ki": (100.0, 150.0, 80.0, 120.0),
+    "kd": (1000.0, 1500.0, 800.0, 1200.0),
+    "cool_max": (0.68e6, 1.22e6, 0.30e6, 1.97e6),
+    "g_min": (0.2, 0.7, 0.4, 0.3),
+    "setpoint_fixed": (23.0, 25.0, 24.0, 24.0),
+    "price_peak": (0.08, 0.22, 0.13, 0.19),
+    "price_off": (0.06, 0.14, 0.09, 0.11),
+    "amb_base": (10.0, 38.0, 16.0, 30.0),
+    "amb_amp": (5.0, 12.0, 10.0, 11.0),
+    "amb_sigma": (0.5, 0.5, 0.5, 0.5),
+    "carbon_base": (90.0, 450.0, 520.0, 470.0),
+}
+
+
+def _legacy_make_params(dt=300.0, theta_soft=32.0, theta_max=35.0,
+                        setpoint_lo=18.0, setpoint_hi=28.0,
+                        power_margin=1.2, inflow_frac=1.05) -> EnvParams:
+    dc_id, is_gpu, c_max, alpha = [], [], [], []
+    for d, (n_cpu, n_gpu, cap_c, cap_g, a_c, a_g) in enumerate(_DC_CLUSTERS):
+        for k in range(n_cpu):
+            dc_id.append(d)
+            is_gpu.append(False)
+            c_max.append(cap_c / n_cpu)
+            alpha.append(np.linspace(a_c[0], a_c[1], n_cpu)[k])
+        for k in range(n_gpu):
+            dc_id.append(d)
+            is_gpu.append(True)
+            c_max.append(cap_g / n_gpu)
+            alpha.append(np.linspace(a_g[0], a_g[1], n_gpu)[k])
+    dc_id = np.asarray(dc_id, np.int32)
+    is_gpu = np.asarray(is_gpu)
+    c_max = np.asarray(c_max, np.float32)
+    alpha = np.asarray(alpha, np.float32)
+    phi = alpha / HEAT_FRACTION
+
+    cool_max = np.asarray(_DC_PHYS["cool_max"], np.float32)
+    dc_cap = np.zeros(len(_DC_CLUSTERS), np.float32)
+    np.add.at(dc_cap, dc_id, c_max)
+    kappa = c_max / dc_cap[dc_id]
+
+    rated = phi * c_max + kappa * cool_max[dc_id]
+    D = len(_DC_CLUSTERS)
+    f32 = lambda key: jnp.asarray(_DC_PHYS[key], jnp.float32)
+    return EnvParams(
+        dc_id=jnp.asarray(dc_id), is_gpu=jnp.asarray(is_gpu),
+        c_max=jnp.asarray(c_max), alpha=jnp.asarray(alpha),
+        phi=jnp.asarray(phi), kappa=jnp.asarray(kappa),
+        p_max=jnp.asarray(power_margin * rated),
+        w_in=jnp.asarray(inflow_frac * rated),
+        r_th=f32("r_th"), c_th=f32("c_th"), kp=f32("kp"), ki=f32("ki"),
+        kd=f32("kd"), cool_max=f32("cool_max"), g_min=f32("g_min"),
+        setpoint_fixed=f32("setpoint_fixed"), price_peak=f32("price_peak"),
+        price_off=f32("price_off"), amb_base=f32("amb_base"),
+        amb_amp=f32("amb_amp"), amb_sigma=f32("amb_sigma"),
+        carbon_base=f32("carbon_base"),
+        region_id=jnp.arange(D, dtype=jnp.int32),
+        grid_mode=jnp.int32(0),
+        price_trace=jnp.zeros((GRID_STEPS, D), jnp.float32),
+        carbon_trace=jnp.zeros((GRID_STEPS, D), jnp.float32),
+        fault_mode=jnp.int32(0),
+        fault_arrival=jnp.zeros((GRID_STEPS, D), jnp.float32),
+        fault_cool_eff=jnp.ones((D,), jnp.float32),
+        fault_cap_eff=jnp.ones((D,), jnp.float32),
+        fault_partition=jnp.zeros((D,), jnp.float32),
+        fault_duration=jnp.zeros((D,), jnp.int32),
+        dt=jnp.float32(dt), theta_soft=jnp.float32(theta_soft),
+        theta_max=jnp.float32(theta_max),
+        setpoint_lo=jnp.float32(setpoint_lo),
+        setpoint_hi=jnp.float32(setpoint_hi),
+        peak_start_h=jnp.float32(8.0), peak_end_h=jnp.float32(20.0),
+    )
+
+
+def _assert_params_bitwise(a: EnvParams, b: EnvParams):
+    for f in dataclasses.fields(EnvParams):
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype, f"{f.name}: dtype {x.dtype} != {y.dtype}"
+        assert x.shape == y.shape, f"{f.name}: shape {x.shape} != {y.shape}"
+        assert np.array_equal(x, y), f"{f.name}: values differ"
+
+
+# ------------------------------------------------------------ legacy parity
+
+
+def test_make_params_bitwise_legacy():
+    _assert_params_bitwise(make_params(), _legacy_make_params())
+
+
+def test_make_params_bitwise_legacy_nondefault_kwargs():
+    kw = dict(dt=60.0, theta_soft=30.0, theta_max=34.0, setpoint_lo=16.0,
+              setpoint_hi=27.0, power_margin=1.5, inflow_frac=1.10)
+    _assert_params_bitwise(make_params(**kw), _legacy_make_params(**kw))
+
+
+def test_paper4_build_is_make_params():
+    _assert_params_bitwise(plant_registry.get("paper4").build(), make_params())
+
+
+def test_dc_names_match_paper4_spec():
+    assert DC_NAMES == plant_registry.get("paper4").dc_names()
+
+
+def test_default_dims_derive_from_paper4():
+    dims = EnvDims()
+    spec = plant_registry.get("paper4")
+    assert dims.num_clusters == spec.num_clusters == 20
+    assert dims.num_dcs == spec.num_dcs == 4
+    assert dims.num_regions == spec.num_regions == 4
+
+
+# ------------------------------------------------------------- region priors
+
+
+def test_region_catalogue():
+    assert set(REGION_NAMES) == set(REGIONS)
+    assert abs(sum(DEFAULT_REGION_MIX.values()) - 1.0) < 1e-9
+    assert set(DEFAULT_REGION_MIX) == set(REGION_NAMES)
+    for name in REGION_NAMES:
+        r = get_region(name)
+        assert r.amb_base_range[0] <= r.amb_base_range[1]
+        assert r.price_peak_range[0] > 0 and r.carbon_range[0] > 0
+        assert r.cool_frac_range[0] > 0
+    with pytest.raises(KeyError):
+        get_region("atlantis")
+
+
+def test_apportion_largest_remainder():
+    counts = dict(_apportion(10, {"pnw_hydro": 0.55, "nordics": 0.45}))
+    assert counts == {"pnw_hydro": 6, "nordics": 4}
+    counts = dict(_apportion(128, DEFAULT_REGION_MIX))
+    assert sum(counts.values()) == 128
+    assert all(c > 0 for c in counts.values())
+
+
+# ------------------------------------------------------------ fleet synthesis
+
+
+@pytest.mark.parametrize("D", (8, 64, 128, 256))
+def test_generate_fleet_deterministic_and_sane(D):
+    spec = fleet_spec(D, seed=3)
+    params = spec.build()
+    params2 = fleet_spec(D, seed=3).build()
+    _assert_params_bitwise(params, params2)
+
+    # a different seed draws a different plant
+    other = fleet_spec(D, seed=4).build()
+    assert not np.array_equal(np.asarray(params.c_max),
+                              np.asarray(other.c_max))
+
+    # region mix respected (largest-remainder counts, catalogue order);
+    # region_id indexes into spec.regions, which mirrors the allocation
+    counts = _apportion(D, DEFAULT_REGION_MIX)
+    assert spec.regions == tuple(n for n, _ in counts)
+    rid = np.asarray(params.region_id)
+    assert rid.shape == (D,)
+    observed = np.bincount(rid, minlength=len(spec.regions))
+    expected = np.array([c for _, c in counts])
+    assert np.array_equal(observed, expected)
+
+    # physical sanity
+    assert np.all(np.asarray(params.cool_max) > 0)
+    assert np.all(np.asarray(params.c_max) > 0)
+    assert np.all(np.asarray(params.r_th) > 0)
+    assert np.all(np.asarray(params.c_th) > 0)
+    dc_id = np.asarray(params.dc_id)
+    kappa_sum = np.zeros(D)
+    np.add.at(kappa_sum, dc_id, np.asarray(params.kappa, np.float64))
+    np.testing.assert_allclose(kappa_sum, 1.0, atol=1e-5)
+
+    dims = fleet_dims(spec)
+    assert dims.num_dcs == D
+    assert dims.num_clusters == dc_id.shape[0]
+    assert dims.num_regions == len(REGION_NAMES)
+
+
+def test_fleet_capacity_monotone_in_D():
+    caps = [float(np.asarray(generate_fleet(D, seed=0).c_max).sum())
+            for D in (8, 64, 128)]
+    assert caps[0] < caps[1] < caps[2]
+
+
+def test_generate_fleet_custom_mix():
+    mix = {"nordics": 0.75, "singapore": 0.25}
+    spec = fleet_spec(16, region_mix=mix, seed=1)
+    assert spec.regions == ("nordics", "singapore")
+    rid = np.asarray(spec.build().region_id)
+    assert (rid == 0).sum() == 12 and (rid == 1).sum() == 4
+
+
+def test_generate_fleet_blocks_shapes():
+    block_params, block_dims, specs = generate_fleet_blocks(32, blocks=4, seed=0)
+    assert len(specs) == 4
+    assert block_dims.num_dcs == 8
+    assert np.asarray(block_params.c_max).shape[0] == 4  # stacked (B, ...)
+    assert np.asarray(block_params.dc_id).shape == (4, block_dims.num_clusters)
+    # blocks are self-contained: local dc_id in [0, 8)
+    dc_id = np.asarray(block_params.dc_id)
+    assert dc_id.min() == 0 and dc_id.max() == 7
+    with pytest.raises(ValueError):
+        generate_fleet_blocks(30, blocks=4)
+
+
+def test_fleet_128_registered():
+    spec = plant_registry.get("fleet_128")
+    assert spec.num_dcs == 128
+    # the registered spec is the seed-0 default-mix draw
+    _assert_params_bitwise(spec.build(), generate_fleet(128, seed=0))
+
+
+# ------------------------------------------------- region-decomposed H-MPC
+
+_SMALL = dict(horizon=12, max_arrivals=32, queue_cap=64, run_cap=64,
+              pending_cap=32, admit_depth=32, policy_depth=64)
+
+
+def test_region_reduce_conserves_extensive_quantities():
+    from repro.core.mpc import rollout as mpc_rollout
+
+    spec = fleet_spec(16, seed=2)
+    params = spec.build()
+    agg = mpc_rollout.aggregate_params(params, spec.num_dcs)
+    R = spec.num_regions
+    params_r, agg_r, w = mpc_rollout.region_reduce(params, agg, R)
+    np.testing.assert_allclose(
+        float(np.asarray(agg_r.c_max).sum()),
+        float(np.asarray(agg.c_max).sum()), rtol=1e-5)
+    np.testing.assert_allclose(
+        float(np.asarray(params_r.cool_max).sum()),
+        float(np.asarray(params.cool_max).sum()), rtol=1e-5)
+    np.testing.assert_allclose(
+        float(np.asarray(params_r.c_th).sum()),
+        float(np.asarray(params.c_th).sum()), rtol=1e-5)
+    # capacity weights sum to 1 inside each region
+    wsum = np.zeros(R)
+    np.add.at(wsum, np.asarray(params.region_id), np.asarray(w, np.float64))
+    np.testing.assert_allclose(wsum, 1.0, atol=1e-5)
+
+
+def test_regional_hmpc_identity_on_singleton_regions():
+    # paper4 has one region per DC, so the region "decomposition" is the
+    # identity reindexing — the regional policy must match joint H-MPC
+    # bitwise on every step output.
+    dims = EnvDims(**_SMALL)
+    params = make_params()
+    trace = synthesize_trace(seed=0, dims=dims, params=params, cap_per_step=24)
+    rng = jax.random.PRNGKey(0)
+    outs = {}
+    for name in ("h_mpc", "h_mpc_regional"):
+        pol = make_policy(name, dims)
+        _, infos = jax.jit(
+            lambda p, t, r, pol=pol: rollout_params(dims, pol, p, t, r)
+        )(params, trace, rng)
+        outs[name] = infos
+    a, b = outs["h_mpc"], outs["h_mpc_regional"]
+    for leaf_a, leaf_b in zip(jax.tree_util.tree_leaves(a),
+                              jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+def test_regional_hmpc_runs_on_fleet():
+    spec = fleet_spec(16, seed=0)
+    dims = fleet_dims(spec, **_SMALL)
+    params = spec.build()
+    trace = synthesize_trace(seed=0, dims=dims, params=params, cap_per_step=24)
+    pol = make_policy("h_mpc_regional", dims)
+    _, infos = jax.jit(
+        lambda p, t, r: rollout_params(dims, pol, p, t, r)
+    )(params, trace, jax.random.PRNGKey(0))
+    assert float(np.asarray(infos.energy_kwh).sum()) > 0
+    assert np.all(np.isfinite(np.asarray(infos.theta)))
