@@ -3,11 +3,11 @@
     PYTHONPATH=src python -m benchmarks.check_regression \
         [--update] [--warn-only] [--only SUITE ...]
 
-Re-runs the `scenarios`, `kernels`, `grid`, `jobs`, and `faults` benchmarks
-with the same `fast` flag each committed baseline (`BENCH_scenarios.json` /
-`BENCH_kernels.json` / `BENCH_grid.json` / `BENCH_jobs.json` /
-`BENCH_faults.json`) was recorded with and compares throughput within a
-±30% band:
+Re-runs every *gated* suite in `benchmarks.registry` (the single suite
+table `benchmarks.run` also dispatches from, so `--only` names can never
+drift between the two CLIs) with the same `fast` flag each committed
+baseline (`BENCH_<suite>.json`) was recorded with and compares throughput
+within a ±30% band:
 
 - scenarios: `per_scenario_vmap[*].steps_per_s` and
   `per_backend[*].steps_per_s`, on the backends both runs measured
@@ -24,6 +24,11 @@ with the same `fast` flag each committed baseline (`BENCH_scenarios.json` /
 - kernels: wall-clock per kernel (as 1/ms throughput), skipped when the
   Pallas numbers come from interpret mode on either side or the shapes
   differ.
+
+Every compared pair — not just failures — prints in a per-metric delta
+table (baseline vs current throughput, % change, OK/REGRESSION/STALE
+status); under CI the same table is appended to `$GITHUB_STEP_SUMMARY`
+so the job page shows the full comparison.
 
 Wall-clock on a busy host is one-sided noisy — contention only makes
 things *slower* — so the gate takes the best of up to `--retries + 1`
@@ -47,19 +52,10 @@ import sys
 import tempfile
 from typing import Dict, List, Tuple
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BASELINES = {
-    "scenarios": os.path.join(REPO_ROOT, "BENCH_scenarios.json"),
-    "kernels": os.path.join(REPO_ROOT, "BENCH_kernels.json"),
-    "grid": os.path.join(REPO_ROOT, "BENCH_grid.json"),
-    "jobs": os.path.join(REPO_ROOT, "BENCH_jobs.json"),
-    "faults": os.path.join(REPO_ROOT, "BENCH_faults.json"),
-    "fleet": os.path.join(REPO_ROOT, "BENCH_fleet.json"),
-}
-BAND = 0.30  # fresh/baseline throughput ratio must stay within [0.7, 1.3]
+from benchmarks.registry import Pairs, gated
 
-# (label, baseline_throughput, fresh_throughput) — larger is better
-Pairs = List[Tuple[str, float, float]]
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BAND = 0.30  # fresh/baseline throughput ratio must stay within [0.7, 1.3]
 
 
 def _load(path: str) -> Dict:
@@ -67,98 +63,26 @@ def _load(path: str) -> Dict:
         return json.load(f)
 
 
-def scenario_pairs(baseline: Dict, fresh: Dict) -> Pairs:
-    pairs: Pairs = []
-    for scen, b in baseline.get("per_scenario_vmap", {}).items():
-        f = fresh.get("per_scenario_vmap", {}).get(scen)
-        if f:
-            pairs.append((f"scenarios/vmap/{scen}", b["steps_per_s"], f["steps_per_s"]))
-    for mode, b in baseline.get("per_backend", {}).items():
-        f = fresh.get("per_backend", {}).get(mode)
-        if f:
-            pairs.append((f"scenarios/backend/{mode}", b["steps_per_s"], f["steps_per_s"]))
-    return pairs
-
-
-def grid_pairs(baseline: Dict, fresh: Dict) -> Pairs:
-    pairs: Pairs = []
-    for name, b in baseline.get("per_generator", {}).items():
-        f = fresh.get("per_generator", {}).get(name)
-        if f:
-            pairs.append((f"grid/gen/{name}", b["traces_per_s"], f["traces_per_s"]))
-    for name, b in baseline.get("carbon_rollout", {}).items():
-        f = fresh.get("carbon_rollout", {}).get(name)
-        if f:
-            pairs.append((f"grid/rollout/{name}", b["steps_per_s"], f["steps_per_s"]))
-    return pairs
-
-
-def jobs_pairs(baseline: Dict, fresh: Dict) -> Pairs:
-    pairs: Pairs = []
-    for mix, b in baseline.get("per_mix", {}).items():
-        f = fresh.get("per_mix", {}).get(mix)
-        if f:
-            pairs.append((f"jobs/{mix}/jobs", b["jobs_per_s"], f["jobs_per_s"]))
-            # older baselines predate the steps_per_s field
-            if "steps_per_s" in b and "steps_per_s" in f:
-                pairs.append((f"jobs/{mix}/steps",
-                              b["steps_per_s"], f["steps_per_s"]))
-    return pairs
-
-
-def faults_pairs(baseline: Dict, fresh: Dict) -> Pairs:
-    pairs: Pairs = []
-    for name, b in baseline.get("per_fault_schedule", {}).items():
-        f = fresh.get("per_fault_schedule", {}).get(name)
-        if f:
-            pairs.append((f"faults/schedule/{name}",
-                          b["schedules_per_s"], f["schedules_per_s"]))
-    for name, b in baseline.get("fault_rollout", {}).items():
-        f = fresh.get("fault_rollout", {}).get(name)
-        if f:
-            pairs.append((f"faults/rollout/{name}",
-                          b["steps_per_s"], f["steps_per_s"]))
-    return pairs
-
-
-def fleet_pairs(baseline: Dict, fresh: Dict) -> Pairs:
-    pairs: Pairs = []
-    for name, b in baseline.get("per_fleet_size", {}).items():
-        f = fresh.get("per_fleet_size", {}).get(name)
-        if f:
-            pairs.append((f"fleet/size/{name}",
-                          b["dc_steps_per_s"], f["dc_steps_per_s"]))
-    # Device-ladder wall-clock is only comparable between runs with the
-    # same amount of real parallelism underneath the forced devices.
-    if baseline.get("host_cpu_count") == fresh.get("host_cpu_count"):
-        for name, b in baseline.get("per_device_count", {}).items():
-            f = fresh.get("per_device_count", {}).get(name)
-            if f:
-                pairs.append((f"fleet/ladder/{name}",
-                              b["steps_per_s"], f["steps_per_s"]))
-    return pairs
-
-
-def kernel_pairs(baseline: Dict, fresh: Dict) -> Pairs:
-    pairs: Pairs = []
-    bt, ft = baseline.get("thermal_rollout", {}), fresh.get("thermal_rollout", {})
-    if bt.get("shape") == ft.get("shape"):
-        pairs.append(("kernels/thermal_ref", 1.0 / bt["ref_ms"], 1.0 / ft["ref_ms"]))
-        # Pallas wall-clock only means something when both sides compiled it
-        # (interpret mode on CPU is documented as not wall-clock-meaningful).
-        if not baseline.get("pallas_interpret") and not fresh.get("pallas_interpret"):
-            pairs.append(("kernels/thermal_pallas",
-                          1.0 / bt["pallas_ms"], 1.0 / ft["pallas_ms"]))
-    if "ssm_update" in baseline and "ssm_update" in fresh:
-        pairs.append(("kernels/ssm_ref",
-                      1.0 / baseline["ssm_update"]["ref_ms"],
-                      1.0 / fresh["ssm_update"]["ref_ms"]))
-    if baseline.get("fast") == fresh.get("fast") and \
-            "flash_attention" in baseline and "flash_attention" in fresh:
-        pairs.append(("kernels/attention_ref",
-                      1.0 / baseline["flash_attention"]["ref_ms"],
-                      1.0 / fresh["flash_attention"]["ref_ms"]))
-    return pairs
+def delta_table(pairs: Pairs, band: float) -> str:
+    """Markdown table over every compared pair — baseline vs current
+    throughput, % change, and OK/REGRESSION/STALE status — so the human
+    (and the CI step summary) sees the full comparison, not just the
+    violations."""
+    lines = ["| metric | baseline | current | delta | status |",
+             "|---|---:|---:|---:|---|"]
+    for label, base, fresh in sorted(pairs):
+        if base <= 0:
+            continue
+        ratio = fresh / base
+        if ratio < 1.0 - band:
+            status = "REGRESSION"
+        elif ratio > 1.0 + band:
+            status = "STALE"
+        else:
+            status = "OK"
+        lines.append(f"| {label} | {base:.4g} | {fresh:.4g} | "
+                     f"{100.0 * (ratio - 1.0):+.1f}% | {status} |")
+    return "\n".join(lines)
 
 
 def split_violations(pairs: Pairs, band: float) -> Tuple[List[str], List[str]]:
@@ -243,37 +167,26 @@ def main(argv=None) -> int:
                     help=f"relative tolerance band (default {BAND})")
     ap.add_argument("--retries", type=int, default=2,
                     help="extra fresh runs (best-of) before believing a slowdown")
-    ap.add_argument("--only", action="append", choices=sorted(BASELINES),
+    ap.add_argument("--only", action="append",
+                    choices=sorted(s.name for s in gated()),
                     metavar="SUITE",
                     help="restrict to the named suite(s); repeatable")
     args = ap.parse_args(argv)
     warn_only = args.warn_only or bool(os.environ.get("CI"))
 
-    from benchmarks import (
-        bench_faults, bench_fleet, bench_grid, bench_jobs, bench_kernels,
-        bench_scenarios,
-    )
-
-    suites = (
-        ("scenarios", bench_scenarios, scenario_pairs),
-        ("kernels", bench_kernels, kernel_pairs),
-        ("grid", bench_grid, grid_pairs),
-        ("jobs", bench_jobs, jobs_pairs),
-        ("faults", bench_faults, faults_pairs),
-        ("fleet", bench_fleet, fleet_pairs),
-    )
+    suites = gated()
     if args.only:
-        suites = tuple(s for s in suites if s[0] in args.only)
+        suites = tuple(s for s in suites if s.name in args.only)
 
     runs = 1 + max(0, args.retries)
 
     if args.update:
         with tempfile.TemporaryDirectory() as tmp:
-            for name, mod, _ in suites:
-                base_path = BASELINES[name]
-                fast = bool(_load(base_path).get("fast")) if os.path.exists(base_path) \
-                    else (name in ("scenarios", "grid", "jobs", "faults", "fleet"))
-                merged = _measure_best(name, mod, fast, runs, tmp)
+            for suite in suites:
+                base_path = suite.baseline_path()
+                fast = bool(_load(base_path).get("fast")) \
+                    if os.path.exists(base_path) else suite.fast_default
+                merged = _measure_best(suite.name, suite.load(), fast, runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
                 print(f"wrote {base_path} (best of {runs} runs)")
@@ -282,16 +195,17 @@ def main(argv=None) -> int:
 
     regressions: List[str] = []
     stale: List[str] = []
+    all_pairs: Pairs = []
     with tempfile.TemporaryDirectory() as tmp:
-        for name, mod, pair_fn in suites:
-            base_path = BASELINES[name]
+        for suite in suites:
+            name, mod = suite.name, suite.load()
+            base_path = suite.baseline_path()
             if not os.path.exists(base_path):
                 # same best-of-N discipline as --update: a single noisy
                 # shot must never become the committed reference
                 print(f"note: no committed baseline at {base_path}; "
                       f"emitting one (best of {runs} runs)")
-                merged = _measure_best(
-                    name, mod, name in ("scenarios", "grid", "jobs", "faults", "fleet"), runs, tmp)
+                merged = _measure_best(name, mod, suite.fast_default, runs, tmp)
                 with open(base_path, "w") as f:
                     json.dump(merged, f, indent=2)
                 continue
@@ -303,7 +217,7 @@ def main(argv=None) -> int:
                       f"run {attempt + 1}) ===")
                 out_path = os.path.join(tmp, f"BENCH_{name}_{attempt}.json")
                 mod.main(fast=fast, out_path=out_path)
-                best = _merge_best(best, pair_fn(baseline, _load(out_path)))
+                best = _merge_best(best, suite.pairs(baseline, _load(out_path)))
                 slow, _ = split_violations(best, args.band)
                 if not slow:
                     break  # no suspected regression left — stop re-measuring
@@ -311,9 +225,20 @@ def main(argv=None) -> int:
                 stale.append(f"{name}: no comparable entries between baseline "
                              "and fresh run")
                 continue
+            all_pairs += best
             slow, fastv = split_violations(best, args.band)
             regressions += slow
             stale += fastv
+
+    if all_pairs:
+        table = delta_table(all_pairs, args.band)
+        print("\n## Bench regression: baseline vs current\n")
+        print(table)
+        summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+        if summary_path:
+            with open(summary_path, "a", encoding="utf-8") as f:
+                f.write("## Bench regression: baseline vs current\n\n")
+                f.write(table + "\n\n")
 
     for v in stale:
         print(f"NOTE: {v}", file=sys.stderr)

@@ -1,0 +1,246 @@
+"""Single registry of bench suites shared by `benchmarks.run` (dispatch,
+section titles, headline CSV strings) and `benchmarks.check_regression`
+(baseline files, comparison pairs, fast-tier defaults).
+
+Before this registry the two CLIs kept independent `--only` lists, so a
+new bench could be runnable but silently absent from the regression gate
+(or vice versa). Now a suite exists in exactly one place: add a
+`BenchSuite` row here and both CLIs — and the gate — pick it up.
+
+A suite is *gated* when it declares a `baseline` file: the committed
+`BENCH_<name>.json` that `check_regression` compares fresh throughput
+against via the suite's `pairs` function. Paper-table benches (rq1/rq2/
+complexity/throughput) stay ungated — their outputs are result tables,
+not wall-clock contracts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import os
+from typing import Callable, Dict, List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (label, baseline_throughput, fresh_throughput) — larger is better
+Pairs = List[Tuple[str, float, float]]
+
+
+# --- comparison-pair extractors (one per gated suite) -----------------------
+
+def scenario_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for scen, b in baseline.get("per_scenario_vmap", {}).items():
+        f = fresh.get("per_scenario_vmap", {}).get(scen)
+        if f:
+            pairs.append((f"scenarios/vmap/{scen}", b["steps_per_s"], f["steps_per_s"]))
+    for mode, b in baseline.get("per_backend", {}).items():
+        f = fresh.get("per_backend", {}).get(mode)
+        if f:
+            pairs.append((f"scenarios/backend/{mode}", b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
+def grid_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for name, b in baseline.get("per_generator", {}).items():
+        f = fresh.get("per_generator", {}).get(name)
+        if f:
+            pairs.append((f"grid/gen/{name}", b["traces_per_s"], f["traces_per_s"]))
+    for name, b in baseline.get("carbon_rollout", {}).items():
+        f = fresh.get("carbon_rollout", {}).get(name)
+        if f:
+            pairs.append((f"grid/rollout/{name}", b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
+def jobs_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for mix, b in baseline.get("per_mix", {}).items():
+        f = fresh.get("per_mix", {}).get(mix)
+        if f:
+            pairs.append((f"jobs/{mix}/jobs", b["jobs_per_s"], f["jobs_per_s"]))
+            # older baselines predate the steps_per_s field
+            if "steps_per_s" in b and "steps_per_s" in f:
+                pairs.append((f"jobs/{mix}/steps",
+                              b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
+def faults_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for name, b in baseline.get("per_fault_schedule", {}).items():
+        f = fresh.get("per_fault_schedule", {}).get(name)
+        if f:
+            pairs.append((f"faults/schedule/{name}",
+                          b["schedules_per_s"], f["schedules_per_s"]))
+    for name, b in baseline.get("fault_rollout", {}).items():
+        f = fresh.get("fault_rollout", {}).get(name)
+        if f:
+            pairs.append((f"faults/rollout/{name}",
+                          b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
+def fleet_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for name, b in baseline.get("per_fleet_size", {}).items():
+        f = fresh.get("per_fleet_size", {}).get(name)
+        if f:
+            pairs.append((f"fleet/size/{name}",
+                          b["dc_steps_per_s"], f["dc_steps_per_s"]))
+    # Device-ladder wall-clock is only comparable between runs with the
+    # same amount of real parallelism underneath the forced devices.
+    if baseline.get("host_cpu_count") == fresh.get("host_cpu_count"):
+        for name, b in baseline.get("per_device_count", {}).items():
+            f = fresh.get("per_device_count", {}).get(name)
+            if f:
+                pairs.append((f"fleet/ladder/{name}",
+                              b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
+def kernel_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    bt, ft = baseline.get("thermal_rollout", {}), fresh.get("thermal_rollout", {})
+    if bt.get("shape") == ft.get("shape"):
+        pairs.append(("kernels/thermal_ref", 1.0 / bt["ref_ms"], 1.0 / ft["ref_ms"]))
+        # Pallas wall-clock only means something when both sides compiled it
+        # (interpret mode on CPU is documented as not wall-clock-meaningful).
+        if not baseline.get("pallas_interpret") and not fresh.get("pallas_interpret"):
+            pairs.append(("kernels/thermal_pallas",
+                          1.0 / bt["pallas_ms"], 1.0 / ft["pallas_ms"]))
+    if "ssm_update" in baseline and "ssm_update" in fresh:
+        pairs.append(("kernels/ssm_ref",
+                      1.0 / baseline["ssm_update"]["ref_ms"],
+                      1.0 / fresh["ssm_update"]["ref_ms"]))
+    if baseline.get("fast") == fresh.get("fast") and \
+            "flash_attention" in baseline and "flash_attention" in fresh:
+        pairs.append(("kernels/attention_ref",
+                      1.0 / baseline["flash_attention"]["ref_ms"],
+                      1.0 / fresh["flash_attention"]["ref_ms"]))
+    return pairs
+
+
+# --- headline extractors (result of `mod.main(fast=...)` -> CSV string) -----
+
+def _rq1_headline(res):
+    return f"hmpc_cost={res['h_mpc']['cost_usd'][0]:.0f}"
+
+
+def _rq2_headline(res):
+    return f"rows={len(res)}"
+
+
+def _throughput_headline(res):
+    return f"speedup={res['jit_sps'] / res['python_sps']:.0f}x"
+
+
+def _scenarios_headline(res):
+    per_scenario, backends = res
+    sps = max(r["steps_per_s"] for r in per_scenario.values())
+    per_backend = " ".join(
+        f"{m}={r['steps_per_s']:.0f}" for m, r in backends.items()
+    )
+    return f"peak_sps={sps:.0f} backend_sps: {per_backend}"
+
+
+def _grid_headline(res):
+    gen, roll = res
+    tps = min(r["traces_per_s"] for r in gen.values())
+    return (f"min_traces_ps={tps:.0f} "
+            f"rollout_sps={roll['grid_vmap']['steps_per_s']:.0f}")
+
+
+def _jobs_headline(res):
+    return f"min_jobs_ps={min(r['jobs_per_s'] for r in res.values()):.0f}"
+
+
+def _faults_headline(res):
+    _, roll = res
+    ratio = roll["faults_on"]["steps_per_s"] / roll["faults_off"]["steps_per_s"]
+    return (f"armed_sps={roll['faults_on']['steps_per_s']:.0f} "
+            f"armed/stripped={ratio:.2f}x")
+
+
+def _fleet_headline(res):
+    sizes, ladder = res
+    top = max(ladder.values(), key=lambda r: r["devices"])
+    return (f"dc_sps_D128={sizes['D_128']['dc_steps_per_s']:.0f} "
+            f"eff@{top['devices']}dev={top['parallel_efficiency']:.2f}")
+
+
+def _no_headline(res):
+    return ""
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSuite:
+    """One bench entry: how to run it, how to summarize it, how to gate it."""
+
+    name: str                 # `--only` token, shared by both CLIs
+    module: str               # module under benchmarks/ exposing main(fast=...)
+    title: str                # section header printed by benchmarks.run
+    headline: Callable = _no_headline  # main() result -> short derived string
+    baseline: Optional[str] = None     # BENCH_*.json filename; None = ungated
+    pairs: Optional[Callable] = None   # (baseline, fresh) -> Pairs
+    fast_default: bool = False         # fast tier when recording a new baseline
+
+    @property
+    def gated(self) -> bool:
+        return self.baseline is not None
+
+    def baseline_path(self) -> str:
+        assert self.baseline is not None, f"suite {self.name} is ungated"
+        return os.path.join(REPO_ROOT, self.baseline)
+
+    def load(self):
+        return importlib.import_module(f"benchmarks.{self.module}")
+
+
+SUITES: Tuple[BenchSuite, ...] = (
+    BenchSuite("rq1", "bench_rq1",
+               "RQ1: nominal-regime policy comparison (paper Table III)",
+               _rq1_headline),
+    BenchSuite("rq2", "bench_rq2",
+               "RQ2: workload-intensity sweep (paper Figs. 2-3)",
+               _rq2_headline),
+    BenchSuite("complexity", "bench_complexity",
+               "Sec. IV-F4: centralized vs hierarchical solve complexity"),
+    BenchSuite("throughput", "bench_env_throughput",
+               "Simulator throughput (jit/vmap vs python loop)",
+               _throughput_headline),
+    BenchSuite("scenarios", "bench_scenarios",
+               "Scenario suite: per-scenario wall-clock + steps/sec",
+               _scenarios_headline, baseline="BENCH_scenarios.json",
+               pairs=scenario_pairs, fast_default=True),
+    BenchSuite("grid", "bench_grid",
+               "Grid signals: trace generation + carbon rollout",
+               _grid_headline, baseline="BENCH_grid.json",
+               pairs=grid_pairs, fast_default=True),
+    BenchSuite("jobs", "bench_jobs",
+               "Job engine: admission+tick throughput across class mixes",
+               _jobs_headline, baseline="BENCH_jobs.json",
+               pairs=jobs_pairs, fast_default=True),
+    BenchSuite("faults", "bench_faults",
+               "Fault injection: armed vs stripped rollout throughput",
+               _faults_headline, baseline="BENCH_faults.json",
+               pairs=faults_pairs, fast_default=True),
+    BenchSuite("fleet", "bench_fleet",
+               "Fleet scaling: steps/sec vs D + DC-axis device ladder",
+               _fleet_headline, baseline="BENCH_fleet.json",
+               pairs=fleet_pairs, fast_default=True),
+    BenchSuite("kernels", "bench_kernels",
+               "Kernel micro-benchmarks",
+               baseline="BENCH_kernels.json", pairs=kernel_pairs),
+)
+
+SUITES_BY_NAME: Dict[str, BenchSuite] = {s.name: s for s in SUITES}
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(s.name for s in SUITES)
+
+
+def gated() -> Tuple[BenchSuite, ...]:
+    return tuple(s for s in SUITES if s.gated)

@@ -1,16 +1,24 @@
 """Benchmark orchestrator: one entry per paper table/figure + the
 framework-level benches.
 
-  python -m benchmarks.run [--fast] [--only rq1,rq2,...]
+  python -m benchmarks.run [--fast] [--only rq1,rq2,...] [--profile]
 
-name,seconds,key-result CSV lines print at the end of each section.
+Suites come from `benchmarks.registry` — the same table the regression
+gate (`benchmarks.check_regression`) reads, so `--only` names can never
+drift between the two CLIs. name,seconds,key-result CSV lines print at
+the end of each section. `--profile` wraps each suite in
+`jax.profiler.trace`; traces land under `results/profile/bench-<name>/`
+for TensorBoard / Perfetto.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import sys
 import time
+
+from benchmarks import registry
 
 
 def smoke() -> int:
@@ -44,6 +52,20 @@ def smoke() -> int:
     return 0
 
 
+def _profiler(profile: bool, name: str):
+    """jax.profiler.trace context for one suite, or a no-op."""
+    if not profile:
+        return contextlib.nullcontext()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(repo, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.obs.phases import maybe_profile
+
+    return maybe_profile(os.path.join(repo, "results", "profile",
+                                      f"bench-{name}"))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -51,115 +73,30 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny scenario suite + nominal smoke experiment, then exit")
     ap.add_argument("--only", default="",
-                    help="comma list: rq1,rq2,complexity,throughput,kernels,"
-                         "scenarios,grid,jobs,faults,fleet")
+                    help="comma list of suites: " + ",".join(registry.names()))
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap each suite in jax.profiler.trace "
+                         "(results/profile/bench-<name>/)")
     args, _ = ap.parse_known_args()
     if args.smoke:
         sys.exit(smoke())
     only = set(args.only.split(",")) if args.only else None
-
-    def want(name):
-        return only is None or name in only
+    if only:
+        unknown = only - set(registry.names())
+        if unknown:
+            ap.error(f"unknown suite(s) {sorted(unknown)}; "
+                     f"choose from {','.join(registry.names())}")
 
     rows = []
-
-    if want("rq1"):
-        from benchmarks import bench_rq1
-
-        print("\n=== RQ1: nominal-regime policy comparison (paper Table III) ===")
+    for suite in registry.SUITES:
+        if only is not None and suite.name not in only:
+            continue
+        mod = suite.load()
+        print(f"\n=== {suite.title} ===")
         t0 = time.time()
-        res = bench_rq1.main(fast=args.fast)
-        rows.append(("rq1", time.time() - t0,
-                     f"hmpc_cost={res['h_mpc']['cost_usd'][0]:.0f}"))
-
-    if want("rq2"):
-        from benchmarks import bench_rq2
-
-        print("\n=== RQ2: workload-intensity sweep (paper Figs. 2-3) ===")
-        t0 = time.time()
-        res = bench_rq2.main(fast=args.fast)
-        rows.append(("rq2", time.time() - t0, f"rows={len(res)}"))
-
-    if want("complexity"):
-        from benchmarks import bench_complexity
-
-        print("\n=== Sec. IV-F4: centralized vs hierarchical solve complexity ===")
-        t0 = time.time()
-        bench_complexity.main(fast=args.fast)
-        rows.append(("complexity", time.time() - t0, ""))
-
-    if want("throughput"):
-        from benchmarks import bench_env_throughput
-
-        print("\n=== Simulator throughput (jit/vmap vs python loop) ===")
-        t0 = time.time()
-        res = bench_env_throughput.main(fast=args.fast)
-        rows.append(("throughput", time.time() - t0,
-                     f"speedup={res['jit_sps']/res['python_sps']:.0f}x"))
-
-    if want("scenarios"):
-        from benchmarks import bench_scenarios
-
-        print("\n=== Scenario suite: per-scenario wall-clock + steps/sec ===")
-        t0 = time.time()
-        res, backends = bench_scenarios.main(fast=args.fast)
-        sps = max(r["steps_per_s"] for r in res.values())
-        per_backend = " ".join(
-            f"{m}={r['steps_per_s']:.0f}" for m, r in backends.items()
-        )
-        rows.append(("scenarios", time.time() - t0,
-                     f"peak_sps={sps:.0f} backend_sps: {per_backend}"))
-
-    if want("grid"):
-        from benchmarks import bench_grid
-
-        print("\n=== Grid signals: trace generation + carbon rollout ===")
-        t0 = time.time()
-        gen, roll = bench_grid.main(fast=args.fast)
-        tps = min(r["traces_per_s"] for r in gen.values())
-        rows.append(("grid", time.time() - t0,
-                     f"min_traces_ps={tps:.0f} "
-                     f"rollout_sps={roll['grid_vmap']['steps_per_s']:.0f}"))
-
-    if want("jobs"):
-        from benchmarks import bench_jobs
-
-        print("\n=== Job engine: admission+tick throughput across class mixes ===")
-        t0 = time.time()
-        res = bench_jobs.main(fast=args.fast)
-        jps = min(r["jobs_per_s"] for r in res.values())
-        rows.append(("jobs", time.time() - t0, f"min_jobs_ps={jps:.0f}"))
-
-    if want("faults"):
-        from benchmarks import bench_faults
-
-        print("\n=== Fault injection: armed vs stripped rollout throughput ===")
-        t0 = time.time()
-        gen, roll = bench_faults.main(fast=args.fast)
-        ratio = roll["faults_on"]["steps_per_s"] / \
-            roll["faults_off"]["steps_per_s"]
-        rows.append(("faults", time.time() - t0,
-                     f"armed_sps={roll['faults_on']['steps_per_s']:.0f} "
-                     f"armed/stripped={ratio:.2f}x"))
-
-    if want("fleet"):
-        from benchmarks import bench_fleet
-
-        print("\n=== Fleet scaling: steps/sec vs D + DC-axis device ladder ===")
-        t0 = time.time()
-        sizes, ladder = bench_fleet.main(fast=args.fast)
-        top = max(ladder.values(), key=lambda r: r["devices"])
-        rows.append(("fleet", time.time() - t0,
-                     f"dc_sps_D128={sizes['D_128']['dc_steps_per_s']:.0f} "
-                     f"eff@{top['devices']}dev={top['parallel_efficiency']:.2f}"))
-
-    if want("kernels"):
-        from benchmarks import bench_kernels
-
-        print("\n=== Kernel micro-benchmarks ===")
-        t0 = time.time()
-        bench_kernels.main(fast=args.fast)
-        rows.append(("kernels", time.time() - t0, ""))
+        with _profiler(args.profile, suite.name):
+            res = mod.main(fast=args.fast)
+        rows.append((suite.name, time.time() - t0, suite.headline(res)))
 
     print("\nname,seconds,derived")
     for name, s, derived in rows:

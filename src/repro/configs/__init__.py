@@ -1,6 +1,6 @@
 from repro.configs.base import ModelConfig
 from repro.configs import (  # noqa: F401
-    qwen2_7b, minicpm_2b, qwen15_32b, granite_20b, musicgen_medium,
+    qwen2_7b, musicgen_medium,
     qwen3_moe_235b, llama4_maverick, llama32_vision_90b, mamba2_2p7b,
     jamba_1p5_large,
 )

@@ -7,16 +7,13 @@ from typing import Dict, List, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.configs import (
-    qwen2_7b, minicpm_2b, qwen15_32b, granite_20b, musicgen_medium,
+    qwen2_7b, musicgen_medium,
     qwen3_moe_235b, llama4_maverick, llama32_vision_90b, mamba2_2p7b,
     jamba_1p5_large,
 )
 
 _MODULES = {
     "qwen2-7b": qwen2_7b,
-    "minicpm-2b": minicpm_2b,
-    "qwen1.5-32b": qwen15_32b,
-    "granite-20b": granite_20b,
     "musicgen-medium": musicgen_medium,
     "qwen3-moe-235b-a22b": qwen3_moe_235b,
     "llama4-maverick-400b-a17b": llama4_maverick,

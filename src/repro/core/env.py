@@ -214,33 +214,60 @@ def rollout(
     policy,
     trace: Trace,
     rng,
-) -> Tuple[EnvState, StepInfo]:
+    telemetry=None,
+):
     """Run a full episode with `policy` in the loop; returns stacked StepInfo.
 
     `policy` is a repro.core.policies.base.Policy. The episode is one
     lax.scan; wrap in jax.jit (and vmap over rng for Monte Carlo).
+
+    `telemetry` is an optional *static* `repro.obs.TelemetrySpec`. With a
+    spec, per-channel ring buffers ride the scan carry and the return
+    grows a third element: `(state, infos, frame)` (DESIGN.md §19). With
+    `None` — the default everywhere — the branch below is Python-level,
+    so the traced program is literally the one that existed before the
+    obs subsystem: the bitwise golden contract does not depend on any
+    runtime check.
     """
     state0 = env.reset(rng)
     pol0 = policy.init(env.dims, env.params)
+    if telemetry is not None:
+        from repro.obs import capture as obs_capture
+
+        frame0 = obs_capture.init_frame(telemetry, env.dims)
 
     def body(carry, arrivals):
-        state, pol_state = carry
+        if telemetry is None:
+            state, pol_state = carry
+        else:
+            state, pol_state, frame = carry
         offered = jobs_mod.merge_offered(state.pending, arrivals)
         key = jax.random.fold_in(state.rng, state.t)
         assign, setpoint, pol_state = policy.act(
             pol_state, state, offered, env.params, key
         )
         action = Action(assign=assign, setpoint=setpoint)
+        t = state.t
         state, info = env.step(state, offered, action)
-        return (state, pol_state), info
+        if telemetry is None:
+            return (state, pol_state), info
+        frame = obs_capture.capture_step(
+            telemetry, frame, t, info, offered, assign, pol_state, env.params
+        )
+        return (state, pol_state, frame), info
 
     arrivals_steps = Arrivals(
         r=trace.r, dur=trace.dur, prio=trace.prio,
         cls=trace.cls, deadline=trace.deadline,
         is_gpu=trace.is_gpu, valid=trace.valid,
     )
-    (state, _), infos = jax.lax.scan(body, (state0, pol0), arrivals_steps)
-    return state, infos
+    if telemetry is None:
+        (state, _), infos = jax.lax.scan(body, (state0, pol0), arrivals_steps)
+        return state, infos
+    (state, _, frame), infos = jax.lax.scan(
+        body, (state0, pol0, frame0), arrivals_steps
+    )
+    return state, infos, frame
 
 
 def rollout_params(
@@ -249,16 +276,18 @@ def rollout_params(
     params: EnvParams,
     trace: Trace,
     rng,
-) -> Tuple[EnvState, StepInfo]:
+    telemetry=None,
+):
     """`rollout` with the plant parameters as an explicit pytree argument.
 
     `DataCenterGym` only stores statics, so constructing it inside a traced
     function is free; with params/trace/rng as arguments the episode vmaps
     over *stacked plants* as well as seeds — the scenario suite batches
     scenario x seed into one `jit(vmap(rollout_params))` this way (see
-    repro.scenarios.suite).
+    repro.scenarios.suite). `telemetry` passes through to `rollout`.
     """
-    return rollout(DataCenterGym(dims, params), policy, trace, rng)
+    return rollout(DataCenterGym(dims, params), policy, trace, rng,
+                   telemetry=telemetry)
 
 
 class GymAdapter:

@@ -26,7 +26,14 @@ def projected_adam(
     b2: float = 0.99,
     eps: float = 1e-8,
 ):
-    """Minimize loss_fn(x) over a pytree x with projection. Returns (x, loss)."""
+    """Minimize loss_fn(x) over a pytree x with projection.
+
+    Returns `(x, losses)` with the full (steps,) per-iterate loss history
+    — `losses[-1]` is the final loss, and successive differences are the
+    iterate residuals the telemetry layer captures (`stage1_resid`,
+    DESIGN.md §19). The history is scan output XLA already materializes;
+    callers that only want the solution discard it.
+    """
     grad_fn = jax.value_and_grad(loss_fn)
 
     def body(carry, i):
@@ -47,7 +54,7 @@ def projected_adam(
     (x, _, _), losses = jax.lax.scan(
         body, (x0, zeros, zeros), jnp.arange(steps)
     )
-    return x, losses[-1]
+    return x, losses
 
 
 def admm_box_qp(

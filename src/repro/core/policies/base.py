@@ -18,7 +18,7 @@ score function is the only thing that differs between heuristics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,9 @@ class Policy:
     name: str
     init: Callable
     act: Callable
+    # the config dataclass the factory baked into init/act (None for
+    # config-free heuristics) — run manifests hash it for provenance
+    config: Any = None
 
 
 def committed_demand(state) -> jnp.ndarray:

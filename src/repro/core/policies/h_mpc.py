@@ -92,6 +92,12 @@ class HMPCConfig:
     # sub-quadratic in D at fleet scale. False (default) takes the joint
     # per-DC solve at trace time — bitwise unchanged.
     regional: bool = False
+    # solver diagnostics (DESIGN.md §19): publish the stage-1 final loss,
+    # last iterate residual, and the stage-1.5 candidate pick through
+    # `HMPCState.diag` for the telemetry layer to capture. False (default)
+    # keeps `diag` an empty pytree — zero extra leaves in the scan carry,
+    # so the instrumented and plain programs trace identically.
+    diag: bool = False
 
 
 jax.tree_util.register_dataclass(
@@ -107,11 +113,16 @@ class HMPCState:
     z_route: Any     # (H1, D+1, 2) stage-1 warm start
     z_target: Any    # (H1, D)
     z_alloc: Any     # (C,) stage-2 warm start
+    # solver diagnostics: () when cfg.diag is off (an empty pytree — no
+    # carry leaves, trace-identical), else a dict of scalar series the
+    # telemetry layer samples (stage1_loss / stage1_resid / refine_pick)
+    diag: Any = ()
 
 
 jax.tree_util.register_dataclass(
     HMPCState,
-    data_fields=["ema_count", "ema_rbar", "ema_mu", "z_route", "z_target", "z_alloc"],
+    data_fields=["ema_count", "ema_rbar", "ema_mu", "z_route", "z_target",
+                 "z_alloc", "diag"],
     meta_fields=[],
 )
 
@@ -195,10 +206,12 @@ def _stage1(
         "target": pol.z_target,
         "xi": jnp.full((H, num_dcs), -2.0),
     }
-    z, _ = projected_adam(loss_fn, z0, lambda x: x, steps=cfg.iters1, lr=cfg.lr1)
+    z, losses = projected_adam(
+        loss_fn, z0, lambda x: x, steps=cfg.iters1, lr=cfg.lr1
+    )
     w = jax.nn.softmax(z["route"], axis=1)
     target = params.setpoint_lo + jax.nn.sigmoid(z["target"]) * span
-    return w[0, :-1, :], target, z["route"], z["target"]
+    return w[0, :-1, :], target, z["route"], z["target"], losses
 
 
 def _refine_targets(
@@ -256,7 +269,7 @@ def _refine_targets(
     j_hard = cfg.w_hard * jnp.mean(jax.nn.relu(thetas - params.theta_max) ** 2, (1, 2))
     j_dev = cfg.w_temp_dev * jnp.mean((thetas - cands) ** 2, (1, 2))
     best = jnp.argmin(j_energy + j_soft + j_hard + j_dev)
-    return jnp.take(cands, best, axis=0)                   # (H, D)
+    return jnp.take(cands, best, axis=0), best             # (H, D), ()
 
 
 def _stage2(state, params, agg, cfg: HMPCConfig, pol: HMPCState, rho0, num_dcs: int):
@@ -469,6 +482,11 @@ def h_mpc_policy(
             z_route=jnp.zeros((cfg.h1, S1 + 1, 2)),
             z_target=jnp.zeros((cfg.h1, S1)),
             z_alloc=jnp.zeros((C,)),
+            diag={
+                "stage1_loss": jnp.zeros(()),
+                "stage1_resid": jnp.zeros(()),
+                "refine_pick": jnp.full((), -1, jnp.int32),
+            } if cfg.diag else (),
         )
 
     def act(pol_state, state, offered, params, rng):
@@ -500,6 +518,7 @@ def h_mpc_policy(
             ema_rbar=(1 - e) * pol_state.ema_rbar + e * rbar,
             ema_mu=(1 - e) * pol_state.ema_mu + e * mu,
         )
+        refine_pick = jnp.full((), -1, jnp.int32)
         if cfg.regional:
             # one coordination pass: fold plant + state onto R regions,
             # run the same stage-1 program at dimension R, then split
@@ -507,28 +526,30 @@ def h_mpc_policy(
             params_r, agg_r, wcap = plant.region_reduce(params, agg, S1)
             st0 = plant.plant_state_from_env(state, params, D)
             st0_r = plant.region_reduce_state(st0, params.region_id, wcap, S1)
-            rho0_r, target_r, z_route, z_target = _stage1(
+            rho0_r, target_r, z_route, z_target, losses1 = _stage1(
                 state, params_r, agg_r, cfg, pol_state, S1, st0=st0_r
             )
             if cfg.refine_candidates > 0:
                 w = jax.nn.softmax(z_route, axis=1)
-                target_r = _refine_targets(
+                target_r, best = _refine_targets(
                     state, params_r, agg_r, cfg, pol_state,
                     w[:, :-1, :], w[:, -1, :], target_r, S1, st0=st0_r,
                 )
+                refine_pick = best.astype(jnp.int32)
             rho0, target = plant.region_distribute(
                 rho0_r, target_r, state.theta, params, agg, S1
             )
         else:
-            rho0, target, z_route, z_target = _stage1(
+            rho0, target, z_route, z_target, losses1 = _stage1(
                 state, params, agg, cfg, pol_state, D
             )
             if cfg.refine_candidates > 0:
                 w = jax.nn.softmax(z_route, axis=1)
-                target = _refine_targets(
+                target, best = _refine_targets(
                     state, params, agg, cfg, pol_state,
                     w[:, :-1, :], w[:, -1, :], target, D,
                 )
+                refine_pick = best.astype(jnp.int32)
         weights, z_alloc = _stage2(state, params, agg, cfg, pol_state, rho0, D)
         assign = _counts_to_assign(offered, rho0, weights, pol_state, params, C)
         if cfg.temporal_shift:
@@ -543,7 +564,16 @@ def h_mpc_policy(
             z_route=jnp.roll(z_route, -1, axis=0).at[-1].set(z_route[-1]),
             z_target=jnp.roll(z_target, -1, axis=0).at[-1].set(z_target[-1]),
             z_alloc=z_alloc,
+            diag={
+                "stage1_loss": losses1[-1],
+                # last iterate residual: the telemetry layer's convergence
+                # signal. iters1 >= 2 in any real config; guard anyway so
+                # a 1-iter debug solve still traces.
+                "stage1_resid": jnp.abs(losses1[-1] - losses1[-2])
+                if cfg.iters1 > 1 else jnp.zeros(()),
+                "refine_pick": refine_pick,
+            } if cfg.diag else pol_state.diag,
         )
         return assign, target[0], pol_state
 
-    return Policy(name=name, init=init, act=act)
+    return Policy(name=name, init=init, act=act, config=cfg)

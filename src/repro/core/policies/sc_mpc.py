@@ -107,4 +107,4 @@ def sc_mpc_policy(dims: EnvDims, cfg: SCMPCConfig = SCMPCConfig()) -> Policy:
         warm = jnp.roll(zt, -1, axis=0).at[-1].set(zt[-1])  # receding horizon
         return assign, target[0], warm
 
-    return Policy(name="sc_mpc", init=init, act=act)
+    return Policy(name="sc_mpc", init=init, act=act, config=cfg)

@@ -12,6 +12,7 @@ non-zero, which is what makes `make check` and CI real gates.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 from typing import List
 
@@ -35,17 +36,42 @@ def _cmd_list() -> int:
 def _cmd_run(args) -> int:
     exps = registry.names() if "all" in args.exp else tuple(args.exp)
     failures: List[str] = []
+    telemetry = None
+    if args.telemetry:
+        from repro.obs import default_spec
+
+        telemetry = default_spec(stride=args.telemetry_stride)
     for name in exps:
         spec = registry.get(name)
         tier = spec.tier_name(args.smoke)
         print(f"=== experiment {name} ({tier} tier, batch_mode={args.batch_mode}) ===")
+        profile_dir = None
+        if args.profile:
+            profile_dir = os.path.join(args.out, "profile", f"{name}-{tier}")
         result = runner.run_experiment(
-            spec, smoke=args.smoke, batch_mode=args.batch_mode
+            spec, smoke=args.smoke, batch_mode=args.batch_mode,
+            telemetry=telemetry, profile_dir=profile_dir,
         )
         json_path, md_path = runner.write_artifacts(result, args.out)
         print(f"wrote {json_path} + {md_path} "
               f"[{result.runtime['wall_s']}s, {result.runtime['batch_mode']}]")
         print(result.format_markdown())
+
+        from repro.obs import load_manifest, manifest_path, validate_manifest
+
+        mpath = manifest_path(name, args.out)
+        problems = validate_manifest(load_manifest(mpath))
+        if problems:
+            for p in problems:
+                print(f"FAIL [{name}/{tier}] manifest: {p}", file=sys.stderr)
+            failures += [f"manifest: {p}" for p in problems]
+        else:
+            print(f"manifest OK ({mpath})")
+        if args.report:
+            from repro.obs import render_report
+
+            rmd, rhtml = render_report(name, out_dir=args.out)
+            print(f"report: {rmd} + {rhtml}")
 
         violations = golden.check_margins(result, spec)
         violations += golden.check_bounds(result, spec)
@@ -91,6 +117,17 @@ def main(argv=None) -> int:
                        help="freeze this run as the golden baseline instead of checking")
     run_p.add_argument("--no-golden", action="store_true",
                        help="skip the golden comparison (margins still checked)")
+    run_p.add_argument("--telemetry", action="store_true",
+                       help="capture in-rollout telemetry traces to "
+                            "<out>/<exp>.telemetry.npz (second armed pass; "
+                            "golden artifacts stay bitwise)")
+    run_p.add_argument("--telemetry-stride", type=int, default=4,
+                       help="ring-buffer sampling stride in steps (default 4)")
+    run_p.add_argument("--profile", action="store_true",
+                       help="wrap execution in jax.profiler.trace; traces go "
+                            "under <out>/profile/<exp>-<tier>/")
+    run_p.add_argument("--report", action="store_true",
+                       help="render <out>/<exp>.report.md/.html after the run")
     args = ap.parse_args(argv)
     if args.cmd == "list":
         return _cmd_list()

@@ -30,6 +30,9 @@ import jax
 
 from repro.core import metrics
 from repro.experiments.spec import ExperimentSpec, resolve_scenarios
+from repro.obs import capture as obs_capture
+from repro.obs import manifest as obs_manifest
+from repro.obs.phases import PhaseTimer, maybe_profile
 from repro.scenarios.suite import evaluate_infos
 
 SCHEMA = "dcgym-experiment-v1"
@@ -63,6 +66,22 @@ class ExperimentResult:
     dims: Dict[str, int]
     table: Dict[str, Dict[str, Dict[str, Dict[str, object]]]]
     runtime: Dict[str, object]
+    # -- observability sidecar state (not part of the artifact json) -------
+    #: wall-clock per phase (trace_build_s/compile_s/execute_s/summarize_s);
+    #: write_artifacts adds write_s + total_s and freezes the manifest
+    phases: Dict[str, Optional[float]] = dataclasses.field(default_factory=dict)
+    #: policy name -> config object (None for heuristics) for manifest hashes
+    policy_configs: Dict[str, object] = dataclasses.field(default_factory=dict)
+    #: manifest telemetry block ({"enabled": False} when capture was off)
+    telemetry_block: Dict[str, object] = dataclasses.field(
+        default_factory=lambda: {"enabled": False})
+    #: manifest profile block
+    profile_block: Dict[str, object] = dataclasses.field(
+        default_factory=lambda: {"enabled": False})
+    #: captured TelemetryFrames by policy (numpy leaves), written as npz
+    frames: Optional[Dict[str, object]] = None
+    #: EnvDims of the executed tier (dataclass, for the manifest hash)
+    tier_dims: Optional[object] = None
 
     # -- serialization -----------------------------------------------------
 
@@ -130,43 +149,96 @@ def run_experiment(
     smoke: bool = False,
     batch_mode: str = "auto",
     chunk_size: Optional[int] = None,
+    telemetry=None,
+    profile_dir: Optional[str] = None,
 ) -> ExperimentResult:
     """Execute one tier of `spec` and aggregate into an `ExperimentResult`.
 
     One jitted grid call per policy; aggregation happens on the host in
     float64 so the result does not depend on `batch_mode`.
+
+    `telemetry` (a `repro.obs.TelemetrySpec`) runs a *second*,
+    capture-armed grid pass — with solver diagnostics enabled on the
+    H-MPC family — after the plain pass the artifacts come from, so the
+    metric table stays bitwise what it always was while the captured
+    trace and the measured capture overhead land in the manifest.
+    `profile_dir` wraps the plain pass in `jax.profiler.trace`.
     """
     tier = spec.tier(smoke)
     scens = resolve_scenarios(tier)
+    timer = PhaseTimer()
     t0 = time.time()
-    infos_by_policy, scen_names, resolved_mode = evaluate_infos(
-        tier.policies,
-        scenarios=scens,
-        seeds=tier.seeds,
-        dims=tier.dims,
-        batch_mode=batch_mode,
-        chunk_size=chunk_size,
-    )
+    with maybe_profile(profile_dir):
+        infos_by_policy, scen_names, resolved_mode = evaluate_infos(
+            tier.policies,
+            scenarios=scens,
+            seeds=tier.seeds,
+            dims=tier.dims,
+            batch_mode=batch_mode,
+            chunk_size=chunk_size,
+            timer=timer,
+        )
     wall = time.time() - t0
 
-    table: Dict[str, Dict[str, Dict[str, Dict[str, object]]]] = {}
-    for pol, infos in infos_by_policy.items():
-        table[pol] = {}
-        for si, scen in enumerate(scen_names):
-            per_seed: List[Dict[str, float]] = [
-                metrics.summarize_np(
-                    _episode_slice(infos, si * tier.seeds + k), warmup=tier.warmup
-                )
-                for k in range(tier.seeds)
-            ]
-            table[pol][scen] = {
-                m: {
-                    "mean": float(sum(d[m] for d in per_seed) / tier.seeds),
-                    "std": _std([d[m] for d in per_seed]),
-                    "per_seed": [d[m] for d in per_seed],
+    with timer.phase("summarize_s"):
+        table: Dict[str, Dict[str, Dict[str, Dict[str, object]]]] = {}
+        for pol, infos in infos_by_policy.items():
+            table[pol] = {}
+            for si, scen in enumerate(scen_names):
+                per_seed: List[Dict[str, float]] = [
+                    metrics.summarize_np(
+                        _episode_slice(infos, si * tier.seeds + k),
+                        warmup=tier.warmup,
+                    )
+                    for k in range(tier.seeds)
+                ]
+                table[pol][scen] = {
+                    m: {
+                        "mean": float(sum(d[m] for d in per_seed) / tier.seeds),
+                        "std": _std([d[m] for d in per_seed]),
+                        "per_seed": [d[m] for d in per_seed],
+                    }
+                    for m in ARTIFACT_METRICS
                 }
-                for m in ARTIFACT_METRICS
-            }
+
+    telemetry_block: Dict[str, object] = {"enabled": False}
+    frames = None
+    if telemetry is not None:
+        tel_timer = PhaseTimer()
+        pols = [obs_capture.instrumented_policy(p, tier.dims)
+                if isinstance(p, str) else p for p in tier.policies]
+        tel_out, _, _ = evaluate_infos(
+            pols,
+            scenarios=scens,
+            seeds=tier.seeds,
+            dims=tier.dims,
+            batch_mode=resolved_mode,
+            chunk_size=chunk_size,
+            telemetry=telemetry,
+            timer=tel_timer,
+        )
+        frames = {name: frame for name, (_, frame) in tel_out.items()}
+        base_exec = timer.seconds("execute_s")
+        tel_exec = tel_timer.seconds("execute_s")
+        overhead = (100.0 * (tel_exec / base_exec - 1.0)
+                    if base_exec and tel_exec else None)
+        telemetry_block = {
+            "enabled": True,
+            **telemetry.to_dict(),
+            # capture-on vs capture-off execute-phase ratio; when the
+            # backend folds compile into execute the ratio includes it
+            "overhead_pct": None if overhead is None else round(overhead, 1),
+            "overhead_includes_compile": timer.seconds("compile_s") is None,
+        }
+
+    policy_configs = {}
+    for p in tier.policies:
+        if isinstance(p, str):
+            from repro.core.policies import make_policy
+
+            policy_configs[p] = make_policy(p, tier.dims).config
+        else:
+            policy_configs[p.name] = getattr(p, "config", None)
 
     return ExperimentResult(
         experiment=spec.name,
@@ -183,6 +255,15 @@ def run_experiment(
             "jax_backend": jax.default_backend(),
             "device_count": len(jax.devices()),
         },
+        phases=timer.as_dict(),
+        policy_configs=policy_configs,
+        telemetry_block=telemetry_block,
+        profile_block=(
+            {"enabled": True, "trace_dir": profile_dir}
+            if profile_dir else {"enabled": False}
+        ),
+        frames=frames,
+        tier_dims=tier.dims,
     )
 
 
@@ -194,8 +275,14 @@ def _std(xs: List[float]) -> float:
 
 
 def write_artifacts(result: ExperimentResult, out_dir: str) -> Tuple[str, str]:
-    """Write `<out_dir>/<exp>.json` + `<exp>.md`; returns both paths."""
+    """Write `<out_dir>/<exp>.json` + `<exp>.md`; returns both paths.
+
+    Also freezes the run's observability sidecars: the telemetry npz
+    (when the run captured frames) and the ``<exp>.manifest.json``
+    `RunManifest` — phases, provenance, config hashes, artifact paths.
+    """
     os.makedirs(out_dir, exist_ok=True)
+    t0 = time.perf_counter()
     json_path = os.path.join(out_dir, f"{result.experiment}.json")
     md_path = os.path.join(out_dir, f"{result.experiment}.md")
     with open(json_path, "w", encoding="utf-8") as f:
@@ -203,4 +290,36 @@ def write_artifacts(result: ExperimentResult, out_dir: str) -> Tuple[str, str]:
         f.write("\n")
     with open(md_path, "w", encoding="utf-8") as f:
         f.write(result.format_markdown())
+
+    artifacts = {"json": json_path, "md": md_path}
+    telemetry_block = dict(result.telemetry_block)
+    if result.frames:
+        npz_path = os.path.join(out_dir, f"{result.experiment}.telemetry.npz")
+        obs_capture.frames_to_npz(
+            result.frames, result.scenarios, result.seeds, npz_path
+        )
+        telemetry_block["trace_path"] = npz_path
+        artifacts["telemetry"] = npz_path
+    write_s = time.perf_counter() - t0
+
+    phases = dict(result.phases)
+    phases.setdefault("trace_build_s", None)
+    phases.setdefault("compile_s", None)
+    phases.setdefault("execute_s", None)
+    phases.setdefault("summarize_s", None)
+    phases["write_s"] = write_s
+    phases["total_s"] = sum(v for v in phases.values() if v is not None)
+    manifest = obs_manifest.build_manifest(
+        kind="experiment",
+        name=result.experiment,
+        tier=result.tier,
+        phases=phases,
+        dims=result.tier_dims,
+        policies=result.policy_configs,
+        batch_mode=result.runtime.get("batch_mode"),
+        telemetry=telemetry_block,
+        profile=result.profile_block,
+        artifacts=artifacts,
+    )
+    obs_manifest.write_manifest(manifest, out_dir)
     return json_path, md_path

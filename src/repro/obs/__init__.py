@@ -1,0 +1,59 @@
+"""Observability layer: trace capture, run manifests, phase profiling,
+and run reports (DESIGN.md §19).
+
+Three pillars, all flag-gated so the default path is untouched:
+
+- **capture** — `TelemetrySpec` + ring-buffer trace capture threaded
+  through the jitted rollout's scan carry (`repro.core.env.rollout`'s
+  `telemetry=` kwarg; `None` is a trace-time identity);
+- **manifest / phases** — `RunManifest` sidecars with git/device/version
+  provenance and per-phase wall-clock (compile split via the AOT probe);
+- **report** — `python -m repro.obs report` renders the self-contained
+  markdown/HTML run report CI uploads.
+"""
+from repro.obs.spec import (
+    CHANNEL_CATALOGUE,
+    CHANNELS_BY_NAME,
+    DEFAULT_CHANNELS,
+    Channel,
+    TelemetrySpec,
+    default_spec,
+)
+from repro.obs.capture import (
+    TelemetryFrame,
+    capture_step,
+    decode_frame,
+    frames_to_npz,
+    init_frame,
+    instrumented_policy,
+    load_npz,
+)
+from repro.obs.manifest import (
+    SCHEMA as MANIFEST_SCHEMA,
+    build_manifest,
+    config_hash,
+    load_manifest,
+    manifest_path,
+    validate_manifest,
+    write_manifest,
+)
+from repro.obs.phases import PhaseTimer, maybe_profile, timed_run
+from repro.obs.report import (
+    append_step_summary,
+    render_markdown,
+    render_report,
+    sparkline,
+    step_summary,
+)
+
+__all__ = [
+    "CHANNEL_CATALOGUE", "CHANNELS_BY_NAME", "DEFAULT_CHANNELS",
+    "Channel", "TelemetrySpec", "default_spec",
+    "TelemetryFrame", "capture_step", "decode_frame", "frames_to_npz",
+    "init_frame", "instrumented_policy", "load_npz",
+    "MANIFEST_SCHEMA", "build_manifest", "config_hash", "load_manifest",
+    "manifest_path", "validate_manifest", "write_manifest",
+    "PhaseTimer", "maybe_profile", "timed_run",
+    "append_step_summary", "render_markdown", "render_report", "sparkline",
+    "step_summary",
+]

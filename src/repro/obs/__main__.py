@@ -1,0 +1,97 @@
+"""Observability CLI.
+
+    python -m repro.obs report --exp nominal [--out results] [--no-html]
+                               [--step-summary]
+    python -m repro.obs validate results/nominal.manifest.json [...]
+
+`report` renders the markdown/HTML run report from whatever the run left
+in the artifact directory (metrics json, manifest sidecar, telemetry
+npz). `validate` schema-checks manifest files and exits non-zero on the
+first invalid one — the CI manifest gate.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.obs import manifest as manifest_mod
+from repro.obs import report as report_mod
+
+
+def _cmd_report(args) -> int:
+    rc = 0
+    for name in args.exp:
+        art_path = os.path.join(args.out, f"{name}.json")
+        if not os.path.exists(art_path):
+            print(f"report: no artifact at {art_path} — run "
+                  f"`python -m repro.experiments run --exp {name}` first",
+                  file=sys.stderr)
+            rc = 1
+            continue
+        md_path, html_path = report_mod.render_report(
+            name, args.out, write_html=not args.no_html
+        )
+        print(f"wrote {md_path}" + (f" + {html_path}" if html_path else ""))
+        if args.step_summary:
+            with open(art_path, encoding="utf-8") as f:
+                artifact = json.load(f)
+            man_path = manifest_mod.manifest_path(name, args.out)
+            manifest = manifest_mod.load_manifest(man_path) \
+                if os.path.exists(man_path) else None
+            if report_mod.append_step_summary(
+                    report_mod.step_summary(artifact, manifest)):
+                print("appended to $GITHUB_STEP_SUMMARY")
+    return rc
+
+
+def _cmd_validate(args) -> int:
+    paths = []
+    for pattern in args.paths:
+        matched = sorted(glob.glob(pattern))
+        if not matched:
+            print(f"validate: no manifest matches {pattern!r}", file=sys.stderr)
+            return 1
+        paths.extend(matched)
+    rc = 0
+    for path in paths:
+        manifest = manifest_mod.load_manifest(path)
+        problems = manifest_mod.validate_manifest(manifest)
+        if problems:
+            rc = 1
+            print(f"INVALID {path}:", file=sys.stderr)
+            for p in problems:
+                print(f"  - {p}", file=sys.stderr)
+        else:
+            print(f"OK {path}")
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rep = sub.add_parser("report", help="render run report(s) from artifacts")
+    rep.add_argument("--exp", action="append", required=True,
+                     help="experiment name (repeatable)")
+    rep.add_argument("--out", default="results",
+                     help="artifact directory (default: results)")
+    rep.add_argument("--no-html", action="store_true",
+                     help="markdown only")
+    rep.add_argument("--step-summary", action="store_true",
+                     help="also append a compact table to $GITHUB_STEP_SUMMARY")
+
+    val = sub.add_parser("validate", help="schema-check manifest file(s)")
+    val.add_argument("paths", nargs="+",
+                     help="manifest path(s) or glob(s)")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "report":
+        return _cmd_report(args)
+    return _cmd_validate(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""In-rollout ring-buffer trace capture (DESIGN.md §19).
+
+`init_frame` builds the per-channel ring buffers a rollout threads
+through its scan carry; `capture_step` writes one step's sampled row.
+Everything here is shape-static: which buffers exist, their dtypes, and
+the stride/capacity geometry all come from the (hashable) `TelemetrySpec`,
+so the capture compiles into the same single XLA program as the episode
+and vmaps/shards with it unchanged.
+
+The write is branchless — `buf.at[slot].set(jnp.where(write, row, buf[slot]))`
+with `slot = (t // stride) % capacity` — so capture costs one masked
+scatter per channel per step and nothing on the control-flow side.
+Decoding (host-side, numpy) reorders the ring by the captured step index.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.spec import TelemetrySpec
+
+_KIND_DTYPE = {
+    "f16": jnp.float16,
+    "f32": jnp.float32,
+    "i16": jnp.int16,
+    "i32": jnp.int32,
+}
+
+#: Policies whose factories accept an `HMPCConfig` and publish solver
+#: diagnostics when `cfg.diag` is set (see `instrumented_policy`).
+H_MPC_FAMILY = (
+    "h_mpc", "h_mpc_carbon", "h_mpc_slo", "h_mpc_resilient", "h_mpc_regional",
+)
+
+
+class TelemetryFrame(NamedTuple):
+    """Scan-carried capture state: step-index ring + per-channel rings."""
+
+    count: jnp.ndarray              # () i32: rows captured so far (may > capacity)
+    steps: jnp.ndarray              # (capacity,) i32: captured step t, -1 = empty
+    buffers: Dict[str, jnp.ndarray]  # name -> (capacity, *axis_shape)
+
+
+def _axis_shape(axis: str, num_dcs: int, num_clusters: int) -> Tuple[int, ...]:
+    if axis == "scalar":
+        return ()
+    if axis == "dc":
+        return (num_dcs,)
+    return (num_clusters,)
+
+
+def init_frame(spec: TelemetrySpec, dims) -> TelemetryFrame:
+    """Zero-initialized rings sized by the spec and the plant dims."""
+    return TelemetryFrame(
+        count=jnp.zeros((), jnp.int32),
+        steps=jnp.full((spec.capacity,), -1, jnp.int32),
+        buffers={
+            c.name: jnp.zeros(
+                (spec.capacity,)
+                + _axis_shape(c.axis, dims.num_dcs, dims.num_clusters),
+                _KIND_DTYPE[c.kind],
+            )
+            for c in spec.channels
+        },
+    )
+
+
+def _derived_value(field: str, info, offered, assign, params):
+    """Channels computed in the rollout body (not StepInfo leaves)."""
+    if field == "dc_util":
+        num_dcs = info.theta.shape[-1]
+        util_d = jax.ops.segment_sum(
+            info.admitted_util, params.dc_id, num_segments=num_dcs
+        )
+        cap_d = jax.ops.segment_sum(
+            params.c_max, params.dc_id, num_segments=num_dcs
+        )
+        return util_d / jnp.maximum(cap_d, 1.0)
+    if field == "defer_count":
+        return (offered.valid & (assign < 0)).sum()
+    if field == "promoted_interactive":
+        from repro.core.state import CLS_INTERACTIVE
+
+        return (
+            offered.valid & (assign >= 0) & (offered.cls == CLS_INTERACTIVE)
+        ).sum()
+    raise KeyError(f"unknown derived telemetry field {field!r}")
+
+
+def capture_step(
+    spec: TelemetrySpec,
+    frame: TelemetryFrame,
+    t,
+    info,
+    offered,
+    assign,
+    pol_state,
+    params,
+) -> TelemetryFrame:
+    """Write step `t`'s sampled row into the rings (masked, branchless)."""
+    t = t.astype(jnp.int32)
+    write = (t % spec.stride) == 0
+    slot = (t // spec.stride) % spec.capacity
+
+    diag = getattr(pol_state, "diag", ())
+    diag = diag if isinstance(diag, dict) else {}
+
+    buffers = {}
+    for ch in spec.channels:
+        if ch.source == "info":
+            val = getattr(info, ch.field)
+        elif ch.source == "derived":
+            val = _derived_value(ch.field, info, offered, assign, params)
+        else:  # policy
+            val = diag.get(ch.field)
+            if val is None:
+                val = jnp.zeros(())
+        buf = frame.buffers[ch.name]
+        row = jnp.broadcast_to(val, buf.shape[1:]).astype(buf.dtype)
+        buffers[ch.name] = buf.at[slot].set(jnp.where(write, row, buf[slot]))
+
+    steps = frame.steps.at[slot].set(jnp.where(write, t, frame.steps[slot]))
+    return TelemetryFrame(
+        count=frame.count + write.astype(jnp.int32),
+        steps=steps,
+        buffers=buffers,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side decoding
+# ---------------------------------------------------------------------------
+
+
+def decode_frame(frame) -> Dict[str, np.ndarray]:
+    """One episode's frame -> chronological {'_steps': (n,), name: (n, ...)}.
+
+    Accepts device or numpy leaves with shapes (capacity, ...). Empty
+    slots (steps == -1) are dropped; surviving rows sort by step index,
+    which undoes the ring wrap (captured step indices are unique and
+    monotonic in capture order).
+    """
+    steps = np.asarray(frame.steps)
+    valid = steps >= 0
+    order = np.argsort(steps[valid], kind="stable")
+    out: Dict[str, np.ndarray] = {"_steps": steps[valid][order]}
+    for name, buf in frame.buffers.items():
+        arr = np.asarray(buf)
+        out[name] = arr[valid][order]
+    return out
+
+
+def frames_to_npz(
+    frames_by_policy: Dict[str, TelemetryFrame],
+    scenario_names,
+    seeds: int,
+    path: str,
+) -> int:
+    """Split stacked (N, ...) frames into per-cell series and save one npz.
+
+    Keys are ``{policy}|{scenario}|{seed}|{channel}`` (plus the ``_steps``
+    channel). Returns the number of cells written. Cells are ordered
+    scenario-major, matching `evaluate_infos`.
+    """
+    arrays: Dict[str, np.ndarray] = {}
+    cells = 0
+    for pol, frame in frames_by_policy.items():
+        host = jax.tree_util.tree_map(np.asarray, frame)
+        for si, scen in enumerate(scenario_names):
+            for k in range(seeds):
+                idx = si * seeds + k
+                cell = jax.tree_util.tree_map(lambda leaf: leaf[idx], host)
+                series = decode_frame(cell)
+                for name, arr in series.items():
+                    arrays[f"{pol}|{scen}|{k}|{name}"] = arr
+                cells += 1
+    np.savez_compressed(path, **arrays)
+    return cells
+
+
+def load_npz(path: str) -> Dict[str, Dict[Tuple[str, str, int], Dict[str, np.ndarray]]]:
+    """Inverse of `frames_to_npz`: {(policy, scenario, seed): {channel: arr}}."""
+    out: Dict = {}
+    with np.load(path) as z:
+        for key in z.files:
+            pol, scen, seed, name = key.split("|", 3)
+            out.setdefault((pol, scen, int(seed)), {})[name] = z[key]
+    return out
+
+
+def instrumented_policy(name: str, dims):
+    """Resolve a policy by name with solver diagnostics enabled when the
+    family supports them (`HMPCConfig.diag`); other policies resolve
+    plain and their `policy`-sourced channels capture zeros."""
+    from repro.core.policies import make_policy
+
+    if name in H_MPC_FAMILY:
+        from repro.core.policies.h_mpc import HMPCConfig
+
+        return make_policy(name, dims, cfg=HMPCConfig(diag=True))
+    return make_policy(name, dims)

@@ -1,0 +1,222 @@
+"""Run manifests: who/what/where/how-long for every experiment & bench run.
+
+A `RunManifest` (schema ``dcgym-manifest-v1``) is a JSON sidecar written
+next to the run's artifacts — git provenance, jax/jaxlib/numpy versions,
+device topology, the resolved backend, content hashes of the `EnvDims`
+and per-policy MPC configs, and wall-clock per phase (trace-build,
+compile, execute, summarize, write; compile split out by the AOT
+first-call probe in `repro.obs.phases`). `validate_manifest` is the
+schema gate CI runs on every emitted manifest.
+
+Manifests are *observability* artifacts: they are named
+``<name>.manifest.json`` precisely so the dcgym-experiment-v1 schema
+check over ``results/*.json`` (tests/test_docs.py) skips them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import platform
+import subprocess
+import time
+from typing import Dict, List, Optional
+
+SCHEMA = "dcgym-manifest-v1"
+
+MANIFEST_KINDS = ("experiment", "bench")
+
+#: Keys every manifest must carry, whatever its kind.
+REQUIRED_KEYS = (
+    "schema", "kind", "name", "created_unix", "git", "versions",
+    "devices", "host", "phases", "config_hashes", "telemetry", "profile",
+)
+
+#: Phase keys an experiment-kind manifest must report (values may be
+#: null when a backend folds compile into its first execute call).
+EXPERIMENT_PHASES = ("trace_build_s", "compile_s", "execute_s",
+                     "summarize_s", "write_s", "total_s")
+
+
+def _git_info(repo_root: Optional[str] = None) -> Dict[str, object]:
+    """Best-effort git provenance; degrades to nulls outside a checkout."""
+    cwd = repo_root or os.getcwd()
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=10,
+        ).stdout.strip() or None
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd, capture_output=True,
+            text=True, timeout=10,
+        ).stdout.strip()) if sha else None
+    except (OSError, subprocess.SubprocessError):
+        sha, dirty = None, None
+    return {"sha": sha, "dirty": dirty}
+
+
+def _versions() -> Dict[str, str]:
+    import jax
+    import jaxlib
+    import numpy
+
+    return {
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "numpy": numpy.__version__,
+    }
+
+
+def _devices() -> Dict[str, object]:
+    import jax
+
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "count": len(devs),
+        "kinds": sorted({d.device_kind for d in devs}),
+    }
+
+
+def _host() -> Dict[str, object]:
+    return {
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def config_hash(obj) -> str:
+    """Short content hash of a config-like object (dataclass or dict).
+
+    Dataclasses hash their `asdict` JSON (sorted keys, `repr` floats via
+    json), so two configs hash equal iff every field matches.
+    """
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        obj = dataclasses.asdict(obj)
+    blob = json.dumps(obj, sort_keys=True, default=repr).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
+def build_manifest(
+    *,
+    kind: str,
+    name: str,
+    phases: Dict[str, Optional[float]],
+    dims=None,
+    policies: Optional[Dict[str, object]] = None,
+    batch_mode: Optional[str] = None,
+    tier: Optional[str] = None,
+    telemetry: Optional[Dict[str, object]] = None,
+    profile: Optional[Dict[str, object]] = None,
+    artifacts: Optional[Dict[str, str]] = None,
+    repo_root: Optional[str] = None,
+) -> Dict:
+    """Assemble a ``dcgym-manifest-v1`` dict.
+
+    `policies` maps policy name -> config object (or None for config-free
+    heuristics); only the content hash lands in the manifest. `telemetry`
+    / `profile` default to disabled blocks.
+    """
+    if kind not in MANIFEST_KINDS:
+        raise ValueError(f"kind must be one of {MANIFEST_KINDS}, got {kind!r}")
+    config_hashes: Dict[str, object] = {}
+    if dims is not None:
+        config_hashes["dims"] = config_hash(dims)
+    if policies:
+        config_hashes["policies"] = {
+            pol: (config_hash(cfg) if cfg is not None else None)
+            for pol, cfg in policies.items()
+        }
+    manifest: Dict[str, object] = {
+        "schema": SCHEMA,
+        "kind": kind,
+        "name": name,
+        "created_unix": round(time.time(), 2),
+        "git": _git_info(repo_root),
+        "versions": _versions(),
+        "devices": _devices(),
+        "host": _host(),
+        "phases": {k: (None if v is None else round(float(v), 4))
+                   for k, v in phases.items()},
+        "config_hashes": config_hashes,
+        "telemetry": telemetry or {"enabled": False},
+        "profile": profile or {"enabled": False},
+    }
+    if tier is not None:
+        manifest["tier"] = tier
+    if batch_mode is not None:
+        manifest["batch_mode"] = batch_mode
+    if dims is not None:
+        manifest["dims"] = dataclasses.asdict(dims)
+    if artifacts:
+        manifest["artifacts"] = dict(artifacts)
+    return manifest
+
+
+def manifest_path(name: str, out_dir: str) -> str:
+    return os.path.join(out_dir, f"{name}.manifest.json")
+
+
+def write_manifest(manifest: Dict, out_dir: str) -> str:
+    """Write ``<out_dir>/<name>.manifest.json``; returns the path."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = manifest_path(manifest["name"], out_dir)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def validate_manifest(manifest: Dict) -> List[str]:
+    """Schema check: returns a list of problems (empty = valid)."""
+    problems: List[str] = []
+    if manifest.get("schema") != SCHEMA:
+        problems.append(
+            f"schema must be {SCHEMA!r}, got {manifest.get('schema')!r}")
+    if manifest.get("kind") not in MANIFEST_KINDS:
+        problems.append(f"kind must be one of {MANIFEST_KINDS}")
+    for key in REQUIRED_KEYS:
+        if key not in manifest:
+            problems.append(f"missing required key {key!r}")
+    if problems:
+        return problems  # structural problems make the rest unreadable
+    if not isinstance(manifest["name"], str) or not manifest["name"]:
+        problems.append("name must be a non-empty string")
+    phases = manifest["phases"]
+    if not isinstance(phases, dict) or not phases:
+        problems.append("phases must be a non-empty dict")
+    else:
+        for k, v in phases.items():
+            if v is not None and not isinstance(v, (int, float)):
+                problems.append(f"phase {k!r} must be a number or null")
+        if manifest["kind"] == "experiment":
+            for k in EXPERIMENT_PHASES:
+                if k not in phases:
+                    problems.append(f"experiment manifest missing phase {k!r}")
+    for block in ("telemetry", "profile"):
+        b = manifest[block]
+        if not isinstance(b, dict) or not isinstance(b.get("enabled"), bool):
+            problems.append(f"{block} must be a dict with a bool 'enabled'")
+    tel = manifest["telemetry"]
+    if isinstance(tel, dict) and tel.get("enabled"):
+        for k in ("stride", "capacity", "channels"):
+            if k not in tel:
+                problems.append(f"enabled telemetry block missing {k!r}")
+    versions = manifest["versions"]
+    if not isinstance(versions, dict) or "jax" not in versions:
+        problems.append("versions must be a dict carrying at least 'jax'")
+    devices = manifest["devices"]
+    if not isinstance(devices, dict) or "backend" not in devices \
+            or "count" not in devices:
+        problems.append("devices must carry backend + count")
+    git = manifest["git"]
+    if not isinstance(git, dict) or "sha" not in git:
+        problems.append("git block must carry 'sha' (null is allowed)")
+    return problems
+
+
+def load_manifest(path: str) -> Dict:
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)

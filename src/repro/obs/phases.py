@@ -1,0 +1,82 @@
+"""Phase timers + the compile/execute split probe (DESIGN.md §19).
+
+`PhaseTimer` accumulates wall-clock per named phase (a phase may be
+entered repeatedly — per-policy compile/execute legs sum). `timed_run`
+splits a jitted grid runner's first call into compile vs execute via the
+AOT path (`fn.lower(*args).compile()`): the lowering+compile wall-clock
+is the compile phase, the compiled executable's call is pure execution.
+Runners that are plain Python closures over an inner jit (the chunked /
+shard backends) expose no `.lower` — for those the first call's combined
+time lands in execute and the compile phase reports null, which the
+manifest schema explicitly allows.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+
+
+class PhaseTimer:
+    """Accumulating wall-clock per phase; `None` marks an unmeasurable
+    phase (distinct from 0.0 = measured but negligible)."""
+
+    def __init__(self):
+        self._acc: Dict[str, Optional[float]] = {}
+
+    def add(self, phase: str, seconds: Optional[float]) -> None:
+        if seconds is None:
+            self._acc.setdefault(phase, None)
+            return
+        cur = self._acc.get(phase)
+        self._acc[phase] = seconds if cur is None else cur + seconds
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.add(name, time.perf_counter() - t0)
+
+    def seconds(self, phase: str) -> Optional[float]:
+        return self._acc.get(phase)
+
+    def as_dict(self) -> Dict[str, Optional[float]]:
+        return dict(self._acc)
+
+
+def timed_run(run, args):
+    """Run a grid runner once, splitting compile from execute when possible.
+
+    Returns `(out, compile_s, execute_s)`. `compile_s` is None when the
+    runner is an outer Python closure (chunked/shard) whose inner jit
+    cannot be AOT-probed from here — its compile time is then folded
+    into `execute_s`.
+    """
+    lower = getattr(run, "lower", None)
+    if lower is not None:
+        t0 = time.perf_counter()
+        compiled = lower(*args).compile()
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(compiled(*args))
+        return out, compile_s, time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(run(*args))
+    return out, None, time.perf_counter() - t0
+
+
+@contextmanager
+def maybe_profile(profile_dir: Optional[str]):
+    """Wrap a block in `jax.profiler.trace` when a directory is given."""
+    if not profile_dir:
+        yield
+        return
+    import os
+
+    os.makedirs(profile_dir, exist_ok=True)
+    with jax.profiler.trace(profile_dir):
+        yield

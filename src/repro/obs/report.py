@@ -1,0 +1,281 @@
+"""Run-report rendering: one self-contained markdown/HTML page per run.
+
+`render_report` stitches together everything a run left behind in the
+artifact directory — the ``dcgym-experiment-v1`` metric table, the
+``dcgym-manifest-v1`` sidecar (provenance + phase breakdown), and, when
+the run captured telemetry, the ``<exp>.telemetry.npz`` ring-buffer trace
+(per-DC temperature/price/utilization sparklines + fault-event timeline).
+Missing inputs degrade gracefully: a report without telemetry simply has
+no trace section.
+
+CI consumes the output twice: the full ``<exp>.report.md``/``.html`` pair
+is uploaded as a workflow artifact, and `step_summary` appends a compact
+cost/phase table to ``$GITHUB_STEP_SUMMARY``.
+"""
+from __future__ import annotations
+
+import html as html_mod
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.obs import manifest as manifest_mod
+from repro.obs.capture import load_npz
+
+#: Compact table columns for the step summary / report headline.
+HEADLINE_METRICS = (
+    "cost_usd", "carbon_kg", "completed_jobs", "dropped_jobs",
+    "theta_max", "slo_violations",
+)
+
+#: Trace channels plotted (in order) when present in the npz.
+SPARK_CHANNELS = (
+    "theta", "setpoint", "price", "carbon_intensity", "dc_util",
+    "cost_usd", "energy_kwh", "completed", "dropped",
+    "defer_count", "promoted_interactive",
+    "stage1_loss", "stage1_resid",
+)
+
+_BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: Sequence[float], width: int = 48) -> str:
+    """Unicode block-character sparkline, resampled to `width` columns."""
+    xs = np.asarray(values, dtype=np.float64).ravel()
+    xs = xs[np.isfinite(xs)]
+    if xs.size == 0:
+        return "(no data)"
+    if xs.size > width:
+        idx = np.linspace(0, xs.size - 1, width).round().astype(int)
+        xs = xs[idx]
+    lo, hi = float(xs.min()), float(xs.max())
+    if hi - lo < 1e-12:
+        return _BLOCKS[0] * len(xs) + f"  (const {lo:.4g})"
+    levels = ((xs - lo) / (hi - lo) * (len(_BLOCKS) - 1)).round().astype(int)
+    return "".join(_BLOCKS[v] for v in levels) + f"  [{lo:.4g} … {hi:.4g}]"
+
+
+def _fault_timeline(steps: np.ndarray, fault_active: np.ndarray) -> List[str]:
+    """Per-DC onset/clear events from the sampled fault_active series."""
+    events: List[str] = []
+    active = np.asarray(fault_active) > 0
+    if active.ndim == 1:
+        active = active[:, None]
+    for d in range(active.shape[1]):
+        col = active[:, d]
+        prev = np.concatenate([[False], col[:-1]])
+        for i in np.flatnonzero(col & ~prev):
+            events.append(f"DC {d}: fault onset at step {int(steps[i])}")
+        for i in np.flatnonzero(~col & prev):
+            events.append(f"DC {d}: fault cleared by step {int(steps[i])}")
+    return events
+
+
+def _metric_table(artifact: Dict, metrics: Sequence[str]) -> List[str]:
+    lines: List[str] = []
+    pols = artifact["policies"]
+    for scen in artifact["scenarios"]:
+        lines.append(f"### scenario `{scen}`")
+        lines.append("")
+        lines.append("| metric | " + " | ".join(pols) + " |")
+        lines.append("|---" * (len(pols) + 1) + "|")
+        for m in metrics:
+            cells = []
+            for pol in pols:
+                c = artifact["table"][pol][scen].get(m)
+                cells.append("–" if c is None
+                             else f"{c['mean']:,.2f} ± {c['std']:,.2f}")
+            lines.append(f"| {m} | " + " | ".join(cells) + " |")
+        lines.append("")
+    return lines
+
+
+def _phase_table(manifest: Dict) -> List[str]:
+    phases = manifest.get("phases", {})
+    measured = {k: v for k, v in phases.items() if v is not None}
+    total = measured.get("total_s") or sum(
+        v for k, v in measured.items() if k != "total_s") or 1.0
+    lines = ["| phase | seconds | share |", "|---|---|---|"]
+    for k, v in phases.items():
+        if k == "total_s":
+            continue
+        if v is None:
+            lines.append(f"| {k} | – | folded into execute |")
+        else:
+            lines.append(f"| {k} | {v:.3f} | {100.0 * v / total:.0f}% |")
+    lines.append(f"| **total** | {total:.3f} | |")
+    return lines
+
+
+def _trace_section(npz_path: str, seed: int = 0) -> List[str]:
+    series = load_npz(npz_path)
+    cells = sorted({(p, s) for (p, s, k) in series if k == seed})
+    lines: List[str] = ["## Captured telemetry", ""]
+    n_any = 0
+    for pol, scen in cells:
+        chans = series[(pol, scen, seed)]
+        steps = chans.get("_steps")
+        if steps is None or steps.size == 0:
+            continue
+        n_any += 1
+        lines.append(f"### `{pol}` / `{scen}` (seed {seed}, "
+                     f"steps {int(steps[0])}–{int(steps[-1])}, "
+                     f"{steps.size} samples)")
+        lines.append("")
+        lines.append("```")
+        for name in SPARK_CHANNELS:
+            if name not in chans:
+                continue
+            arr = np.asarray(chans[name], dtype=np.float64)
+            if arr.ndim == 2 and arr.shape[1] <= 8:
+                for d in range(arr.shape[1]):
+                    lines.append(f"{name}[dc{d}]".ljust(22)
+                                 + sparkline(arr[:, d]))
+            elif arr.ndim == 2:
+                lines.append(f"{name}.mean".ljust(22)
+                             + sparkline(arr.mean(axis=1)))
+                lines.append(f"{name}.max".ljust(22)
+                             + sparkline(arr.max(axis=1)))
+            else:
+                lines.append(name.ljust(22) + sparkline(arr))
+        lines.append("```")
+        lines.append("")
+        if "fault_active" in chans:
+            events = _fault_timeline(steps, chans["fault_active"])
+            if events:
+                lines.append("Fault timeline:")
+                lines.extend(f"- {e}" for e in events)
+                lines.append("")
+    if n_any == 0:
+        return []
+    return lines
+
+
+def render_markdown(
+    artifact: Dict,
+    manifest: Optional[Dict] = None,
+    npz_path: Optional[str] = None,
+) -> str:
+    name = artifact["experiment"]
+    lines: List[str] = [f"# Run report: `{name}` ({artifact['tier']} tier)", ""]
+
+    if manifest:
+        git = manifest.get("git", {})
+        dev = manifest.get("devices", {})
+        ver = manifest.get("versions", {})
+        sha = (git.get("sha") or "unknown")[:12]
+        dirty = " (dirty)" if git.get("dirty") else ""
+        lines.append(
+            f"git `{sha}`{dirty} · jax {ver.get('jax', '?')} · "
+            f"{dev.get('backend', '?')} x{dev.get('count', '?')} · "
+            f"batch_mode `{manifest.get('batch_mode', '?')}`"
+        )
+        lines.append("")
+        lines.append("## Phase breakdown")
+        lines.append("")
+        lines.extend(_phase_table(manifest))
+        lines.append("")
+        tel = manifest.get("telemetry", {})
+        if tel.get("enabled"):
+            oh = tel.get("overhead_pct")
+            oh_s = f", capture overhead {oh:+.1f}%" if oh is not None else ""
+            lines.append(
+                f"Telemetry: stride {tel.get('stride')}, capacity "
+                f"{tel.get('capacity')}, {len(tel.get('channels', []))} "
+                f"channels{oh_s}.")
+            lines.append("")
+        prof = manifest.get("profile", {})
+        if prof.get("enabled"):
+            lines.append(f"Profiler trace: `{prof.get('trace_dir')}`")
+            lines.append("")
+
+    lines.append("## Metrics")
+    lines.append("")
+    lines.extend(_metric_table(artifact, artifact["metrics"]))
+
+    if npz_path and os.path.exists(npz_path):
+        lines.extend(_trace_section(npz_path))
+
+    return "\n".join(lines) + "\n"
+
+
+_HTML_TEMPLATE = """<!doctype html>
+<html><head><meta charset="utf-8"><title>{title}</title><style>
+body {{ font-family: -apple-system, 'Segoe UI', sans-serif; margin: 2rem; }}
+pre, code {{ font-family: ui-monospace, 'SFMono-Regular', Menlo, monospace; }}
+pre {{ background: #f6f8fa; padding: .75rem; overflow-x: auto; }}
+</style></head><body><pre>{body}</pre></body></html>
+"""
+
+
+def render_report(
+    name: str,
+    out_dir: str = "results",
+    write_html: bool = True,
+) -> Tuple[str, Optional[str]]:
+    """Render ``<out_dir>/<name>.report.md`` (+ ``.html``); returns paths.
+
+    Reads the artifact (required), the manifest and telemetry npz
+    (optional) from `out_dir`.
+    """
+    art_path = os.path.join(out_dir, f"{name}.json")
+    with open(art_path, encoding="utf-8") as f:
+        artifact = json.load(f)
+    man_path = manifest_mod.manifest_path(name, out_dir)
+    manifest = manifest_mod.load_manifest(man_path) \
+        if os.path.exists(man_path) else None
+    npz_path = os.path.join(out_dir, f"{name}.telemetry.npz")
+
+    md = render_markdown(artifact, manifest, npz_path)
+    md_path = os.path.join(out_dir, f"{name}.report.md")
+    with open(md_path, "w", encoding="utf-8") as f:
+        f.write(md)
+    html_path = None
+    if write_html:
+        html_path = os.path.join(out_dir, f"{name}.report.html")
+        with open(html_path, "w", encoding="utf-8") as f:
+            f.write(_HTML_TEMPLATE.format(
+                title=html_mod.escape(f"run report: {name}"),
+                body=html_mod.escape(md),
+            ))
+    return md_path, html_path
+
+
+def step_summary(
+    artifact: Dict, manifest: Optional[Dict] = None
+) -> str:
+    """Compact `$GITHUB_STEP_SUMMARY` block: headline metrics + phases."""
+    name = artifact["experiment"]
+    pols = artifact["policies"]
+    metrics = [m for m in HEADLINE_METRICS if m in artifact["metrics"]]
+    lines = [f"### `{name}` ({artifact['tier']})", ""]
+    lines.append("| scenario | metric | " + " | ".join(pols) + " |")
+    lines.append("|---" * (len(pols) + 2) + "|")
+    for scen in artifact["scenarios"]:
+        for m in metrics:
+            cells = [f"{artifact['table'][p][scen][m]['mean']:,.2f}"
+                     for p in pols]
+            lines.append(f"| {scen} | {m} | " + " | ".join(cells) + " |")
+    if manifest:
+        phases = {k: v for k, v in manifest.get("phases", {}).items()
+                  if v is not None and k != "total_s"}
+        if phases:
+            lines.append("")
+            lines.append("phases: " + ", ".join(
+                f"{k.removesuffix('_s')} {v:.2f}s" for k, v in phases.items()))
+    lines.append("")
+    return "\n".join(lines)
+
+
+def append_step_summary(text: str) -> bool:
+    """Append to `$GITHUB_STEP_SUMMARY` when running under Actions."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return False
+    with open(path, "a", encoding="utf-8") as f:
+        f.write(text)
+        if not text.endswith("\n"):
+            f.write("\n")
+    return True

@@ -1,0 +1,181 @@
+"""Telemetry channel catalogue + static capture spec (DESIGN.md §19).
+
+A `Channel` names one per-step series a rollout can capture: a `StepInfo`
+leaf (`source="info"`), a quantity derived inside the rollout body from
+the offered batch / assignment / plant (`source="derived"`), or an MPC
+solver diagnostic published through `HMPCState.diag` (`source="policy"`).
+
+`TelemetrySpec` is the *static* capture configuration — an allowlisted
+channel tuple plus ring-buffer stride/capacity. It is hashable and is
+passed to `repro.core.env.rollout` as a trace-time constant: the spec
+selects which buffers exist and how they pack (f16/i16 cheap lanes),
+never anything data-dependent. `telemetry=None` (the default everywhere)
+leaves the traced program literally unchanged — the bitwise-identity
+contract `tests/test_golden_stability.py` locks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+CHANNEL_SOURCES = ("info", "derived", "policy")
+CHANNEL_AXES = ("scalar", "dc", "cluster")
+CHANNEL_KINDS = ("f16", "f32", "i16", "i32")
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """One capturable per-step series.
+
+    `kind` picks the ring-buffer lane dtype: f16/i16 halve the carry
+    footprint for bounded series (temperatures, prices, small counts);
+    f32 is for dollar/energy accumulands and unbounded magnitudes
+    (float16 overflows at 65504 — never use it for Watts).
+    """
+
+    name: str
+    source: str   # "info" | "derived" | "policy"
+    field: str    # StepInfo leaf / derived key / HMPCState.diag key
+    kind: str     # "f16" | "f32" | "i16" | "i32"
+    axis: str     # "scalar" | "dc" | "cluster"
+    description: str = ""
+
+    def __post_init__(self):
+        if self.source not in CHANNEL_SOURCES:
+            raise ValueError(f"channel {self.name!r}: bad source {self.source!r}")
+        if self.axis not in CHANNEL_AXES:
+            raise ValueError(f"channel {self.name!r}: bad axis {self.axis!r}")
+        if self.kind not in CHANNEL_KINDS:
+            raise ValueError(f"channel {self.name!r}: bad kind {self.kind!r}")
+
+
+#: Every channel the capture layer knows. `source="info"` fields must be
+#: real StepInfo leaves (tests/test_obs.py pins the consistency), the
+#: derived set is computed in the rollout body, and the policy set reads
+#: `HMPCState.diag` (zeros for policies that publish no diagnostics).
+CHANNEL_CATALOGUE: Tuple[Channel, ...] = (
+    # -- StepInfo leaves ---------------------------------------------------
+    Channel("theta", "info", "theta", "f16", "dc",
+            "per-DC inlet temperature (degC)"),
+    Channel("theta_amb", "info", "theta_amb", "f16", "dc",
+            "per-DC ambient temperature (degC)"),
+    Channel("setpoint", "info", "setpoint", "f16", "dc",
+            "commanded cooling setpoint (degC)"),
+    Channel("price", "info", "price", "f16", "dc",
+            "electricity price ($/kWh)"),
+    Channel("carbon_intensity", "info", "carbon_intensity", "f16", "dc",
+            "grid carbon intensity (gCO2/kWh)"),
+    Channel("cool_power", "info", "cool_power", "f32", "dc",
+            "delivered heat rejection (W; f32 — Watts overflow f16)"),
+    Channel("energy_kwh", "info", "energy_kwh", "f32", "scalar",
+            "fleet electrical energy this step (kWh)"),
+    Channel("cost_usd", "info", "cost_usd", "f32", "scalar",
+            "Eq. 9 cost this step ($)"),
+    Channel("carbon_kg", "info", "carbon_kg", "f32", "scalar",
+            "operational CO2 this step (kg)"),
+    Channel("cpu_util", "info", "cpu_util", "f16", "scalar",
+            "fleet CPU utilization fraction"),
+    Channel("gpu_util", "info", "gpu_util", "f16", "scalar",
+            "fleet GPU utilization fraction"),
+    Channel("cpu_queue", "info", "cpu_queue", "f32", "scalar",
+            "waiting CPU jobs (queues + pending)"),
+    Channel("gpu_queue", "info", "gpu_queue", "f32", "scalar",
+            "waiting GPU jobs (queues + pending)"),
+    Channel("completed", "info", "completed", "i16", "scalar",
+            "jobs completed this step"),
+    Channel("dropped", "info", "dropped", "i16", "scalar",
+            "jobs dropped (overflow) this step"),
+    Channel("preempted", "info", "preempted", "i16", "scalar",
+            "best-effort jobs preempted this step"),
+    Channel("throttled", "info", "throttled", "i16", "dc",
+            "per-DC thermal-throttle flag"),
+    Channel("fault_active", "info", "fault_active", "i16", "dc",
+            "per-DC active-fault flag (fault transition events)"),
+    Channel("fault_cap_mult", "info", "fault_cap_mult", "f16", "dc",
+            "active compute-capacity multiplier"),
+    Channel("fault_cool_mult", "info", "fault_cool_mult", "f16", "dc",
+            "active cooling-efficiency multiplier"),
+    # -- derived in the rollout body --------------------------------------
+    Channel("dc_util", "derived", "dc_util", "f16", "dc",
+            "per-DC utilization fraction (admitted util / capacity)"),
+    Channel("defer_count", "derived", "defer_count", "i16", "scalar",
+            "offered jobs the policy deferred (assign = -1) this step"),
+    Channel("promoted_interactive", "derived", "promoted_interactive",
+            "i16", "scalar",
+            "interactive jobs placed this step (the promotion path's lane)"),
+    # -- MPC solver diagnostics (HMPCConfig.diag) --------------------------
+    Channel("stage1_loss", "policy", "stage1_loss", "f32", "scalar",
+            "final stage-1 projected-Adam loss"),
+    Channel("stage1_resid", "policy", "stage1_resid", "f32", "scalar",
+            "last stage-1 iterate residual |loss[-1] - loss[-2]|"),
+    Channel("refine_pick", "policy", "refine_pick", "i16", "scalar",
+            "stage-1.5 candidate index chosen (-1: refinement off)"),
+)
+
+CHANNELS_BY_NAME = {c.name: c for c in CHANNEL_CATALOGUE}
+
+#: Channels captured when a spec is requested without an explicit
+#: allowlist — the per-DC physics/market series the run report plots,
+#: plus the scheduling counters and solver diagnostics.
+DEFAULT_CHANNELS = (
+    "theta", "setpoint", "price", "carbon_intensity", "dc_util",
+    "cost_usd", "energy_kwh", "completed", "dropped",
+    "defer_count", "promoted_interactive", "fault_active",
+    "stage1_loss", "stage1_resid", "refine_pick",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static capture configuration: channel allowlist + ring geometry.
+
+    The ring holds `capacity` rows per channel; step t is captured iff
+    `t % stride == 0`, into slot `(t // stride) % capacity` — the last
+    `capacity` sampled steps survive, older rows are overwritten. stride
+    and capacity are trace-time constants (buffer shapes depend on them).
+    """
+
+    channels: Tuple[Channel, ...]
+    stride: int = 4
+    capacity: int = 128
+
+    def __post_init__(self):
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1, got {self.stride}")
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        names = [c.name for c in self.channels]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate channel names: {names}")
+
+    @property
+    def channel_names(self) -> Tuple[str, ...]:
+        return tuple(c.name for c in self.channels)
+
+    def to_dict(self) -> dict:
+        """Manifest-facing summary (no per-channel descriptions)."""
+        return {
+            "stride": self.stride,
+            "capacity": self.capacity,
+            "channels": list(self.channel_names),
+        }
+
+
+def default_spec(
+    channels: Optional[Sequence[str]] = None,
+    stride: int = 4,
+    capacity: int = 128,
+) -> TelemetrySpec:
+    """Build a spec from channel *names* (default: `DEFAULT_CHANNELS`)."""
+    names = DEFAULT_CHANNELS if channels is None else tuple(channels)
+    unknown = [n for n in names if n not in CHANNELS_BY_NAME]
+    if unknown:
+        raise KeyError(
+            f"unknown telemetry channels {unknown}; "
+            f"available: {sorted(CHANNELS_BY_NAME)}"
+        )
+    return TelemetrySpec(
+        channels=tuple(CHANNELS_BY_NAME[n] for n in names),
+        stride=stride,
+        capacity=capacity,
+    )

@@ -35,6 +35,7 @@ the policy and row differences to the scenario.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
@@ -381,6 +382,8 @@ def evaluate_infos(
     batch_mode: str = "auto",
     chunk_size: Optional[int] = None,
     memory_budget: int = DEFAULT_MEMORY_BUDGET,
+    telemetry=None,
+    timer=None,
 ):
     """Run the grid but return raw stacked per-step `StepInfo` per policy.
 
@@ -391,18 +394,41 @@ def evaluate_infos(
     only in how XLA fuses the *metric reductions* of `metrics.summarize`),
     so callers that aggregate host-side — `repro.experiments.runner` does,
     in float64 — get artifacts independent of the execution backend.
+
+    `telemetry` (a static `repro.obs.TelemetrySpec`) additionally returns
+    the captured ring-buffer frames: the per-policy values become
+    `(infos, frame)` tuples. `timer` (a `repro.obs.PhaseTimer`) records
+    the trace_build / compile / execute phases; with a timer the runner
+    goes through `repro.obs.phases.timed_run`, which AOT-splits compile
+    from execute on the backends that expose `.lower` (vmap/scan) —
+    results are the same jitted program either way.
     """
+    t0 = _time.perf_counter()
     dims, pols, scens, stacked, n_cells, batch_mode = _prepare_grid(
         policies, scenarios, seeds, dims, base_params, batch_mode, memory_budget
     )
+    if timer is not None:
+        timer.add("trace_build_s", _time.perf_counter() - t0)
     out: Dict[str, object] = {}
     for name, pol in pols.items():
         def cell(p, t, r, pol=pol):
-            _, infos = rollout_params(dims, pol, p, t, r)
-            return infos
+            res = rollout_params(dims, pol, p, t, r, telemetry=telemetry)
+            if telemetry is None:
+                _, infos = res
+                return infos
+            _, infos, frame = res
+            return infos, frame
 
         run = make_runner(cell, n_cells, batch_mode, chunk_size=chunk_size, dims=dims)
-        out[name] = jax.tree_util.tree_map(np.asarray, run(*stacked))
+        if timer is not None:
+            from repro.obs.phases import timed_run
+
+            res, compile_s, execute_s = timed_run(run, stacked)
+            timer.add("compile_s", compile_s)
+            timer.add("execute_s", execute_s)
+        else:
+            res = run(*stacked)
+        out[name] = jax.tree_util.tree_map(np.asarray, res)
     return out, tuple(s.name for s in scens), batch_mode
 
 

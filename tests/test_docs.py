@@ -254,6 +254,31 @@ def test_guide_documents_kernel_catalogue():
         assert anchor in text, f"SIMULATOR_GUIDE.md must mention {anchor}"
 
 
+def test_guide_documents_telemetry_catalogue():
+    """The SIMULATOR_GUIDE's "Telemetry, profiling & run reports" chapter
+    must catalogue every telemetry channel in
+    `repro.obs.CHANNEL_CATALOGUE` (backticked) plus the capture/manifest
+    machinery — a new channel cannot land without its table row."""
+    from repro.obs import CHANNEL_CATALOGUE
+
+    text = _read("SIMULATOR_GUIDE.md")
+    assert "## Telemetry, profiling & run reports" in text, (
+        "SIMULATOR_GUIDE.md must have a 'Telemetry, profiling & run "
+        "reports' chapter"
+    )
+    undocumented = [
+        c.name for c in CHANNEL_CATALOGUE if f"`{c.name}`" not in text
+    ]
+    assert not undocumented, (
+        f"SIMULATOR_GUIDE.md telemetry-channel catalogue is missing: "
+        f"{undocumented}"
+    )
+    for anchor in ("`TelemetrySpec`", "`dcgym-manifest-v1`", "`--telemetry`",
+                   "`--profile`", "`python -m repro.obs report`",
+                   "`.telemetry.npz`"):
+        assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor}"
+
+
 def test_guide_maps_experiments_to_paper_artifacts():
     """The SIMULATOR_GUIDE's experiment chapter must name the paper
     table/figure each spec reproduces."""
@@ -278,9 +303,14 @@ RESULTS_SCHEMA_KEYS = {
 
 
 def _result_files():
+    """Experiment artifacts only: `<exp>.manifest.json` run manifests live
+    beside them but follow dcgym-manifest-v1 (validated in test_obs.py),
+    not the experiment schema."""
     return sorted(
-        glob.glob(os.path.join(REPO, "results", "*.json"))
-        + glob.glob(os.path.join(REPO, "results", "golden", "*.json"))
+        p for p in (
+            glob.glob(os.path.join(REPO, "results", "*.json"))
+            + glob.glob(os.path.join(REPO, "results", "golden", "*.json"))
+        ) if not p.endswith(".manifest.json")
     )
 
 

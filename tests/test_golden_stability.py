@@ -11,7 +11,12 @@ claims rest on this file:
   swapping the engine changed no golden — tagged or untagged — by a
   single bit. All five goldens (nominal/sensitivity/carbon/slo/
   resilience) re-verify here against the artifacts frozen *before* the
-  engine swap.
+  engine swap;
+- the observability layer (DESIGN.md §19): `telemetry=None` leaves the
+  rollout's traced program untouched (the capture hook is a Python-level
+  branch on static config) and an *armed* capture pass never feeds the
+  artifact — every golden here re-verifies with the obs layer compiled
+  into the runner, plus one telemetry-armed run of nominal.
 
 Backend coverage: vmap and chunked for all five experiments; scan
 in-process and shard in an 8-device subprocess for the *untagged*
@@ -80,6 +85,37 @@ def test_smoke_goldens_bitwise_with_faults_disabled(name):
     res_c = run_experiment(spec, smoke=True, batch_mode="chunked",
                            chunk_size=4)
     _assert_bitwise(res_c, gold, f"{name}/chunked")
+
+
+def test_fleet_smoke_golden_bitwise_with_obs_compiled_in():
+    """The fleet golden (PlantSpec-generated plant, tagged workload) under
+    vmap + chunked — scan/shard flip its threshold decisions like the
+    other tagged tables. The runner now routes every call through the
+    observability layer (AOT compile split, phase timers), so this also
+    locks `telemetry=None` as a trace-time identity on the PlantSpec
+    path."""
+    spec = registry.get("fleet")
+    gold = _committed_golden("fleet")
+    res_v = run_experiment(spec, smoke=True, batch_mode="vmap")
+    _assert_bitwise(res_v, gold, "fleet/vmap")
+    res_c = run_experiment(spec, smoke=True, batch_mode="chunked",
+                           chunk_size=4)
+    _assert_bitwise(res_c, gold, "fleet/chunked")
+
+
+def test_nominal_golden_bitwise_with_telemetry_armed():
+    """Arming capture must not move the artifact: the runner computes
+    artifacts from a separate un-instrumented pass, and the capture-armed
+    pass only adds the ring buffer to the scan carry. The golden is the
+    proof that `--telemetry` is observation, not perturbation."""
+    from repro.obs import default_spec
+
+    res = run_experiment(registry.get("nominal"), smoke=True,
+                         batch_mode="vmap",
+                         telemetry=default_spec(stride=4))
+    _assert_bitwise(res, _committed_golden("nominal"), "nominal/telemetry")
+    assert res.frames, "telemetry pass captured no frames"
+    assert res.telemetry_block.get("enabled") is True
 
 
 def test_resilience_smoke_golden_bitwise_with_sort_engine():

@@ -1,0 +1,347 @@
+"""Observability subsystem tests (DESIGN.md §19): in-rollout ring-buffer
+capture parity against the reference StepInfo, ring-wrap semantics,
+backend invariance of the captured series, solver-diagnostic identity,
+manifest schema round-trips, npz trace round-trips, report rendering,
+and the metric/channel schema-drift pins."""
+import copy
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DataCenterGym, EnvDims, make_params, metrics, rollout, synthesize_trace,
+)
+from repro.core.env import StepInfo
+from repro.core.policies import make_policy
+from repro.experiments import ARTIFACT_METRICS
+from repro.obs import (
+    CHANNEL_CATALOGUE, CHANNELS_BY_NAME, build_manifest, config_hash,
+    decode_frame, default_spec, frames_to_npz, instrumented_policy,
+    load_manifest, load_npz, manifest_path, render_markdown, sparkline,
+    step_summary, validate_manifest, write_manifest,
+)
+from repro.obs.manifest import EXPERIMENT_PHASES
+from repro.obs.spec import DEFAULT_CHANNELS
+from repro.scenarios.suite import evaluate_infos
+
+DIMS = EnvDims(
+    horizon=24, queue_cap=128, run_cap=128, pending_cap=64,
+    max_arrivals=64, admit_depth=64, policy_depth=128,
+)
+PARAMS = make_params()
+
+
+def _rollout_with(spec, seed=0, policy="greedy", dims=DIMS, pol=None):
+    trace = synthesize_trace(0, dims, PARAMS)
+    env = DataCenterGym(dims, PARAMS)
+    pol = pol if pol is not None else make_policy(policy, dims)
+    return jax.jit(
+        lambda r: rollout(env, pol, trace, r, telemetry=spec)
+    )(jax.random.PRNGKey(seed))
+
+
+# ------------------------------------------------------------- capture
+
+
+def test_telemetry_none_keeps_two_tuple_contract():
+    out = _rollout_with(None)
+    assert len(out) == 2  # (state, infos) — pre-obs signature unchanged
+
+
+def test_captured_info_channels_match_reference_stepinfo():
+    """Every info-sourced channel in the decoded trace must equal the
+    same StepInfo leaf at the sampled steps, up to the ring's lane dtype
+    cast — the capture observes the rollout, it does not recompute it."""
+    spec = default_spec(stride=3, capacity=64)
+    _, infos, frame = _rollout_with(spec)
+    series = decode_frame(frame)
+    np.testing.assert_array_equal(
+        series["_steps"], np.arange(0, DIMS.horizon, 3))
+    checked = 0
+    for ch in spec.channels:
+        if ch.source != "info":
+            continue
+        ref = np.asarray(getattr(infos, ch.field))[series["_steps"]]
+        got = series[ch.name]
+        assert got.shape == np.broadcast_shapes(ref.shape, got.shape)
+        np.testing.assert_array_equal(got, ref.astype(got.dtype), err_msg=ch.name)
+        checked += 1
+    assert checked >= 5  # the default spec carries real info channels
+
+
+def test_ring_wraps_to_last_capacity_rows():
+    spec = default_spec(channels=("theta", "completed"), stride=2, capacity=4)
+    _, _, frame = _rollout_with(spec)
+    assert int(frame.count) == 12  # ceil(24 / 2) writes in total
+    series = decode_frame(frame)
+    # only the last `capacity` sampled steps survive the wrap, in order
+    np.testing.assert_array_equal(series["_steps"], [16, 18, 20, 22])
+    assert series["theta"].shape == (4, DIMS.num_dcs)
+    assert series["completed"].shape == (4,)
+
+
+@pytest.mark.parametrize("mode", ["vmap", "chunked", "scan"])
+def test_captured_series_identical_across_backends(mode):
+    """The captured rings ride the same scan carry on every execution
+    backend, so the decoded series must be bitwise identical to the vmap
+    reference — the backend-invariance contract of DESIGN.md §13 extended
+    to telemetry."""
+    spec = default_spec(
+        channels=("theta", "cost_usd", "completed", "defer_count"),
+        stride=4, capacity=16,
+    )
+
+    def run(m):
+        out, scen_names, _ = evaluate_infos(
+            ["greedy"], scenarios=["nominal", "heatwave"], seeds=2,
+            dims=DIMS, batch_mode=m, chunk_size=2, telemetry=spec,
+        )
+        _, frame = out["greedy"]
+        return jax.tree_util.tree_map(np.asarray, frame)
+
+    ref = run("vmap")
+    got = run(mode)
+    np.testing.assert_array_equal(got.count, ref.count)
+    np.testing.assert_array_equal(got.steps, ref.steps)
+    for name in ref.buffers:
+        np.testing.assert_array_equal(
+            got.buffers[name], ref.buffers[name], err_msg=f"{mode}/{name}")
+
+
+def test_hmpc_diag_is_a_rollout_identity():
+    """`HMPCConfig.diag=True` adds solver diagnostics to the policy state
+    but must not move a single simulated bit — the diag pytree rides
+    alongside the plan, it never feeds back into it."""
+    from repro.core.policies.h_mpc import HMPCConfig
+
+    dims = EnvDims(
+        horizon=12, queue_cap=64, run_cap=64, pending_cap=32,
+        max_arrivals=32, admit_depth=32, policy_depth=64,
+    )
+    base = dict(h1=6, h2=3, iters1=4, iters2=3)
+    plain = make_policy("h_mpc", dims, cfg=HMPCConfig(**base))
+    diag = make_policy("h_mpc", dims, cfg=HMPCConfig(**base, diag=True))
+    _, infos_plain = _rollout_with(None, dims=dims, pol=plain)
+    spec = default_spec(stride=2, capacity=8)
+    _, infos_diag, frame = _rollout_with(spec, dims=dims, pol=diag)
+    for field in StepInfo._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(infos_diag, field)),
+            np.asarray(getattr(infos_plain, field)), err_msg=field)
+    series = decode_frame(frame)
+    # the diagnostics themselves captured real (finite) solver state
+    assert np.isfinite(series["stage1_loss"]).all()
+    assert np.isfinite(series["stage1_resid"]).all()
+    assert (series["refine_pick"] == -1).all()  # refinement off by default
+
+
+def test_instrumented_policy_resolves_families():
+    pol = instrumented_policy("h_mpc", DIMS)
+    assert pol.config.diag is True
+    st = pol.init(DIMS, PARAMS)
+    policy_fields = {c.field for c in CHANNEL_CATALOGUE
+                     if c.source == "policy"}
+    assert policy_fields <= set(st.diag), (
+        "every policy-sourced channel must have a matching HMPCState.diag "
+        "key, or it would silently capture zeros for H-MPC too"
+    )
+    assert instrumented_policy("greedy", DIMS).config is None
+
+
+# ----------------------------------------------------------- npz traces
+
+
+def test_npz_round_trip(tmp_path):
+    spec = default_spec(channels=("theta", "cost_usd"), stride=4, capacity=8)
+    trace = synthesize_trace(0, DIMS, PARAMS)
+    env = DataCenterGym(DIMS, PARAMS)
+    pol = make_policy("greedy", DIMS)
+    _, _, frames = jax.jit(jax.vmap(
+        lambda r: rollout(env, pol, trace, r, telemetry=spec)
+    ))(jax.random.split(jax.random.PRNGKey(0), 2))
+
+    path = os.path.join(tmp_path, "t.npz")
+    cells = frames_to_npz({"greedy": frames}, ["nominal"], 2, path)
+    assert cells == 2
+    loaded = load_npz(path)
+    assert set(loaded) == {("greedy", "nominal", 0), ("greedy", "nominal", 1)}
+    for k in range(2):
+        cell = jax.tree_util.tree_map(lambda leaf: np.asarray(leaf)[k], frames)
+        want = decode_frame(cell)
+        got = loaded[("greedy", "nominal", k)]
+        assert set(got) == set(want)
+        for name in want:
+            np.testing.assert_array_equal(got[name], want[name])
+    # the two seeds saw different randomness — the traces must differ
+    a = loaded[("greedy", "nominal", 0)]["cost_usd"]
+    b = loaded[("greedy", "nominal", 1)]["cost_usd"]
+    assert not np.array_equal(a, b)
+
+
+# ------------------------------------------------------------ manifests
+
+
+def _toy_manifest(**overrides):
+    kw = dict(
+        kind="experiment", name="toy",
+        phases={k: 0.1 for k in EXPERIMENT_PHASES},
+        telemetry={"enabled": False},
+    )
+    kw.update(overrides)
+    return build_manifest(**kw)
+
+
+def test_manifest_build_validate_round_trip(tmp_path):
+    m = _toy_manifest()
+    assert validate_manifest(m) == []
+    path = write_manifest(m, str(tmp_path))
+    assert path == manifest_path("toy", str(tmp_path))
+    assert validate_manifest(load_manifest(path)) == []
+
+
+def test_manifest_records_provenance():
+    m = _toy_manifest()
+    assert m["schema"] == "dcgym-manifest-v1"
+    assert "sha" in m["git"]
+    assert m["versions"]["jax"]
+    assert m["devices"]["count"] >= 1
+
+
+def test_validate_manifest_catches_corruption():
+    m = _toy_manifest()
+    for breakage in (
+        lambda d: d.pop("devices"),
+        lambda d: d.__setitem__("schema", "wrong"),
+        lambda d: d["phases"].__setitem__("execute_s", "fast"),
+        lambda d: d["phases"].pop("execute_s"),
+        lambda d: d.__setitem__("telemetry", {"enabled": "yes"}),
+        lambda d: d.__setitem__(
+            "telemetry", {"enabled": True}),  # enabled w/o stride/channels
+    ):
+        bad = copy.deepcopy(m)
+        breakage(bad)
+        assert validate_manifest(bad), f"undetected breakage: {breakage}"
+    # bench manifests do not carry the experiment phase contract
+    bench = _toy_manifest(kind="bench", phases={"execute_s": 1.0})
+    assert validate_manifest(bench) == []
+
+
+def test_config_hash_tracks_content():
+    from repro.core.policies.h_mpc import HMPCConfig
+
+    assert config_hash(HMPCConfig()) == config_hash(HMPCConfig())
+    assert config_hash(HMPCConfig()) != config_hash(HMPCConfig(w_energy=2.0))
+    assert len(config_hash(DIMS)) == 12
+
+
+def test_obs_validate_cli(tmp_path):
+    from repro.obs.__main__ import main as obs_main
+
+    write_manifest(_toy_manifest(), str(tmp_path))
+    path = manifest_path("toy", str(tmp_path))
+    assert obs_main(["validate", path]) == 0
+    bad = load_manifest(path)
+    del bad["phases"]
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(bad, f)
+    assert obs_main(["validate", path]) == 1
+    assert obs_main(["validate", os.path.join(tmp_path, "nope*.json")]) == 1
+
+
+# -------------------------------------------------------------- reports
+
+
+def _toy_artifact():
+    cell = {"mean": 1.25, "std": 0.25, "per_seed": [1.0, 1.5]}
+    return {
+        "schema": "dcgym-experiment-v1", "experiment": "toy", "tier": "smoke",
+        "policies": ["greedy"], "scenarios": ["nominal"], "seeds": 2,
+        "metrics": ["cost_usd", "completed_jobs"],
+        "table": {"greedy": {"nominal": {
+            "cost_usd": cell, "completed_jobs": cell}}},
+    }
+
+
+def test_render_markdown_and_step_summary():
+    art = _toy_artifact()
+    man = _toy_manifest()
+    md = render_markdown(art, man)
+    assert "# Run report: `toy`" in md
+    assert "## Phase breakdown" in md
+    assert "cost_usd" in md
+    summary = step_summary(art, man)
+    assert "`toy`" in summary and "cost_usd" in summary
+
+
+def test_render_report_files(tmp_path):
+    from repro.obs import render_report
+
+    with open(os.path.join(tmp_path, "toy.json"), "w", encoding="utf-8") as f:
+        json.dump(_toy_artifact(), f)
+    write_manifest(_toy_manifest(), str(tmp_path))
+    md_path, html_path = render_report("toy", out_dir=str(tmp_path))
+    assert os.path.exists(md_path) and os.path.exists(html_path)
+    with open(html_path, encoding="utf-8") as f:
+        assert "Run report" in f.read()
+
+
+def test_append_step_summary_env_gate(tmp_path, monkeypatch):
+    from repro.obs import append_step_summary
+
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    assert append_step_summary("nope") is False
+    target = os.path.join(tmp_path, "summary.md")
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", target)
+    assert append_step_summary("hello") is True
+    assert append_step_summary("again") is True
+    with open(target, encoding="utf-8") as f:
+        assert f.read() == "hello\nagain\n"
+
+
+def test_sparkline_shape_and_guards():
+    line = sparkline(np.linspace(0.0, 1.0, 100))
+    assert line.count("▁") >= 1 and line.count("█") >= 1
+    assert "const" in sparkline(np.full(10, 3.0))
+    assert sparkline(np.array([])) == "(no data)"
+
+
+# ----------------------------------------------------- schema-drift pins
+
+
+def test_summarize_and_summarize_np_emit_identical_keys():
+    dummy = StepInfo(*[jnp.zeros((4, 3)) for _ in StepInfo._fields])
+    jnp_keys = set(jax.eval_shape(lambda: metrics.summarize(dummy)))
+    np_keys = set(metrics.summarize_np(
+        StepInfo(*[np.zeros((4, 3)) for _ in StepInfo._fields])))
+    assert jnp_keys == np_keys, (
+        "metrics.summarize and metrics.summarize_np drifted apart"
+    )
+    missing = set(ARTIFACT_METRICS) - jnp_keys
+    assert not missing, f"ARTIFACT_METRICS not emitted by summarize: {missing}"
+
+
+def test_info_channels_are_real_stepinfo_leaves():
+    bad = [c.name for c in CHANNEL_CATALOGUE
+           if c.source == "info" and c.field not in StepInfo._fields]
+    assert not bad, (
+        f"info-sourced channels reference missing StepInfo leaves: {bad}"
+    )
+
+
+def test_channel_catalogue_is_consistent():
+    names = [c.name for c in CHANNEL_CATALOGUE]
+    assert len(names) == len(set(names)), "duplicate channel names"
+    assert set(DEFAULT_CHANNELS) <= set(CHANNELS_BY_NAME)
+    # watts-scale series must never ride an f16 lane (overflow at 65504)
+    assert CHANNELS_BY_NAME["cool_power"].kind == "f32"
+
+
+def test_default_spec_rejects_unknown_channels():
+    with pytest.raises(KeyError):
+        default_spec(channels=("theta", "definitely_not_a_channel"))
+    with pytest.raises(ValueError):
+        default_spec(stride=0)

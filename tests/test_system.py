@@ -77,7 +77,9 @@ def test_cluster_scheduler_integration():
     """The paper's technique scheduling THIS framework's LM jobs."""
     from repro.launch.cluster_scheduler import job_classes, schedule_lm_fleet
 
+    from repro.configs import ARCH_IDS
+
     classes = job_classes()
-    assert len(classes) == 20  # 10 archs x (train, serve)
+    assert len(classes) == 2 * len(ARCH_IDS)  # every arch x (train, serve)
     m, _ = schedule_lm_fleet("greedy", horizon=24, jobs_per_step=6.0)
     assert m["completed_jobs"] > 0 and m["cost_usd"] > 0
