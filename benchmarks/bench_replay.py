@@ -1,0 +1,190 @@
+"""Streaming trace-replay benchmark (DESIGN.md §20): windowed rollout
+steps/sec vs the monolithic synthetic path, plus compressed-store
+ingestion throughput (synthesis jobs/s and window-decode jobs/s).
+
+  PYTHONPATH=src python -m benchmarks.bench_replay
+  PYTHONPATH=src python -m benchmarks.run --only replay
+
+The windowed/monolithic contrast is the acceptance number: the outer
+host loop (window decode, host->device upload, carry donation, per-window
+device->host gather) is all overhead the monolithic single-scan rollout
+does not pay, and it must stay under 2x — i.e. windowed steps/s >= 0.5x
+monolithic (asserted here, and both series are baseline-gated within
+±30% via BENCH_replay.json like the other suites). Both sides time a
+second full pass of a prebuilt runner so compilation is excluded.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.bench_scenarios import _bench_dims
+from repro.core.env import rollout_params
+from repro.core.params import make_params, stack_params
+from repro.core.policies import make_policy
+from repro.data import replay
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: Committed bench-regression baseline — written only by
+#: `benchmarks.check_regression --update` (best-of-N).
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_replay.json")
+#: Default output of interactive runs (scratch, not the gate baseline).
+BENCH_LATEST = os.path.join(REPO_ROOT, "BENCH_replay.latest.json")
+
+#: Windowed steps/s must stay within this factor of monolithic (ISSUE 10
+#: acceptance: "steps/s within 2x of the synthetic suite").
+MAX_SLOWDOWN = 2.0
+
+
+def ingestion(fast: bool = False) -> Dict[str, Dict[str, float]]:
+    """Compressed-store ingestion throughput: `synthesize_store` jobs/s
+    (chunked host-side generation + lane encode) and `window_trace`
+    jobs/s (lane decode back to the f32/i32 schema), on a multi-day
+    source at the paper's 200-jobs/step cap."""
+    dims = _bench_dims(fast)
+    params = make_params()
+    window = dims.horizon
+    num_windows = 4 if fast else 10
+    cap = min(dims.max_arrivals, 48 if fast else 200)
+
+    # Same jitter-stability treatment as decode below: repeat until ~100ms
+    # of wall (one pass at the full tier, several at the fast tier).
+    synth_reps = 0
+    t0 = time.time()
+    while True:
+        store = replay.synthesize_store(
+            0, dims, params, num_steps=num_windows * window, window=window,
+            cap_per_step=cap, class_mode=1,
+        )
+        synth_reps += 1
+        synth_s = time.time() - t0
+        if synth_s > 0.1 or synth_reps >= 100:
+            break
+    # Decode is sub-ms per window on the fast tier; repeat the full pass
+    # until ~100ms of wall so the jobs/s measure is jitter-stable for the
+    # +/-30% regression band.
+    reps = 0
+    t0 = time.time()
+    while True:
+        for w in range(store.num_windows):
+            store.window_trace(w)
+        reps += 1
+        decode_s = time.time() - t0
+        if decode_s > 0.1 or reps >= 100:
+            break
+    out = {
+        "synthesize": {"wall_s": synth_s,
+                       "jobs_per_s": store.num_jobs * synth_reps / synth_s},
+        "decode": {"wall_s": decode_s,
+                   "jobs_per_s": store.num_jobs * reps / decode_s},
+    }
+    ratio = store.decoded_nbytes / store.nbytes
+    print(f"# ingestion: {store.num_jobs} jobs, {store.num_steps} steps, "
+          f"compression {ratio:.2f}x")
+    print("stage,wall_s,jobs_per_s")
+    for name, r in out.items():
+        print(f"{name},{r['wall_s']:.3f},{r['jobs_per_s']:.0f}")
+    return out
+
+
+def windowed_vs_monolithic(
+    policy: str = "greedy", n_cells: int = 8, fast: bool = False
+) -> Dict[str, Dict[str, float]]:
+    """Second-pass wall-clock of the windowed replay driver vs a
+    monolithic whole-trace vmap rollout over the *same* decoded trace,
+    same cells, same dims — so the gap is exactly the outer-loop
+    overhead (window decode + upload + donation + per-window gather)."""
+    dims = _bench_dims(fast)
+    if fast:
+        n_cells = min(n_cells, 4)
+    params = make_params()
+    window = dims.horizon
+    num_windows = 2 if fast else 4
+    cap = min(dims.max_arrivals, 48 if fast else 200)
+    store = replay.synthesize_store(
+        0, dims, params, num_steps=num_windows * window, window=window,
+        cap_per_step=cap, class_mode=1,
+    )
+    pol = make_policy(policy, dims)
+    ps = stack_params([params] * n_cells)
+    rngs = jax.numpy.stack([jax.random.PRNGKey(k) for k in range(n_cells)])
+
+    # windowed: prebuilt backend, one warmup pass (compile), time pass 2
+    backend = replay._make_backend(dims, pol, n_cells, "vmap")
+    bps, brs = backend.prepare(ps, rngs)
+
+    def windowed_pass():
+        carry = backend.init(bps, brs)
+        nxt = jax.device_put(store.window_trace(0))
+        out = None
+        for w in range(store.num_windows):
+            cur = nxt
+            carry, infos = backend.window(bps, cur, carry)
+            if w + 1 < store.num_windows:
+                nxt = jax.device_put(store.window_trace(w + 1))
+            out = jax.tree_util.tree_map(np.asarray, backend.gather(infos))
+        return out
+
+    windowed_pass()
+    t0 = time.time()
+    windowed_pass()
+    windowed_s = time.time() - t0
+
+    # monolithic: the whole decoded trace in one device-resident scan —
+    # the synthetic-suite execution model (bench_scenarios vmap path)
+    mono_trace = jax.device_put(store.to_trace())
+
+    def mono_cell(p, r):
+        _, infos = rollout_params(dims, pol, p, mono_trace, r)
+        return infos
+
+    mono = jax.jit(jax.vmap(mono_cell))
+    jax.block_until_ready(mono(ps, rngs))
+    t0 = time.time()
+    jax.block_until_ready(mono(ps, rngs))
+    mono_s = time.time() - t0
+
+    steps = n_cells * store.num_steps
+    out = {
+        "windowed": {"wall_s": windowed_s, "steps_per_s": steps / windowed_s},
+        "monolithic": {"wall_s": mono_s, "steps_per_s": steps / mono_s},
+    }
+    slowdown = windowed_s / mono_s
+    print(f"\n# replay rollout: {n_cells} cells x {store.num_steps} steps "
+          f"({store.num_windows} windows of {window}), policy={policy}")
+    print("mode,wall_s,steps_per_s")
+    for name, r in out.items():
+        print(f"{name},{r['wall_s']:.3f},{r['steps_per_s']:.0f}")
+    print(f"windowed/monolithic slowdown: {slowdown:.2f}x "
+          f"(gate: <= {MAX_SLOWDOWN}x)")
+    assert slowdown <= MAX_SLOWDOWN, (
+        f"windowed replay is {slowdown:.2f}x slower than monolithic "
+        f"(acceptance bound {MAX_SLOWDOWN}x)"
+    )
+    return out
+
+
+def main(fast: bool = False, out_path: str = BENCH_LATEST):
+    ing = ingestion(fast=fast)
+    roll = windowed_vs_monolithic(fast=fast)
+    payload = {
+        "bench": "replay",
+        "fast": fast,
+        "jax_backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "ingestion": ing,
+        "replay_rollout": roll,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {out_path}")
+    return ing, roll
+
+
+if __name__ == "__main__":
+    main()

@@ -82,6 +82,26 @@ def faults_pairs(baseline: Dict, fresh: Dict) -> Pairs:
     return pairs
 
 
+def replay_pairs(baseline: Dict, fresh: Dict) -> Pairs:
+    pairs: Pairs = []
+    for stage, b in baseline.get("ingestion", {}).items():
+        # Lane decode runs at ~1e7 jobs/s of pure host numpy; at that scale
+        # the measure flaps ~2x between processes (allocator/page-cache
+        # warmth), so it is reported in the headline but not gated.
+        if stage == "decode":
+            continue
+        f = fresh.get("ingestion", {}).get(stage)
+        if f:
+            pairs.append((f"replay/ingest/{stage}",
+                          b["jobs_per_s"], f["jobs_per_s"]))
+    for mode, b in baseline.get("replay_rollout", {}).items():
+        f = fresh.get("replay_rollout", {}).get(mode)
+        if f:
+            pairs.append((f"replay/rollout/{mode}",
+                          b["steps_per_s"], f["steps_per_s"]))
+    return pairs
+
+
 def fleet_pairs(baseline: Dict, fresh: Dict) -> Pairs:
     pairs: Pairs = []
     for name, b in baseline.get("per_fleet_size", {}).items():
@@ -163,6 +183,14 @@ def _faults_headline(res):
             f"armed/stripped={ratio:.2f}x")
 
 
+def _replay_headline(res):
+    ing, roll = res
+    slowdown = roll["monolithic"]["steps_per_s"] / roll["windowed"]["steps_per_s"]
+    return (f"windowed_sps={roll['windowed']['steps_per_s']:.0f} "
+            f"slowdown={slowdown:.2f}x "
+            f"decode_jobs_ps={ing['decode']['jobs_per_s']:.0f}")
+
+
 def _fleet_headline(res):
     sizes, ladder = res
     top = max(ladder.values(), key=lambda r: r["devices"])
@@ -226,6 +254,10 @@ SUITES: Tuple[BenchSuite, ...] = (
                "Fault injection: armed vs stripped rollout throughput",
                _faults_headline, baseline="BENCH_faults.json",
                pairs=faults_pairs, fast_default=True),
+    BenchSuite("replay", "bench_replay",
+               "Trace replay: windowed vs monolithic rollout + ingestion",
+               _replay_headline, baseline="BENCH_replay.json",
+               pairs=replay_pairs, fast_default=True),
     BenchSuite("fleet", "bench_fleet",
                "Fleet scaling: steps/sec vs D + DC-axis device ladder",
                _fleet_headline, baseline="BENCH_fleet.json",

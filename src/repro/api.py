@@ -8,13 +8,19 @@
     res = dcg.evaluate_suite(["greedy"], scenarios=["nominal"], seeds=4)
     result = dcg.run_experiment(dcg.experiments.get("nominal"), smoke=True)
 
+    store = dcg.synthesize_store(                   # streaming replay (§20)
+        0, dcg.EnvDims(), params, num_steps=20 * 288, window=288)
+    infos, scens, mode, meta = dcg.evaluate_replay_infos(
+        ["greedy"], scenarios=["trace_replay"], seeds=2)
+
 Everything re-exported here keeps its original home (`repro.core`,
-`repro.plant`, `repro.scenarios`, `repro.experiments`) — deep imports
-stay supported; this module only collects the names a typical user
-script needs so examples and notebooks import one module. Registries
-are exposed as namespaced modules (`api.plants`, `api.scenarios`,
-`api.experiments`) rather than flattened, since their `get`/`names`
-would collide.
+`repro.plant`, `repro.scenarios`, `repro.experiments`, `repro.data`) —
+deep imports stay supported; this module only collects the names a
+typical user script needs so examples and notebooks import one module.
+Registries are exposed as namespaced modules (`api.plants`,
+`api.scenarios`, `api.experiments`, `api.replay`) rather than
+flattened, since their `get`/`names` would collide. DESIGN.md §20
+documents the full facade name list.
 """
 from __future__ import annotations
 
@@ -42,6 +48,13 @@ from repro.scenarios import Scenario, evaluate_suite
 from repro.scenarios import registry as scenarios
 from repro.scenarios.suite import BATCH_MODES, SuiteResult, evaluate_infos
 
+# -- data: streaming production-trace replay (§20) --------------------------
+from repro.data import replay
+from repro.data.replay import (
+    TraceSource, TraceStore, evaluate_replay_infos, replay_rollout,
+    synthesize_store,
+)
+
 # -- experiments: paper tables as executable specs --------------------------
 from repro.experiments import (
     ExperimentResult, ExperimentSpec,
@@ -63,6 +76,9 @@ __all__ = [
     # scenarios
     "BATCH_MODES", "Scenario", "SuiteResult", "evaluate_infos",
     "evaluate_suite", "scenarios",
+    # data / replay
+    "TraceSource", "TraceStore", "evaluate_replay_infos", "replay",
+    "replay_rollout", "synthesize_store",
     # experiments
     "ExperimentResult", "ExperimentSpec", "check_bounds", "check_margins",
     "compare_to_golden", "golden_path", "load_golden", "run_experiment",

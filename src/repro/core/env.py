@@ -209,32 +209,45 @@ class DataCenterGym:
         return new_state, info
 
 
-def rollout(
-    env: DataCenterGym,
-    policy,
-    trace: Trace,
-    rng,
-    telemetry=None,
-):
-    """Run a full episode with `policy` in the loop; returns stacked StepInfo.
+def init_carry(env: DataCenterGym, policy, rng, telemetry=None):
+    """Build the scan carry `rollout_window` advances: ``(state, pol_state)``
+    (or ``(state, pol_state, frame)`` with a telemetry spec).
 
-    `policy` is a repro.core.policies.base.Policy. The episode is one
-    lax.scan; wrap in jax.jit (and vmap over rng for Monte Carlo).
-
-    `telemetry` is an optional *static* `repro.obs.TelemetrySpec`. With a
-    spec, per-channel ring buffers ride the scan carry and the return
-    grows a third element: `(state, infos, frame)` (DESIGN.md §19). With
-    `None` — the default everywhere — the branch below is Python-level,
-    so the traced program is literally the one that existed before the
-    obs subsystem: the bitwise golden contract does not depend on any
-    runtime check.
+    `env.reset(rng)` + `policy.init(dims, params)` — exactly the carry
+    `rollout` starts its episode scan from, exposed so the windowed replay
+    driver (`repro.data.replay`, DESIGN.md §20) can thread the same carry
+    across trace windows bitwise-identically to a monolithic episode.
     """
     state0 = env.reset(rng)
     pol0 = policy.init(env.dims, env.params)
+    if telemetry is None:
+        return state0, pol0
+    from repro.obs import capture as obs_capture
+
+    return state0, pol0, obs_capture.init_frame(telemetry, env.dims)
+
+
+def rollout_window(
+    env: DataCenterGym,
+    policy,
+    trace: Trace,
+    carry,
+    telemetry=None,
+):
+    """Advance `carry` through one trace window; returns `(carry, infos)`.
+
+    `carry` is the `(state, pol_state[, frame])` tuple from `init_carry`
+    (or a previous `rollout_window` call); `infos` stacks one `StepInfo`
+    per trace row. Because the episode state, the policy state, and the
+    step RNG all live in the carry — `state.t` keeps counting and the
+    per-step keys fold `state.t` into `state.rng` — splitting a T-step
+    trace into windows and chaining the carry through them replays the
+    exact ops of the single monolithic scan: the windowed composition is
+    bitwise-identical to `rollout` on the concatenated trace (DESIGN.md
+    §20; locked by tests/test_replay.py).
+    """
     if telemetry is not None:
         from repro.obs import capture as obs_capture
-
-        frame0 = obs_capture.init_frame(telemetry, env.dims)
 
     def body(carry, arrivals):
         if telemetry is None:
@@ -261,11 +274,35 @@ def rollout(
         cls=trace.cls, deadline=trace.deadline,
         is_gpu=trace.is_gpu, valid=trace.valid,
     )
+    return jax.lax.scan(body, carry, arrivals_steps)
+
+
+def rollout(
+    env: DataCenterGym,
+    policy,
+    trace: Trace,
+    rng,
+    telemetry=None,
+):
+    """Run a full episode with `policy` in the loop; returns stacked StepInfo.
+
+    `policy` is a repro.core.policies.base.Policy. The episode is one
+    lax.scan; wrap in jax.jit (and vmap over rng for Monte Carlo).
+
+    `telemetry` is an optional *static* `repro.obs.TelemetrySpec`. With a
+    spec, per-channel ring buffers ride the scan carry and the return
+    grows a third element: `(state, infos, frame)` (DESIGN.md §19). With
+    `None` — the default everywhere — the branch below is Python-level,
+    so the traced program is literally the one that existed before the
+    obs subsystem: the bitwise golden contract does not depend on any
+    runtime check.
+    """
+    carry0 = init_carry(env, policy, rng, telemetry=telemetry)
     if telemetry is None:
-        (state, _), infos = jax.lax.scan(body, (state0, pol0), arrivals_steps)
+        (state, _), infos = rollout_window(env, policy, trace, carry0)
         return state, infos
-    (state, _, frame), infos = jax.lax.scan(
-        body, (state0, pol0, frame0), arrivals_steps
+    (state, _, frame), infos = rollout_window(
+        env, policy, trace, carry0, telemetry=telemetry
     )
     return state, infos, frame
 

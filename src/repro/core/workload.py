@@ -11,7 +11,14 @@ The real trace is not redistributable in this container, so
 arrival-rate modulation, heavy-tailed log-normal durations and demands) and
 applies the *same* capacity-scaling calibration the paper describes.
 `load_alibaba_csv` ingests the real `batch_task.csv` schema when a file is
-available, then runs through the identical normalization path.
+available — streamed in bounded-memory chunks — then runs through the
+identical normalization path.
+
+Everything here materializes one device-resident `Trace` of
+(horizon, max_arrivals) arrays. Multi-day traces that must NOT live in
+device memory whole go through `repro.data.replay` (DESIGN.md §20), which
+reuses `rate_modulation` / `draw_classes` / the calibration math to
+synthesize and replay compressed trace windows at production scale.
 """
 from __future__ import annotations
 
@@ -70,8 +77,9 @@ jax.tree_util.register_dataclass(
 
 
 def untagged_classes(valid):
-    """(cls, deadline) arrays for a class-blind trace: every job is batch
-    with the NO_DEADLINE sentinel (the legacy bitwise path)."""
+    """(cls, deadline) int32 arrays, shaped like `valid`, for a class-blind
+    trace: every valid job is CLS_BATCH with the NO_DEADLINE sentinel and
+    invalid slots are zero (the legacy class_mode=0 bitwise path)."""
     cls = np.where(valid, CLS_BATCH, 0).astype(np.int32)
     deadline = np.where(valid, NO_DEADLINE, 0).astype(np.int32)
     return cls, deadline
@@ -86,7 +94,8 @@ def draw_classes(
     slack_batch: float = 24.0,
     slack_sigma: float = 0.6,
 ):
-    """Draw (cls, deadline) for a class-tagged trace (class_mode=1).
+    """Draw (cls, deadline) int32 arrays, shaped like `valid` (T, J), for a
+    class-tagged trace (class_mode=1).
 
     Deadlines are absolute step indices: ``arrival + dur + slack`` with
     per-class slack laws — interactive jobs get a tight uniform slack of
@@ -145,17 +154,29 @@ def rate_modulation(
     diurnal_amp: float = 0.25,
     diurnal_shift: float = 0.0,
     burst_windows: tuple = (),
+    period: Optional[int] = None,
+    t0: int = 0,
 ):
-    """Per-step arrival-rate multipliers: (diurnal, burst) arrays of shape (T,).
+    """Per-step arrival-rate multipliers: (diurnal, burst) float64 arrays of
+    shape (num_steps,).
 
     `diurnal_shift` moves the workload peak by a fraction of the day (0.5
     puts the peak 12 h later); `burst_windows` is a tuple of
     (start_frac, end_frac, multiplier) triples applied multiplicatively on
-    top of the diurnal cycle (flash crowds, failover surges).
+    top of the diurnal cycle (flash crowds, failover surges), with the
+    fractions relative to the generated span.
+
+    `period` is the diurnal cycle length in steps and defaults to
+    `num_steps` — the legacy single-day behaviour, bitwise identical to
+    the pre-`period` function. Multi-day traces (`repro.data.replay`)
+    pass `period=288` so every generated day repeats the same daily
+    sinusoid, and `t0` to generate a window starting at an absolute step
+    offset: the returned row i modulates absolute step `t0 + i`.
     """
-    t = np.arange(num_steps)
+    period = num_steps if period is None else period
+    t = np.arange(t0, t0 + num_steps)
     diurnal = 1.0 + diurnal_amp * np.sin(
-        2 * np.pi * (t / num_steps - 0.45 - diurnal_shift)
+        2 * np.pi * (t / period - 0.45 - diurnal_shift)
     )
     burst = np.ones(num_steps)
     for start_frac, end_frac, mult in burst_windows:
@@ -268,6 +289,43 @@ def synthesize_trace(
     )
 
 
+def _iter_csv_chunks(path: str, chunk_rows: int = 65536):
+    """Stream the Alibaba `batch_task.csv` as parsed numpy chunks.
+
+    Yields `(start, end, cpu, inst, n_malformed)` float64-array tuples of
+    at most `chunk_rows` well-formed rows each, so the loader's host
+    memory is bounded by the chunk size (plus the rows it keeps), never
+    by the CSV size. Malformed rows (short lines, unparsable numbers,
+    non-positive durations) are counted, not raised.
+    """
+    buf: list = []
+    malformed = 0
+    with open(path) as f:
+        for line in f:
+            parts = line.rstrip("\n").split(",")
+            if len(parts) < 9:
+                malformed += 1
+                continue
+            try:
+                s, e = float(parts[5]), float(parts[6])
+                c = float(parts[7]) if parts[7] else 100.0
+                n = float(parts[1]) if parts[1] else 1.0
+            except ValueError:
+                malformed += 1
+                continue
+            if e <= s:
+                malformed += 1
+                continue
+            buf.append((s, e, c, n))
+            if len(buf) >= chunk_rows:
+                arr = np.asarray(buf, np.float64)
+                yield arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3], malformed
+                buf, malformed = [], 0
+    arr = (np.asarray(buf, np.float64) if buf
+           else np.zeros((0, 4), np.float64))
+    yield arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3], malformed
+
+
 def load_alibaba_csv(
     path: str,
     dims: EnvDims,
@@ -281,43 +339,81 @@ def load_alibaba_csv(
     slack_interactive: float = 2.0,
     slack_batch: float = 24.0,
     slack_sigma: float = 0.6,
+    overflow: str = "drop",
+    chunk_rows: int = 65536,
 ) -> Trace:
-    """Load a slice of the real Alibaba 2018 `batch_task.csv`.
+    """Load a slice of the real Alibaba 2018 `batch_task.csv` as a Trace
+    with (dims.horizon, dims.max_arrivals) arrays.
 
     Expected columns (v2018 schema, headerless):
       task_name, instance_num, job_name, task_type, status,
       start_time, end_time, plan_cpu, plan_mem
+
+    The file is streamed twice in `chunk_rows`-row chunks (pass 1 finds
+    the trace epoch, pass 2 keeps only rows relevant to the selected
+    window), so host memory is bounded by the chunk size + the selected
+    window, never the CSV size. The window starts `start_offset_s`
+    seconds after the first arrival (default: 86400 — skip the first
+    day's startup artifacts) and spans `horizon * dt` seconds.
+
+    `overflow` says what happens to arrivals whose start time lands at or
+    beyond the end of the window (they used to be dropped silently):
+
+    - ``"drop"`` (default) — discard them, with a warning reporting the
+      count;
+    - ``"wrap"`` — re-bin them at `step % horizon`, folding the tail of
+      the trace onto the window (keeps total load, scrambles time-of-day
+      alignment beyond one wrap);
+    - ``"clip"`` — bin them all into the final step (keeps total load as
+      an end-of-window backlog spike).
+
+    Rows before the window start are always dropped (they belong to the
+    skipped warm-up), and rows beyond the paper's 200-jobs/step cap (or
+    `max_arrivals`, whichever is smaller) are dropped with a warning.
     """
     if not os.path.exists(path):
         raise FileNotFoundError(path)
+    if overflow not in ("drop", "wrap", "clip"):
+        raise ValueError(
+            f"overflow must be 'drop', 'wrap', or 'clip', got {overflow!r}"
+        )
     T, J = dims.horizon, dims.max_arrivals
     dt = float(params.dt)
     rng = np.random.default_rng(seed)
 
-    start, end, cpu, inst = [], [], [], []
-    with open(path) as f:
-        for line in f:
-            parts = line.rstrip("\n").split(",")
-            if len(parts) < 9:
-                continue
-            try:
-                s, e = float(parts[5]), float(parts[6])
-                c = float(parts[7]) if parts[7] else 100.0
-                n = float(parts[1]) if parts[1] else 1.0
-            except ValueError:
-                continue
-            if e <= s:
-                continue
-            start.append(s); end.append(e); cpu.append(c); inst.append(n)
-    start = np.asarray(start); end = np.asarray(end)
-    cpu = np.asarray(cpu); inst = np.asarray(inst)
+    # pass 1: the trace epoch (earliest well-formed arrival)
+    tmin = np.inf
+    n_malformed = 0
+    for s, _, _, _, bad in _iter_csv_chunks(path, chunk_rows):
+        n_malformed += bad
+        if s.size:
+            tmin = min(tmin, float(s.min()))
+    if not np.isfinite(tmin):
+        raise ValueError(f"no well-formed rows in {path}")
 
-    # pick a contiguous 24 h window (skip the first day: startup artifacts)
-    t0 = float(start.min()) + (start_offset_s if start_offset_s is not None else 86400.0)
-    sel = (start >= t0) & (start < t0 + T * dt)
-    start, end, cpu, inst = start[sel], end[sel], cpu[sel], inst[sel]
+    # pass 2: keep only rows at/after the window start; rows past the end
+    # are kept when overflow wraps/clips them back into the window
+    t0 = tmin + (start_offset_s if start_offset_s is not None else 86400.0)
+    t_end = t0 + T * dt
+    keep_start, keep_end, keep_cpu, keep_inst = [], [], [], []
+    n_beyond = 0
+    for s, e, c, n, bad in _iter_csv_chunks(path, chunk_rows):
+        n_malformed += bad
+        beyond = s >= t_end
+        n_beyond += int(beyond.sum())
+        sel = (s >= t0) if overflow != "drop" else ((s >= t0) & ~beyond)
+        if sel.any():
+            keep_start.append(s[sel]); keep_end.append(e[sel])
+            keep_cpu.append(c[sel]); keep_inst.append(n[sel])
+    cat = (lambda xs: np.concatenate(xs) if xs else np.zeros(0, np.float64))
+    start, end = cat(keep_start), cat(keep_end)
+    cpu, inst = cat(keep_cpu), cat(keep_inst)
 
     step = ((start - t0) // dt).astype(np.int64)
+    if overflow == "wrap":
+        step = step % T
+    elif overflow == "clip":
+        step = np.minimum(step, T - 1)
     dur = np.maximum(1, np.ceil((end - start) / dt)).astype(np.int32)
     r_raw = (cpu / 100.0) * np.maximum(inst, 1.0)
 
@@ -325,15 +421,27 @@ def load_alibaba_csv(
     dmat = np.zeros((T, J), np.int32)
     valid = np.zeros((T, J), bool)
     fill = np.zeros(T, np.int64)
+    n_capped = 0
     order = np.argsort(step, kind="stable")
     for idx in order:
         ts = step[idx]
         if fill[ts] >= min(J, NOMINAL_JOBS_PER_STEP):  # paper's 200/step cap
+            n_capped += 1
             continue
         r[ts, fill[ts]] = r_raw[idx]
         dmat[ts, fill[ts]] = dur[idx]
         valid[ts, fill[ts]] = True
         fill[ts] += 1
+
+    dropped = {
+        "malformed": n_malformed,
+        "beyond window (overflow='drop')": n_beyond if overflow == "drop" else 0,
+        "per-step cap": n_capped,
+    }
+    msg = "; ".join(f"{v:,} rows {k}" for k, v in dropped.items() if v)
+    if msg:
+        warnings.warn(f"load_alibaba_csv({os.path.basename(path)}): "
+                      f"dropped {msg}", stacklevel=2)
 
     is_gpu = (rng.random((T, J)) < gpu_fraction) & valid
     scaled = _calibrate_scale(r, dmat, is_gpu, valid, params, target_util, T)
@@ -362,7 +470,10 @@ def load_alibaba_csv(
 def make_trace(
     seed: int, dims: EnvDims, params: EnvParams, lam: float = 1.0, **kw
 ) -> Trace:
-    """Trace factory: real Alibaba CSV if DCGYM_ALIBABA_CSV is set, else synthetic."""
+    """Trace factory: `load_alibaba_csv` when the DCGYM_ALIBABA_CSV env var
+    names a readable CSV, else `synthesize_trace(seed, ...)`. Extra keyword
+    arguments pass through to whichever generator runs; `lam` applies only
+    to the synthetic path (the real trace's arrival rate is the data's)."""
     path = os.environ.get("DCGYM_ALIBABA_CSV", "")
     if path:
         return load_alibaba_csv(path, dims, params, **kw)

@@ -7,6 +7,11 @@ counter, never a data-iterator state (DESIGN.md §9).
 
 The token stream has learnable structure (a noisy affine bigram process) so
 the end-to-end example shows a genuinely decreasing loss.
+
+`repro.data` also houses the streaming trace-replay layer
+(`repro.data.replay`, DESIGN.md §20); workload *synthesis* stays in
+`repro.core.workload`, this package holds what feeds or stores data at
+scale.
 """
 from __future__ import annotations
 

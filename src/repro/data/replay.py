@@ -1,0 +1,820 @@
+"""Streaming production-trace replay at scale (DESIGN.md §20).
+
+The scenario suite materializes each episode's `Trace` on the device
+whole, which caps episodes at what device memory holds (~a day at paper
+dims). This module replays multi-day, million-job traces with device
+memory bounded by a *window*, not the trace length:
+
+- `TraceStore` — a host-side compressed-lane trace: durations/priorities/
+  classes/deadline-slacks in int16/int8 lanes, the validity mask as a
+  per-step count, GPU affinity bit-packed (~2.2x smaller than the decoded
+  f32/i32 `Trace` schema, losslessly round-trippable — in-range values
+  decode bitwise, out-of-range encodes raise). Windows decode on demand
+  to ordinary `Trace` pytrees of (window, max_arrivals) arrays.
+- `synthesize_store` — chunked at-scale synthesis: the Alibaba-like
+  generator of `repro.core.workload` run window-by-window with a daily
+  diurnal period and a shared capacity calibration, so host memory is
+  bounded by one window during generation too.
+- `replay_rollout` / `evaluate_replay_infos` — the windowed rollout
+  driver: an outer host loop threads the episode carry (`EnvState`,
+  policy state, fault state — everything `core.env.init_carry` builds)
+  through per-window `rollout_window` scans. The carry is donated to
+  XLA each window and the next window's host decode + host-to-device
+  transfer is issued while the device computes the current one
+  (double-buffered prefetch via JAX async dispatch). The windowed
+  composition is bitwise-identical to one monolithic rollout over the
+  concatenated trace (tests/test_replay.py locks this across backends).
+- `TraceSource` + `register_source`/`get_source`/`source_names` — the
+  registry of named long traces a `Scenario.trace` field can pin, the
+  same pattern as the plant/grid/fault registries.
+
+Memory contract: the device sees one decoded window (double-buffered: two
+in flight) plus the carry; the host holds the compressed lanes. Peak
+device memory is therefore set by `window * max_arrivals`, never by
+`num_steps`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.env import DataCenterGym, init_carry, rollout_window
+from repro.core.params import GRID_STEPS, EnvDims, EnvParams, make_params, stack_params
+from repro.core.state import NO_DEADLINE
+from repro.core.workload import (
+    CPU_FRACTION, DEFAULT_CLASS_MIX, NOMINAL_JOBS_PER_STEP, Trace,
+    draw_classes, load_alibaba_csv, rate_modulation, untagged_classes,
+)
+
+_I16_MAX = 32767
+_I8_MIN, _I8_MAX = -128, 127
+
+#: RNG-stream salt for the one-shot capacity calibration in
+#: `synthesize_store`. Window w draws from stream (seed, w), so the salt
+#: only needs to stay clear of plausible window indices — with it fixed
+#: (rather than derived from num_windows), a shorter synthesis of the
+#: same source is bitwise a prefix of a longer one.
+_CALIB_SALT = 0x5CA1E
+
+#: Bytes per (step, slot) cell of the decoded f32/i32 `Trace` schema:
+#: r f32 + dur/prio/cls/deadline i32 + is_gpu/valid bool.
+DECODED_BYTES_PER_SLOT = 4 + 4 + 4 + 4 + 4 + 1 + 1
+
+
+# ---------------------------------------------------------------------------
+# Compressed lane layout
+# ---------------------------------------------------------------------------
+
+
+def _check_lane(name: str, arr, lo: int, hi: int) -> None:
+    if arr.size and (arr.min() < lo or arr.max() > hi):
+        raise OverflowError(
+            f"trace lane {name!r} has values outside [{lo}, {hi}] "
+            f"(got [{arr.min()}, {arr.max()}]); the compressed layout "
+            "cannot represent them losslessly"
+        )
+
+
+def encode_window(r, dur, prio, cls, deadline, is_gpu, valid, t0: int = 0
+                  ) -> Dict[str, np.ndarray]:
+    """Compress one (T, J) trace block into the lossless lane layout.
+
+    Inputs are the seven `Trace` arrays (numpy, any integer width);
+    `t0` is the absolute step of row 0 (deadlines are stored relative to
+    their arrival step). Returns the lane dict:
+
+    - ``counts`` (T,) int16 — valid jobs per step (the mask must be
+      prefix-packed: slot j valid iff j < counts[t]);
+    - ``r`` (T, J) float32 — demands, kept float32 (arbitrary floats have
+      no narrower lossless integer encoding);
+    - ``dur`` int16, ``prio`` int8, ``cls`` int8 — (T, J);
+    - ``slack`` (T, J) int16 — deadline minus absolute arrival step, with
+      -1 encoding the NO_DEADLINE sentinel and 0 for invalid slots;
+    - ``gpu_bits`` (T, ceil(J/8)) uint8 — bit-packed is_gpu.
+
+    Raises `OverflowError` when a value exceeds its lane's range and
+    `ValueError` when the block is not losslessly encodable (non-prefix
+    validity mask, nonzero data in invalid slots).
+    """
+    r = np.asarray(r); dur = np.asarray(dur); prio = np.asarray(prio)
+    cls = np.asarray(cls); deadline = np.asarray(deadline)
+    is_gpu = np.asarray(is_gpu); valid = np.asarray(valid, bool)
+    T, J = valid.shape
+    if J > _I16_MAX:
+        raise OverflowError(f"max_arrivals={J} exceeds the int16 counts lane")
+
+    counts = valid.sum(axis=1).astype(np.int64)
+    if not np.array_equal(valid, np.arange(J)[None, :] < counts[:, None]):
+        raise ValueError(
+            "valid mask is not prefix-packed (slot j valid iff j < counts[t]); "
+            "the counts lane cannot represent it — compact the trace first"
+        )
+    for name, lane in (("r", r), ("dur", dur), ("prio", prio),
+                       ("cls", cls), ("deadline", deadline)):
+        if lane[~valid].any():
+            raise ValueError(
+                f"trace lane {name!r} has nonzero data in invalid slots; "
+                "the round-trip would not be lossless"
+            )
+    if is_gpu[~valid].any():
+        raise ValueError("is_gpu set on invalid slots; round-trip would "
+                         "not be lossless")
+
+    _check_lane("dur", dur[valid], 0, _I16_MAX)
+    _check_lane("prio", prio[valid], _I8_MIN, _I8_MAX)
+    _check_lane("cls", cls[valid], 0, _I8_MAX)
+    t_abs = (t0 + np.arange(T, dtype=np.int64))[:, None]
+    sentinel = deadline == NO_DEADLINE
+    rel = deadline.astype(np.int64) - t_abs
+    finite = valid & ~sentinel
+    _check_lane("deadline - arrival (slack)", rel[finite], 0, _I16_MAX - 1)
+    slack = np.where(valid, np.where(sentinel, -1, rel), 0).astype(np.int16)
+
+    return {
+        "counts": counts.astype(np.int16),
+        "r": r.astype(np.float32),
+        "dur": dur.astype(np.int16),
+        "prio": prio.astype(np.int8),
+        "cls": cls.astype(np.int8),
+        "slack": slack,
+        "gpu_bits": np.packbits(is_gpu, axis=1),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceStore:
+    """A long host-side trace in the compressed lane layout, sliced into
+    fixed `window`-step windows (``num_steps % window == 0``).
+
+    Lanes (see `encode_window` for dtypes/semantics): `counts` (T,),
+    `r`/`dur`/`prio`/`cls`/`slack` (T, J), `gpu_bits` (T, ceil(J/8)).
+    `window_trace(w)` decodes window w back to a host-numpy `Trace` of
+    (window, J) arrays in the canonical f32/i32 schema — bitwise equal to
+    the arrays the store was built from (the round-trip contract).
+    """
+
+    counts: np.ndarray
+    r: np.ndarray
+    dur: np.ndarray
+    prio: np.ndarray
+    cls: np.ndarray
+    slack: np.ndarray
+    gpu_bits: np.ndarray
+    window: int
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_lanes(cls, lanes: Dict[str, np.ndarray], window: int
+                   ) -> "TraceStore":
+        T = lanes["counts"].shape[0]
+        if window <= 0 or T % window != 0:
+            raise ValueError(
+                f"window must divide the trace length: {T} % {window} != 0"
+            )
+        return cls(window=window, **lanes)
+
+    @classmethod
+    def from_trace(cls, trace: Trace, window: int) -> "TraceStore":
+        """Compress a fully materialized `Trace` (device or host arrays).
+
+        Raises `OverflowError` / `ValueError` when the trace is not
+        losslessly encodable (see `encode_window`).
+        """
+        lanes = encode_window(
+            np.asarray(trace.r), np.asarray(trace.dur),
+            np.asarray(trace.prio), np.asarray(trace.cls),
+            np.asarray(trace.deadline), np.asarray(trace.is_gpu),
+            np.asarray(trace.valid), t0=0,
+        )
+        return cls.from_lanes(lanes, window)
+
+    # -- shape / size ------------------------------------------------------
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.counts.shape[0])
+
+    @property
+    def num_windows(self) -> int:
+        return self.num_steps // self.window
+
+    @property
+    def max_arrivals(self) -> int:
+        return int(self.r.shape[1])
+
+    @property
+    def num_jobs(self) -> int:
+        """Total valid jobs across the whole trace."""
+        return int(self.counts.astype(np.int64).sum())
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes of the compressed lanes."""
+        return sum(
+            getattr(self, f).nbytes
+            for f in ("counts", "r", "dur", "prio", "cls", "slack", "gpu_bits")
+        )
+
+    @property
+    def decoded_nbytes(self) -> int:
+        """Bytes the same trace occupies in the decoded f32/i32 schema."""
+        return self.num_steps * self.max_arrivals * DECODED_BYTES_PER_SLOT
+
+    # -- decode ------------------------------------------------------------
+
+    def window_trace(self, w: int) -> Trace:
+        """Decode window `w` to a host-numpy `Trace` of (window, J) arrays.
+
+        Row i of the window is absolute trace step ``w * window + i``;
+        deadlines come back as absolute step indices (slack + arrival,
+        NO_DEADLINE for the -1 sentinel), invalid slots as zeros — the
+        exact arrays `encode_window` consumed.
+        """
+        if not 0 <= w < self.num_windows:
+            raise IndexError(f"window {w} out of range [0, {self.num_windows})")
+        W, J = self.window, self.max_arrivals
+        sl = slice(w * W, (w + 1) * W)
+        counts = self.counts[sl].astype(np.int64)
+        valid = np.arange(J)[None, :] < counts[:, None]
+        slack = self.slack[sl].astype(np.int64)
+        t_abs = (w * W + np.arange(W, dtype=np.int64))[:, None]
+        deadline = np.where(slack < 0, NO_DEADLINE, t_abs + slack)
+        is_gpu = np.unpackbits(self.gpu_bits[sl], axis=1, count=J).astype(bool)
+        return Trace(
+            r=np.where(valid, self.r[sl], 0.0).astype(np.float32),
+            dur=np.where(valid, self.dur[sl], 0).astype(np.int32),
+            prio=np.where(valid, self.prio[sl], 0).astype(np.int32),
+            cls=np.where(valid, self.cls[sl], 0).astype(np.int32),
+            deadline=np.where(valid, deadline, 0).astype(np.int32),
+            is_gpu=is_gpu & valid,
+            valid=valid,
+        )
+
+    def to_trace(self) -> Trace:
+        """Decode the whole store to one monolithic host `Trace` —
+        convenience for parity tests and short traces; defeats the
+        bounded-memory point for long ones."""
+        windows = [self.window_trace(w) for w in range(self.num_windows)]
+        return jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=0), *windows
+        )
+
+
+# ---------------------------------------------------------------------------
+# Chunked at-scale synthesis
+# ---------------------------------------------------------------------------
+
+
+def synthesize_store(
+    seed: int,
+    dims: EnvDims,
+    params: EnvParams,
+    num_steps: int,
+    window: int,
+    lam: float = 1.0,
+    target_util: float = 0.65,
+    gpu_fraction: float = 1.0 - CPU_FRACTION,
+    cap_per_step: int = NOMINAL_JOBS_PER_STEP,
+    dur_median_steps: float = 6.0,
+    dur_sigma: float = 0.9,
+    r_sigma: float = 0.8,
+    diurnal_amp: float = 0.25,
+    diurnal_shift: float = 0.0,
+    class_mode: int = 0,
+    class_mix=DEFAULT_CLASS_MIX,
+    slack_interactive: float = 2.0,
+    slack_batch: float = 24.0,
+    slack_sigma: float = 0.6,
+    period: Optional[int] = None,
+) -> TraceStore:
+    """Synthesize a multi-day Alibaba-like trace window-by-window into a
+    compressed `TraceStore` — `synthesize_trace` at production scale.
+
+    The arrival process repeats a daily diurnal cycle of `period` steps
+    (default: `window`, so each window is one day), with per-step Poisson
+    counts capped at `cap_per_step` (scaled by `lam`, clipped to
+    `dims.max_arrivals`). Window w draws from its own
+    `np.random.default_rng((seed, w))` stream — generation order never
+    changes a window's content, and host memory during synthesis is one
+    (window, max_arrivals) block. The capacity calibration (demands
+    scaled so the lambda=1 reference hits `target_util`) is computed once
+    from a dedicated reference-day draw and applied to every window, the
+    same estimate-on-reference / apply-everywhere scheme the single-day
+    generator uses.
+
+    `class_mode=1` tags jobs via `draw_classes` with deadlines offset to
+    absolute trace steps; `class_mode=0` leaves the trace untagged.
+    """
+    if num_steps <= 0 or window <= 0 or num_steps % window != 0:
+        raise ValueError(
+            f"window must divide num_steps: {num_steps} % {window} != 0"
+        )
+    if lam < 0:
+        raise ValueError(f"lam must be >= 0, got {lam}")
+    if class_mode not in (0, 1):
+        raise ValueError(f"class_mode must be 0 or 1, got {class_mode}")
+    J = dims.max_arrivals
+    W = num_steps // window  # number of windows
+    period = window if period is None else period
+    base = cap_per_step * 1.05
+    step_cap = min(J, max(1, int(round(cap_per_step * max(lam, 1.0)))))
+
+    # One-shot calibration: a lambda=1, burst-free reference day drawn from
+    # a stream outside the window index range.
+    c_max = np.asarray(params.c_max)
+    gpu_mask = np.asarray(params.is_gpu)
+    cap_cpu = float(c_max[~gpu_mask].sum())
+    cap_gpu = float(c_max[gpu_mask].sum())
+    calib = np.random.default_rng((seed, _CALIB_SALT))
+    diurnal_ref, _ = rate_modulation(period, diurnal_amp, diurnal_shift)
+    ref_counts = np.minimum(
+        calib.poisson(base * diurnal_ref), min(J, cap_per_step)
+    ).astype(np.int32)
+    ref_valid = np.arange(J)[None, :] < ref_counts[:, None]
+    ref_dur = np.clip(
+        calib.lognormal(np.log(dur_median_steps), dur_sigma, (period, J)), 1, 96
+    ).astype(np.int32)
+    ref_r = calib.lognormal(0.0, r_sigma, (period, J)).astype(np.float32)
+    ref_gpu = calib.random((period, J)) < gpu_fraction
+    scale = {}
+    for gpu, cap in ((False, cap_cpu), (True, cap_gpu)):
+        m = ref_valid & (ref_gpu == gpu)
+        rate = float((ref_r[m] * ref_dur[m].astype(np.float64)).sum()) / period
+        scale[gpu] = (target_util * cap / rate) if rate > 0 else 1.0
+    # monster-job clip: fit the smallest matching cluster at half capacity
+    max_cpu = 0.5 * c_max[~gpu_mask].min()
+    max_gpu = 0.5 * c_max[gpu_mask].min()
+
+    lanes: list = []
+    for w in range(W):
+        rng = np.random.default_rng((seed, w))
+        t0 = w * window
+        diurnal, _ = rate_modulation(
+            window, diurnal_amp, diurnal_shift, period=period, t0=t0
+        )
+        counts = np.minimum(
+            rng.poisson(base * diurnal * lam), step_cap
+        ).astype(np.int32)
+        valid = np.arange(J)[None, :] < counts[:, None]
+        dur = np.clip(
+            rng.lognormal(np.log(dur_median_steps), dur_sigma, (window, J)),
+            1, 96,
+        ).astype(np.int32)
+        r_unit = rng.lognormal(0.0, r_sigma, (window, J)).astype(np.float32)
+        is_gpu = rng.random((window, J)) < gpu_fraction
+        prio = rng.integers(1, 4, (window, J)).astype(np.int32)
+        scaled = np.where(
+            is_gpu,
+            np.minimum(r_unit * scale[True], max_gpu),
+            np.minimum(r_unit * scale[False], max_cpu),
+        ).astype(np.float32)
+        if class_mode:
+            cls, deadline = draw_classes(
+                rng, valid, dur, class_mix=class_mix,
+                slack_interactive=slack_interactive,
+                slack_batch=slack_batch, slack_sigma=slack_sigma,
+            )
+            deadline = np.where(
+                valid & (deadline != NO_DEADLINE), deadline + t0, deadline
+            ).astype(np.int32)
+        else:
+            cls, deadline = untagged_classes(valid)
+        lanes.append(encode_window(
+            np.where(valid, scaled, 0.0),
+            np.where(valid, dur, 0),
+            np.where(valid, prio, 0),
+            cls, deadline, valid & is_gpu, valid, t0=t0,
+        ))
+
+    merged = {
+        k: np.concatenate([ln[k] for ln in lanes], axis=0) for k in lanes[0]
+    }
+    return TraceStore.from_lanes(merged, window)
+
+
+def store_from_csv(
+    path: str,
+    dims: EnvDims,
+    params: EnvParams,
+    num_steps: int,
+    window: int,
+    **loader_kw,
+) -> TraceStore:
+    """Compress a real Alibaba `batch_task.csv` slice into a `TraceStore`.
+
+    Runs `load_alibaba_csv` with the horizon widened to `num_steps` (the
+    loader streams the file in bounded chunks) and compresses the result.
+    Extra keyword arguments pass through to the loader (`overflow`,
+    `start_offset_s`, `class_mode`, ...).
+    """
+    trace = load_alibaba_csv(
+        path, dataclasses.replace(dims, horizon=num_steps), params, **loader_kw
+    )
+    return TraceStore.from_trace(trace, window)
+
+
+# ---------------------------------------------------------------------------
+# Trace-source registry (the `Scenario.trace` namespace)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSource:
+    """A named long trace a `Scenario.trace` field can pin (DESIGN.md §20).
+
+    `kind="synthetic"` builds via `synthesize_store(seed, ...)` with
+    `overrides` as generator kwargs; `kind="csv"` compresses the real CSV
+    named by the `csv_env` environment variable via `store_from_csv`
+    (`overrides` become loader kwargs). `num_steps` / `window` fix the
+    trace length and the replay window; the windowed driver requires the
+    consumer's `EnvDims.horizon == window` so the thermal diurnal day and
+    the policies' forecast period match the replay window.
+    """
+
+    name: str
+    description: str
+    kind: str
+    num_steps: int
+    window: int
+    seed: int = 0
+    overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    csv_env: str = "DCGYM_ALIBABA_CSV"
+
+    def build(self, dims: EnvDims, params: EnvParams) -> TraceStore:
+        """Materialize the compressed store for `dims`/`params`."""
+        if self.kind == "synthetic":
+            return synthesize_store(
+                self.seed, dims, params, self.num_steps, self.window,
+                **dict(self.overrides),
+            )
+        if self.kind == "csv":
+            path = os.environ.get(self.csv_env, "")
+            if not path:
+                raise FileNotFoundError(
+                    f"trace source {self.name!r} replays a real CSV: set "
+                    f"${self.csv_env} to the batch_task.csv path"
+                )
+            return store_from_csv(
+                path, dims, params, self.num_steps, self.window,
+                seed=self.seed, **dict(self.overrides),
+            )
+        raise ValueError(f"unknown trace-source kind {self.kind!r}")
+
+
+_SOURCES: Dict[str, TraceSource] = {}
+
+
+def register_source(source: TraceSource, overwrite: bool = False) -> TraceSource:
+    if source.name in _SOURCES and not overwrite:
+        raise ValueError(f"trace source {source.name!r} already registered")
+    _SOURCES[source.name] = source
+    return source
+
+
+def get_source(name: str) -> TraceSource:
+    try:
+        return _SOURCES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown trace source {name!r}; registered: {sorted(_SOURCES)}"
+        ) from None
+
+
+def source_names() -> Tuple[str, ...]:
+    return tuple(_SOURCES)
+
+
+def all_sources() -> Tuple[TraceSource, ...]:
+    return tuple(_SOURCES.values())
+
+
+register_source(TraceSource(
+    name="alibaba_like_20d",
+    description="20 synthesized Alibaba-like days (5760 steps in 288-step "
+                "day windows, ~1.1M class-tagged jobs at the paper's "
+                "200-jobs/step cap) — the production-scale replay workload.",
+    kind="synthetic",
+    num_steps=20 * GRID_STEPS,
+    window=GRID_STEPS,
+    # target_util 0.5 matches the SLO-family scenarios (temporal_arbitrage,
+    # deadline_pressure): at the 0.65 default the deferring planner's
+    # throttled capacity runs persistently behind arrivals and it sheds
+    # ~28% of the trace — the cost contrast would be bought with drops.
+    overrides={"cap_per_step": 200, "class_mode": 1, "target_util": 0.5},
+))
+
+register_source(TraceSource(
+    name="alibaba_like_96",
+    description="CI-sized replay source: 96 synthesized steps in four "
+                "24-step windows, class-tagged, cap 48 jobs/step — "
+                "exercises the full window-carry machinery in seconds.",
+    kind="synthetic",
+    num_steps=96,
+    window=24,
+    overrides={"cap_per_step": 48, "class_mode": 1},
+))
+
+register_source(TraceSource(
+    name="alibaba_csv_day",
+    description="One real Alibaba-2018 day (288 steps, one window) "
+                "compressed from the batch_task.csv named by "
+                "$DCGYM_ALIBABA_CSV — the real-data replay path.",
+    kind="csv",
+    num_steps=GRID_STEPS,
+    window=GRID_STEPS,
+    overrides={"overflow": "drop", "class_mode": 1},
+))
+
+
+# ---------------------------------------------------------------------------
+# Windowed rollout driver
+# ---------------------------------------------------------------------------
+
+#: Backends the replay driver supports. `shard_dc` is excluded: replay
+#: grids are scenario cells, not blocked fleets.
+REPLAY_BATCH_MODES = ("auto", "vmap", "chunked", "shard", "scan")
+
+
+@dataclasses.dataclass
+class _ReplayBackend:
+    """Compiled pieces of one windowed backend: `prepare` pads/reshapes the
+    static per-cell inputs once, `init` builds the stacked carry, `window`
+    advances it through one decoded window (carry donated to XLA), and
+    `gather` undoes `prepare`'s layout on a window's stacked StepInfo."""
+
+    prepare: Any
+    init: Any
+    window: Any
+    gather: Any
+
+
+def _make_backend(dims: EnvDims, policy, n_cells: int, batch_mode: str,
+                  chunk_size: Optional[int] = None) -> _ReplayBackend:
+    from repro.scenarios.suite import _pad_cells, default_chunk_size
+
+    def init_cell(p, r):
+        return init_carry(DataCenterGym(dims, p), policy, r)
+
+    def window_cell(p, t, c):
+        return rollout_window(DataCenterGym(dims, p), policy, t, c)
+
+    ident = lambda ps, rs: (ps, rs)
+
+    if batch_mode == "vmap":
+        return _ReplayBackend(
+            prepare=ident,
+            init=jax.jit(jax.vmap(init_cell)),
+            window=jax.jit(jax.vmap(window_cell, in_axes=(0, None, 0)),
+                           donate_argnums=(2,)),
+            gather=lambda infos: infos,
+        )
+
+    if batch_mode == "scan":
+        return _ReplayBackend(
+            prepare=ident,
+            init=jax.jit(
+                lambda ps, rs: jax.lax.map(lambda a: init_cell(*a), (ps, rs))
+            ),
+            window=jax.jit(
+                lambda ps, t, cs: jax.lax.map(
+                    lambda a: window_cell(a[0], t, a[1]), (ps, cs)
+                ),
+                donate_argnums=(2,),
+            ),
+            gather=lambda infos: infos,
+        )
+
+    if batch_mode == "chunked":
+        chunk = chunk_size or default_chunk_size(dims)
+        chunk = max(1, min(chunk, n_cells))
+        m = -(-n_cells // chunk) * chunk
+
+        def prepare(ps, rs):
+            ps, rs = _pad_cells((ps, rs), m - n_cells)
+            resh = lambda l: l.reshape(m // chunk, chunk, *l.shape[1:])
+            return (jax.tree_util.tree_map(resh, ps),
+                    jax.tree_util.tree_map(resh, rs))
+
+        inner = jax.vmap(window_cell, in_axes=(0, None, 0))
+        return _ReplayBackend(
+            prepare=prepare,
+            init=jax.jit(
+                lambda ps, rs: jax.lax.map(
+                    lambda a: jax.vmap(init_cell)(*a), (ps, rs)
+                )
+            ),
+            window=jax.jit(
+                lambda ps, t, cs: jax.lax.map(
+                    lambda a: inner(a[0], t, a[1]), (ps, cs)
+                ),
+                donate_argnums=(2,),
+            ),
+            gather=lambda infos: jax.tree_util.tree_map(
+                lambda l: l.reshape(m, *l.shape[2:])[:n_cells], infos
+            ),
+        )
+
+    if batch_mode == "shard":
+        from repro.launch.mesh import make_cells_mesh
+
+        mesh = make_cells_mesh()
+        nd = mesh.shape["cells"]
+        m = -(-n_cells // nd) * nd
+
+        return _ReplayBackend(
+            prepare=lambda ps, rs: _pad_cells((ps, rs), m - n_cells),
+            init=jax.jit(shard_map(
+                jax.vmap(init_cell), mesh=mesh,
+                in_specs=(P("cells"), P("cells")), out_specs=P("cells"),
+                check_rep=False,
+            )),
+            # trace replicated (P()) across devices; cells + carry sharded
+            window=jax.jit(
+                shard_map(
+                    lambda ps, t, cs: jax.vmap(
+                        window_cell, in_axes=(0, None, 0)
+                    )(ps, t, cs),
+                    mesh=mesh,
+                    in_specs=(P("cells"), P(), P("cells")),
+                    out_specs=P("cells"),
+                    check_rep=False,
+                ),
+                donate_argnums=(2,),
+            ),
+            gather=lambda infos: jax.tree_util.tree_map(
+                lambda l: l[:n_cells], infos
+            ),
+        )
+
+    raise ValueError(
+        f"batch_mode must be one of {REPLAY_BATCH_MODES}, got {batch_mode!r}"
+    )
+
+
+def replay_rollout(
+    policy,
+    store: TraceStore,
+    params_cells: EnvParams,
+    rngs,
+    dims: EnvDims,
+    batch_mode: str = "vmap",
+    chunk_size: Optional[int] = None,
+    timer=None,
+):
+    """Windowed grid rollout: returns stacked (N, num_steps, ...) StepInfo
+    as host-numpy arrays, bitwise what a monolithic rollout over the
+    whole decoded trace would produce.
+
+    `params_cells` / `rngs` are leading-axis-(N,) stacked pytrees (one
+    per grid cell); the decoded trace windows are shared across cells
+    (broadcast under vmap, replicated across shard devices). Each window
+    iteration donates the carry buffers to XLA and issues the next
+    window's host decode + device transfer while the device computes the
+    current window, so ingestion overlaps compute. Per-window StepInfo is
+    pulled to the host as it completes and concatenated along time —
+    device memory holds one window's infos, never the full trace's.
+
+    `timer` (a `repro.obs.PhaseTimer`) accumulates the host-side decode +
+    transfer wall-clock as ``ingest_s`` and the blocking compute as
+    ``execute_s`` (compile folds into the first window's execute, so
+    ``compile_s`` reports None, as the chunked/shard suite backends do).
+    """
+    n_cells = jax.tree_util.tree_leaves(rngs)[0].shape[0]
+    backend = _make_backend(dims, policy, n_cells, batch_mode, chunk_size)
+    ps, rs = backend.prepare(params_cells, rngs)
+    carry = backend.init(ps, rs)
+
+    ingest = execute = 0.0
+    t0 = time.perf_counter()
+    nxt = jax.device_put(store.window_trace(0))
+    ingest += time.perf_counter() - t0
+
+    chunks = []
+    for w in range(store.num_windows):
+        cur = nxt
+        t0 = time.perf_counter()
+        # async dispatch; the first window folds compile time in here
+        carry, infos = backend.window(ps, cur, carry)
+        execute += time.perf_counter() - t0
+        if w + 1 < store.num_windows:
+            # decode + upload the next window while the device computes
+            t0 = time.perf_counter()
+            nxt = jax.device_put(store.window_trace(w + 1))
+            ingest += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        chunks.append(jax.tree_util.tree_map(
+            np.asarray, backend.gather(infos)  # blocks on this window
+        ))
+        execute += time.perf_counter() - t0
+    if timer is not None:
+        timer.add("ingest_s", ingest)
+        timer.add("execute_s", execute)
+        timer.add("compile_s", None)
+    return jax.tree_util.tree_map(
+        lambda *xs: np.concatenate(xs, axis=1), *chunks
+    )
+
+
+def evaluate_replay_infos(
+    policies,
+    scenarios,
+    seeds: int = 2,
+    dims: Optional[EnvDims] = None,
+    base_params: Optional[EnvParams] = None,
+    batch_mode: str = "auto",
+    chunk_size: Optional[int] = None,
+    memory_budget: Optional[int] = None,
+    timer=None,
+):
+    """Replay-grid analogue of `repro.scenarios.suite.evaluate_infos`.
+
+    Every scenario must pin the *same* registered trace source
+    (`Scenario.trace`): the grid shares one compressed store, while
+    scenario perturbations and per-seed grid/fault attachments vary per
+    cell exactly as in the synthetic suite. Returns
+    ``(infos_by_policy, scenario_names, resolved_batch_mode, meta)``
+    where each StepInfo leaf has shape (S*K, num_steps, ...) ordered
+    scenario-major, and `meta` records the source name, job count,
+    window shape, and compressed/decoded byte sizes. The `telemetry`
+    capture path is not supported on replay grids.
+
+    Requires ``dims.horizon == source.window`` (the horizon sets the
+    thermal diurnal day and the H-MPC forecast period; replay keeps both
+    aligned with the window so multi-day episodes see a daily cycle).
+    """
+    from repro.core.policies import make_policy
+    from repro.scenarios import registry as scen_registry
+    from repro.scenarios.suite import DEFAULT_MEMORY_BUDGET, select_batch_mode
+
+    dims = dims or EnvDims()
+    scens = tuple(
+        scen_registry.get(s) if isinstance(s, str) else s for s in scenarios
+    )
+    src_names = {s.trace for s in scens}
+    if None in src_names or len(src_names) != 1:
+        raise ValueError(
+            "replay grids need every scenario to pin the same trace source; "
+            f"got {sorted(str(n) for n in src_names)}"
+        )
+    source = get_source(src_names.pop())
+    if dims.horizon != source.window:
+        raise ValueError(
+            f"dims.horizon ({dims.horizon}) must equal the source window "
+            f"({source.window}): the horizon is the thermal diurnal period "
+            "and the planner forecast span, which replay keeps aligned with "
+            "the window"
+        )
+
+    base = make_params() if base_params is None else base_params
+    params_cells, rng_cells = [], []
+    first_params = None
+    for scen in scens:
+        scen_params = scen.build_params(base)
+        first_params = scen_params if first_params is None else first_params
+        for k in range(seeds):
+            cell_params = scen.attach_faults(scen.attach_grid(scen_params, k), k)
+            params_cells.append(cell_params)
+            rng_cells.append(jax.random.PRNGKey(k))
+    stacked_ps = stack_params(params_cells)
+    rngs = jnp.stack(rng_cells)
+    n_cells = len(scens) * seeds
+
+    t0 = time.perf_counter()
+    store = source.build(dims, first_params)
+    if timer is not None:
+        timer.add("ingest_s", time.perf_counter() - t0)
+
+    if batch_mode == "auto":
+        budget = DEFAULT_MEMORY_BUDGET if memory_budget is None else memory_budget
+        batch_mode = select_batch_mode(n_cells, dims, memory_budget=budget)
+    if batch_mode not in ("vmap", "chunked", "shard", "scan"):
+        raise ValueError(
+            f"batch_mode must be one of {REPLAY_BATCH_MODES}, got {batch_mode!r}"
+        )
+
+    out: Dict[str, object] = {}
+    for p in policies:
+        pol = make_policy(p, dims) if isinstance(p, str) else p
+        out[pol.name] = replay_rollout(
+            pol, store, stacked_ps, rngs, dims,
+            batch_mode=batch_mode, chunk_size=chunk_size, timer=timer,
+        )
+    meta = {
+        "source": source.name,
+        "num_steps": store.num_steps,
+        "window": store.window,
+        "num_windows": store.num_windows,
+        "num_jobs": store.num_jobs,
+        "store_bytes": store.nbytes,
+        "decoded_bytes": store.decoded_nbytes,
+    }
+    return out, tuple(s.name for s in scens), batch_mode, meta

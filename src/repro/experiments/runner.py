@@ -82,11 +82,14 @@ class ExperimentResult:
     frames: Optional[Dict[str, object]] = None
     #: EnvDims of the executed tier (dataclass, for the manifest hash)
     tier_dims: Optional[object] = None
+    #: replay tiers only: trace-source provenance + per-day-of-trace
+    #: metric rows (DESIGN.md §20); None on synthetic tiers
+    replay_block: Optional[Dict[str, object]] = None
 
     # -- serialization -----------------------------------------------------
 
     def to_dict(self) -> Dict:
-        return {
+        out = {
             "schema": SCHEMA,
             "experiment": self.experiment,
             "tier": self.tier,
@@ -99,6 +102,11 @@ class ExperimentResult:
             "table": self.table,
             "runtime": dict(self.runtime),
         }
+        if self.replay_block is not None:
+            # extra top-level key: golden comparison gates only on
+            # policies/scenarios/table, so replay provenance rides along
+            out["replay"] = self.replay_block
+        return out
 
     def mean(self, policy: str, scenario: str, metric: str) -> float:
         return self.table[policy][scenario][metric]["mean"]
@@ -136,12 +144,63 @@ class ExperimentResult:
                      for p in self.policies]
             lines.append(f"| {scen} | " + " | ".join(cells) + " |")
         lines.append("")
+        if self.replay_block is not None:
+            rb = self.replay_block
+            lines.append("## replay: per day-of-trace")
+            lines.append("")
+            lines.append(
+                f"Source `{rb['source']}`: {rb['num_jobs']:,} jobs over "
+                f"{rb['num_windows']} windows of {rb['window']} steps "
+                f"({rb['num_steps']} total)."
+            )
+            lines.append("")
+            cols = ("cost_usd", "slo_interactive_pct", "slo_batch_pct",
+                    "completed_jobs", "dropped_jobs")
+            for pol in self.policies:
+                rows = rb["per_day"][pol]
+                lines.append(f"### policy: {pol}")
+                lines.append("")
+                lines.append("| day | " + " | ".join(cols) + " |")
+                lines.append("|---" * (len(cols) + 1) + "|")
+                for row in rows:
+                    cells = [f"{row[c]:,.2f}" for c in cols]
+                    lines.append(f"| {row['day']} | " + " | ".join(cells) + " |")
+                lines.append("")
         return "\n".join(lines)
 
 
 def _episode_slice(infos, idx: int):
     """Cell `idx` of a stacked (N, T, ...) StepInfo as a (T, ...) StepInfo."""
     return jax.tree_util.tree_map(lambda leaf: leaf[idx], infos)
+
+
+#: Per-day-of-trace metrics reported by replay tiers (DESIGN.md §20).
+REPLAY_DAY_METRICS = (
+    "cost_usd", "slo_interactive_pct", "slo_batch_pct",
+    "completed_jobs", "dropped_jobs",
+)
+
+
+def _per_day_table(infos_by_policy, window: int, num_windows: int):
+    """`{policy: [{day, cost_usd, ...}, ...]}` — `REPLAY_DAY_METRICS`
+    summarized per trace window (day), averaged over grid cells in host
+    float64, same determinism contract as the main table."""
+    out = {}
+    for pol, infos in infos_by_policy.items():
+        n_cells = jax.tree_util.tree_leaves(infos)[0].shape[0]
+        rows = []
+        for d in range(num_windows):
+            day = jax.tree_util.tree_map(
+                lambda leaf: leaf[:, d * window:(d + 1) * window], infos
+            )
+            vals = [metrics.summarize_np(_episode_slice(day, i))
+                    for i in range(n_cells)]
+            row: Dict[str, object] = {"day": d}
+            for m in REPLAY_DAY_METRICS:
+                row[m] = float(sum(v[m] for v in vals) / n_cells)
+            rows.append(row)
+        out[pol] = rows
+    return out
 
 
 def run_experiment(
@@ -166,18 +225,46 @@ def run_experiment(
     """
     tier = spec.tier(smoke)
     scens = resolve_scenarios(tier)
+    is_replay = any(s.trace is not None for s in scens)
+    if is_replay and not all(s.trace is not None for s in scens):
+        raise ValueError(
+            f"experiment {spec.name!r} mixes replay and synthetic "
+            "scenarios in one tier; split them into separate experiments"
+        )
+    if is_replay and telemetry is not None:
+        raise ValueError(
+            "telemetry capture is not supported on replay tiers: the "
+            "frame buffer would grow with the trace length, defeating the "
+            "bounded-memory contract (DESIGN.md §20)"
+        )
     timer = PhaseTimer()
+    replay_meta = None
     t0 = time.time()
     with maybe_profile(profile_dir):
-        infos_by_policy, scen_names, resolved_mode = evaluate_infos(
-            tier.policies,
-            scenarios=scens,
-            seeds=tier.seeds,
-            dims=tier.dims,
-            batch_mode=batch_mode,
-            chunk_size=chunk_size,
-            timer=timer,
-        )
+        if is_replay:
+            from repro.data.replay import evaluate_replay_infos
+
+            infos_by_policy, scen_names, resolved_mode, replay_meta = (
+                evaluate_replay_infos(
+                    tier.policies,
+                    scenarios=scens,
+                    seeds=tier.seeds,
+                    dims=tier.dims,
+                    batch_mode=batch_mode,
+                    chunk_size=chunk_size,
+                    timer=timer,
+                )
+            )
+        else:
+            infos_by_policy, scen_names, resolved_mode = evaluate_infos(
+                tier.policies,
+                scenarios=scens,
+                seeds=tier.seeds,
+                dims=tier.dims,
+                batch_mode=batch_mode,
+                chunk_size=chunk_size,
+                timer=timer,
+            )
     wall = time.time() - t0
 
     with timer.phase("summarize_s"):
@@ -200,6 +287,17 @@ def run_experiment(
                     }
                     for m in ARTIFACT_METRICS
                 }
+
+    replay_block = None
+    if replay_meta is not None:
+        with timer.phase("summarize_s"):
+            replay_block = {
+                **replay_meta,
+                "per_day": _per_day_table(
+                    infos_by_policy, replay_meta["window"],
+                    replay_meta["num_windows"],
+                ),
+            }
 
     telemetry_block: Dict[str, object] = {"enabled": False}
     frames = None
@@ -264,6 +362,7 @@ def run_experiment(
         ),
         frames=frames,
         tier_dims=tier.dims,
+        replay_block=replay_block,
     )
 
 

@@ -37,10 +37,14 @@ def names() -> Tuple[str, ...]:
 
     Scenarios pinned to a non-default plant (`Scenario.plant`, e.g. the
     128-DC `fleet_128`) are excluded: their param shapes cannot stack
-    into the same batched grid. Use `all_names()` for the full catalogue
-    or `get(name)` to fetch any scenario directly.
+    into the same batched grid. Scenarios pinned to a long trace source
+    (`Scenario.trace`) are excluded too: they need the windowed replay
+    runner, not the whole-trace suite. Use `all_names()` for the full
+    catalogue or `get(name)` to fetch any scenario directly.
     """
-    return tuple(n for n, s in _REGISTRY.items() if s.plant is None)
+    return tuple(
+        n for n, s in _REGISTRY.items() if s.plant is None and s.trace is None
+    )
 
 
 def all_names() -> Tuple[str, ...]:
@@ -49,8 +53,10 @@ def all_names() -> Tuple[str, ...]:
 
 
 def all_scenarios() -> Tuple[Scenario, ...]:
-    """Default-plant scenarios only (see `names`)."""
-    return tuple(s for s in _REGISTRY.values() if s.plant is None)
+    """Default-plant, non-replay scenarios only (see `names`)."""
+    return tuple(
+        s for s in _REGISTRY.values() if s.plant is None and s.trace is None
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -263,6 +269,31 @@ register(Scenario(
     faults=FaultParams(arrival="poisson", rate=0.01, heat_coupling=3.0,
                        duration=18, cool_eff=(0.5, 0.5, 0.5, 0.5),
                        cap_eff=(0.7, 0.7, 0.7, 0.7)),
+))
+
+# ---------------------------------------------------------------------------
+# Trace-replay scenarios (DESIGN.md §20): the scenario pins a registered
+# long-trace source and runs through the windowed streaming driver
+# (`repro.data.replay`) instead of synthesizing a per-seed episode. Per-cell
+# randomness comes from the env RNG only; the production trace is fixed.
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    name="trace_replay",
+    description="Production-scale replay: 20 synthesized Alibaba-like days "
+                "(~1.1M class-tagged jobs) streamed through day-sized "
+                "windows on the Table-I plant; the at-scale cost/SLO "
+                "regime per day-of-trace.",
+    trace="alibaba_like_20d",
+))
+
+register(Scenario(
+    name="trace_replay_smoke",
+    description="CI-sized replay: the 96-step alibaba_like_96 source in "
+                "four 24-step windows; exercises the full streaming "
+                "machinery (compressed lanes, carry threading, prefetch) "
+                "in seconds.",
+    trace="alibaba_like_96",
 ))
 
 register(Scenario(

@@ -50,6 +50,15 @@ class Scenario:
     default). Scenarios with a non-default plant are excluded from
     `registry.names()` / `registry.all_scenarios()` so grid-wide
     consumers never stack mixed-shape cells; fetch them by name.
+
+    `trace` optionally names a registered long-trace source (DESIGN.md
+    §20): when set, the scenario replays that compressed multi-day
+    `TraceStore` through the windowed driver instead of synthesizing a
+    per-seed episode, and `trace_overrides` are ignored (the source owns
+    its generator configuration). Replay scenarios need the streaming
+    runner (`repro.data.replay.evaluate_replay_infos`), so — like
+    `plant` — they are excluded from `registry.names()` /
+    `registry.all_scenarios()`; fetch them by name.
     """
 
     name: str
@@ -61,6 +70,7 @@ class Scenario:
     grid: Optional[GridParams] = None
     faults: Optional[FaultParams] = None
     plant: Optional[str] = None
+    trace: Optional[str] = None
 
     def build_params(self, base: EnvParams | None = None) -> EnvParams:
         """Perturbed plant parameters (bounds enforced by `perturb`)."""
@@ -109,3 +119,19 @@ class Scenario:
     def build_trace(self, seed: int, dims: EnvDims, params: EnvParams) -> Trace:
         """Seeded workload trace under this scenario's arrival process."""
         return synthesize_trace(seed, dims, params, **dict(self.trace_overrides))
+
+    def build_store(self, dims: EnvDims, params: EnvParams):
+        """Compressed `TraceStore` of this scenario's pinned trace source.
+
+        Only valid on replay scenarios (`trace` set); the store is shared
+        across seeds — per-cell variation comes from env/grid/fault RNG,
+        the production trace itself is fixed, as in trace-replay studies.
+        """
+        if self.trace is None:
+            raise ValueError(
+                f"scenario {self.name!r} pins no trace source; use "
+                "build_trace for synthetic per-seed episodes"
+            )
+        from repro.data import replay
+
+        return replay.get_source(self.trace).build(dims, params)

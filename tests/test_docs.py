@@ -279,6 +279,34 @@ def test_guide_documents_telemetry_catalogue():
         assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor}"
 
 
+def test_guide_documents_trace_source_catalogue():
+    """The SIMULATOR_GUIDE's "Trace replay & streaming ingestion" chapter
+    must catalogue every registered trace source in
+    `repro.data.replay.source_names()` (backticked) and every compressed
+    lane field, plus the windowed-driver machinery — a new source or lane
+    cannot land without its table row."""
+    from repro.data import replay
+
+    text = _read("SIMULATOR_GUIDE.md")
+    assert "## Trace replay & streaming ingestion" in text, (
+        "SIMULATOR_GUIDE.md must have a 'Trace replay & streaming "
+        "ingestion' chapter"
+    )
+    undocumented = [n for n in replay.source_names() if f"`{n}`" not in text]
+    assert not undocumented, (
+        f"SIMULATOR_GUIDE.md trace-source catalogue is missing: "
+        f"{undocumented}"
+    )
+    lanes = ("counts", "dur", "prio", "cls", "slack", "gpu_bits")
+    missing = [l for l in lanes if f"`{l}`" not in text]
+    assert not missing, (
+        f"SIMULATOR_GUIDE.md compressed-lane table is missing: {missing}"
+    )
+    for anchor in ("`TraceStore`", "`replay_rollout`", "`synthesize_store`",
+                   "`BENCH_replay.json`", "`dims.horizon`"):
+        assert anchor in text, f"SIMULATOR_GUIDE.md must document {anchor}"
+
+
 def test_guide_maps_experiments_to_paper_artifacts():
     """The SIMULATOR_GUIDE's experiment chapter must name the paper
     table/figure each spec reproduces."""

@@ -1,0 +1,257 @@
+"""Streaming trace-replay tests (DESIGN.md §20): compressed-lane
+round-trip (bitwise in range, loud errors on overflow), windowed-vs-
+monolithic rollout parity across backends on a 288-step trace, and the
+replay grid runner's integration contracts (shared source, horizon ==
+window, per-day artifact block). The 8-device shard parity case runs in
+a subprocess like tests/test_multidevice.py so this process keeps one
+CPU device."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.env import DataCenterGym, rollout
+from repro.core.params import EnvDims, make_params, stack_params
+from repro.core.policies import make_policy
+from repro.core.state import NO_DEADLINE
+from repro.data import replay
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Small caps keep compile fast; horizon 288 is the parity contract's
+# trace length (a full day of 5-minute steps).
+DIMS = EnvDims(horizon=288, max_arrivals=32, queue_cap=128, run_cap=128,
+               pending_cap=64, admit_depth=32, policy_depth=64)
+PARAMS = make_params()
+
+
+def _store(class_mode=0, num_steps=288, window=72, max_arrivals=32):
+    dims = dataclasses.replace(DIMS, max_arrivals=max_arrivals)
+    return replay.synthesize_store(
+        0, dims, PARAMS, num_steps=num_steps, window=window,
+        cap_per_step=16, class_mode=class_mode,
+    )
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+# ---------------------------------------------------------------- lanes
+
+
+@pytest.mark.parametrize("class_mode", [0, 1])
+def test_roundtrip_bitwise(class_mode):
+    """decode(encode(trace)) is bitwise the original for in-range traces,
+    tagged (absolute deadlines, NO_DEADLINE sentinels) and untagged."""
+    store = _store(class_mode=class_mode)
+    trace = store.to_trace()
+    again = replay.TraceStore.from_trace(trace, store.window)
+    assert _trees_equal(trace, again.to_trace())
+    # the compressed layout must actually compress
+    assert store.decoded_nbytes / store.nbytes > 1.5
+
+
+def test_roundtrip_preserves_deadline_sentinel():
+    tr = _store(class_mode=1).to_trace()
+    has_sentinel = (tr.deadline == NO_DEADLINE) & tr.valid
+    assert has_sentinel.any(), "tagged trace should have best-effort jobs"
+    back = replay.TraceStore.from_trace(tr, 72).to_trace()
+    assert np.array_equal(tr.deadline, back.deadline)
+
+
+def test_encode_overflow_errors():
+    tr = _store(class_mode=1).to_trace()
+    big_dur = dataclasses.replace(
+        tr, dur=np.where(tr.valid, tr.dur + 40000, 0).astype(np.int32))
+    with pytest.raises(OverflowError, match="dur"):
+        replay.TraceStore.from_trace(big_dur, 72)
+    far = dataclasses.replace(
+        tr,
+        deadline=np.where(
+            tr.valid & (tr.deadline != NO_DEADLINE), tr.deadline + 40000,
+            tr.deadline).astype(np.int32),
+    )
+    with pytest.raises(OverflowError, match="slack"):
+        replay.TraceStore.from_trace(far, 72)
+
+
+def test_encode_rejects_lossy_traces():
+    tr = _store().to_trace()
+    holes = tr.valid.copy()
+    holes[0, 0] = False  # non-prefix: slot 1+ still valid
+    assert holes[0, 1], "need a valid slot after the hole"
+    with pytest.raises(ValueError, match="prefix"):
+        replay.TraceStore.from_trace(dataclasses.replace(tr, valid=holes), 72)
+    dirty = tr.dur.copy()
+    dirty[~tr.valid] = 7
+    with pytest.raises(ValueError, match="invalid slots"):
+        replay.TraceStore.from_trace(dataclasses.replace(tr, dur=dirty), 72)
+
+
+def test_window_must_divide_trace():
+    with pytest.raises(ValueError, match="divide"):
+        _store(window=100)
+    tr = _store().to_trace()
+    with pytest.raises(ValueError, match="divide"):
+        replay.TraceStore.from_trace(tr, 100)
+
+
+def test_synthesize_store_windows_are_seed_stable():
+    """Window w depends only on (seed, w): a shorter synthesis of the
+    same source is bitwise a prefix of the longer one."""
+    long = _store(num_steps=288, window=72)
+    short = _store(num_steps=144, window=72)
+    prefix = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate(xs, axis=0),
+        *[long.window_trace(w) for w in range(2)]
+    )
+    assert _trees_equal(short.to_trace(), prefix)
+
+
+# --------------------------------------------------- windowed parity
+
+
+def _monolithic(pol, trace, n_cells):
+    dev_trace = jax.tree_util.tree_map(jnp.asarray, trace)
+    ps = stack_params([PARAMS] * n_cells)
+    rngs = jnp.stack([jax.random.PRNGKey(k) for k in range(n_cells)])
+    infos = jax.jit(jax.vmap(
+        lambda p, r: rollout(DataCenterGym(DIMS, p), pol, dev_trace, r)[1]
+    ))(ps, rngs)
+    return jax.tree_util.tree_map(np.asarray, infos), ps, rngs
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("vmap", {}),
+    ("chunked", {"chunk_size": 2}),
+    ("scan", {}),
+])
+def test_windowed_matches_monolithic(mode, kw):
+    """The windowed composition (4 x 72-step windows, carry threaded,
+    buffers donated) is bitwise one monolithic 288-step rollout."""
+    store = _store()
+    pol = make_policy("greedy", DIMS)
+    want, ps, rngs = _monolithic(pol, store.to_trace(), n_cells=3)
+    got = replay.replay_rollout(pol, store, ps, rngs, DIMS,
+                                batch_mode=mode, **kw)
+    assert _trees_equal(want, got)
+
+
+def test_windowed_matches_monolithic_tagged_vmap():
+    """Same parity on a class-tagged trace (absolute deadlines crossing
+    window boundaries) — vmap only, since tagged threshold decisions are
+    only bitwise within one backend (see runner module docstring)."""
+    store = _store(class_mode=1)
+    pol = make_policy("greedy", DIMS)
+    want, ps, rngs = _monolithic(pol, store.to_trace(), n_cells=2)
+    got = replay.replay_rollout(pol, store, ps, rngs, DIMS, batch_mode="vmap")
+    assert _trees_equal(want, got)
+
+
+def test_windowed_matches_monolithic_shard_8dev():
+    """Shard-backend parity on 8 forced host devices, in a subprocess so
+    this process keeps a single CPU device."""
+    script = """
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.core.env import DataCenterGym, rollout
+from repro.core.params import EnvDims, make_params, stack_params
+from repro.core.policies import make_policy
+from repro.data import replay
+
+dims = EnvDims(horizon=288, max_arrivals=32, queue_cap=128, run_cap=128,
+               pending_cap=64, admit_depth=32, policy_depth=64)
+params = make_params()
+store = replay.synthesize_store(0, dims, params, num_steps=288, window=72,
+                                cap_per_step=16, class_mode=0)
+pol = make_policy("greedy", dims)
+n = 3  # not a multiple of 8: exercises shard padding
+ps = stack_params([params] * n)
+rngs = jnp.stack([jax.random.PRNGKey(k) for k in range(n)])
+trace = jax.tree_util.tree_map(jnp.asarray, store.to_trace())
+want = jax.jit(jax.vmap(
+    lambda p, r: rollout(DataCenterGym(dims, p), pol, trace, r)[1]
+))(ps, rngs)
+want = jax.tree_util.tree_map(np.asarray, want)
+got = replay.replay_rollout(pol, store, ps, rngs, dims, batch_mode="shard")
+la, lb = jax.tree_util.tree_leaves(want), jax.tree_util.tree_leaves(got)
+assert all(np.array_equal(a, b) for a, b in zip(la, lb))
+print("SHARD-PARITY-OK", len(jax.devices()))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARD-PARITY-OK 8" in out.stdout
+
+
+# ------------------------------------------------------- integration
+
+
+def test_evaluate_replay_infos_smoke():
+    dims = EnvDims(horizon=24, max_arrivals=64, queue_cap=128, run_cap=128,
+                   pending_cap=64, admit_depth=64, policy_depth=128)
+    infos, scens, mode, meta = replay.evaluate_replay_infos(
+        ["greedy"], scenarios=["trace_replay_smoke"], seeds=2, dims=dims,
+    )
+    assert scens == ("trace_replay_smoke",)
+    assert meta["source"] == "alibaba_like_96"
+    assert meta["num_jobs"] > 0 and meta["num_windows"] == 4
+    leaf = jax.tree_util.tree_leaves(infos["greedy"])[0]
+    assert leaf.shape[:2] == (2, 96)
+
+
+def test_evaluate_replay_infos_contracts():
+    dims = EnvDims(horizon=24, max_arrivals=64, queue_cap=128, run_cap=128,
+                   pending_cap=64, admit_depth=64, policy_depth=128)
+    with pytest.raises(ValueError, match="same trace source"):
+        replay.evaluate_replay_infos(
+            ["greedy"], scenarios=["trace_replay_smoke", "nominal"],
+            seeds=1, dims=dims,
+        )
+    with pytest.raises(ValueError, match="horizon"):
+        replay.evaluate_replay_infos(
+            ["greedy"], scenarios=["trace_replay_smoke"], seeds=1,
+            dims=dataclasses.replace(dims, horizon=48),
+        )
+
+
+def test_build_store_requires_trace_scenario():
+    from repro.scenarios import registry as scen_registry
+
+    nominal = scen_registry.get("nominal")
+    with pytest.raises(ValueError, match="pins no trace source"):
+        nominal.build_store(DIMS, PARAMS)
+    smoke = scen_registry.get("trace_replay_smoke")
+    dims = dataclasses.replace(DIMS, horizon=24, max_arrivals=64)
+    store = smoke.build_store(dims, PARAMS)
+    assert store.window == 24 and store.num_windows == 4
+
+
+def test_replay_scenarios_excluded_from_suite_grid():
+    from repro.scenarios import registry as scen_registry
+
+    assert "trace_replay" not in scen_registry.names()
+    assert "trace_replay" in scen_registry.all_names()
+    assert all(s.trace is None for s in scen_registry.all_scenarios())
+
+
+def test_source_registry():
+    assert set(replay.source_names()) >= {
+        "alibaba_like_20d", "alibaba_like_96", "alibaba_csv_day"}
+    with pytest.raises(KeyError, match="unknown trace source"):
+        replay.get_source("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        replay.register_source(replay.get_source("alibaba_like_96"))
